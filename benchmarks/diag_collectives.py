@@ -1,0 +1,63 @@
+"""Diagnostic: per-shape collective inventory of one (arch x shape) probe —
+aggregates every collective op in the L=1 unrolled HLO by (kind, shape) so a
+hillclimb iteration can see exactly *which* tensor dominates the collective
+term rather than guessing.
+
+    PYTHONPATH=src python -m benchmarks.diag_collectives qwen3-moe-30b-a3b train_4k [overrides]
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import sys
+
+from repro.launch.dryrun import _build_lowered  # sets XLA_FLAGS on import
+from repro.configs import for_shape, get_config
+from repro.core.strategy import StrategyConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import _DTYPE_BYTES, _SHAPE_RE
+from repro.models.config import INPUT_SHAPES
+from repro.optim import sgd
+
+_OP = re.compile(r"%(\S+?)\.?\d* = (\S+) (all-gather|all-reduce|reduce-scatter"
+                 r"|all-to-all|collective-permute)\(")
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    overrides = {}
+    for kv in sys.argv[3:]:
+        k, v = kv.split("=")
+        overrides[k] = eval(v)  # noqa: S307 — operator tool
+    shape = INPUT_SHAPES[shape_name]
+    cfg = for_shape(get_config(arch), shape)
+    cfg = dataclasses.replace(cfg, n_layers=1, scan_layers=False, **overrides)
+    mesh = make_production_mesh()
+    strategy = StrategyConfig(kind="laq", bits=4, per_leaf_radius=True)
+    lowered = _build_lowered(cfg, shape, mesh, strategy, sgd(), "float",
+                             False, False)
+    hlo = lowered.compile().as_text()
+
+    totals = {}
+    for m in _OP.finditer(hlo):
+        shape_str, kind = m.group(2), m.group(3)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shape_str):
+            if dt in _DTYPE_BYTES:
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+        key = (kind, shape_str.split("{")[0])
+        c, b = totals.get(key, (0, 0))
+        totals[key] = (c + 1, b + nbytes)
+
+    print(f"# {arch} x {shape_name} L=1 unrolled, overrides={overrides}")
+    for (kind, shp), (count, nbytes) in sorted(totals.items(),
+                                               key=lambda kv: -kv[1][1])[:25]:
+        print(f"{nbytes/2**20:10.1f} MiB  x{count:3d}  {kind:20s} {shp}")
+
+
+if __name__ == "__main__":
+    main()

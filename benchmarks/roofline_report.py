@@ -1,0 +1,67 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        benchmarks/results/dryrun_single_pod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_t(sec: float) -> str:
+    if sec >= 1.0:
+        return f"{sec:.2f}s"
+    if sec >= 1e-3:
+        return f"{sec*1e3:.1f}ms"
+    return f"{sec*1e6:.0f}us"
+
+
+def render(records, *, title="Roofline (single-pod 16x16, v5e constants)"):
+    lines = [f"### {title}", ""]
+    lines.append("| arch | shape | t_compute | t_memory | t_collective | "
+                 "bottleneck | useful FLOPs | dominant collective |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                         f"{r.get('error','?')[:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        cb = rf.get("coll_breakdown", {})
+        dom = max(cb, key=cb.get) if cb and max(cb.values()) > 0 else "-"
+        dom_s = f"{dom} ({cb[dom]/1e6:.0f} MB)" if dom != "-" else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(rf['t_compute'])} | "
+            f"{fmt_t(rf['t_memory'])} | {fmt_t(rf['t_collective'])} | "
+            f"**{rf['bottleneck']}** | {rf['useful_flops_ratio']:.2f} | {dom_s} |")
+    return "\n".join(lines)
+
+
+def render_memory(records):
+    lines = ["### Dry-run memory analysis (bytes per device)", ""]
+    lines.append("| arch | shape | arguments | outputs | temp | compile s |")
+    lines.append("|---|---|---|---|---|---|")
+    for r in records:
+        if not r.get("ok"):
+            continue
+        m = r.get("memory", {})
+        g = lambda k: f"{m.get(k, 0)/2**30:.2f} GiB" if m else "n/a"
+        lines.append(f"| {r['arch']} | {r['shape']} | "
+                     f"{g('argument_size_in_bytes')} | {g('output_size_in_bytes')} | "
+                     f"{g('temp_size_in_bytes')} | {r.get('compile_s','?')} |")
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "benchmarks/results/dryrun_single_pod.json"
+    with open(path) as f:
+        records = json.load(f)
+    print(render(records))
+    print()
+    print(render_memory(records))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (for table rows ``us_per_call`` holds
+the headline numeric, usually total wire bits) and writes the full structured
+results + claim checks to benchmarks/results/paper_repro.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    out_rows, results = [], {}
+    all_checks = {}
+
+    from . import bits_sweep, convergence, table2_gradient, table3_stochastic
+    for name, mod in (("table2", table2_gradient), ("table3", table3_stochastic),
+                      ("convergence", convergence), ("bits_sweep", bits_sweep)):
+        t = time.time()
+        checks = mod.run(out_rows, results)
+        all_checks.update({f"{name}: {k}": v for k, v in checks.items()})
+        print(f"# {name} done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, val, derived in out_rows:
+        print(f"{name},{val},{derived}")
+
+    os.makedirs(os.path.join(os.path.dirname(__file__), "results"), exist_ok=True)
+    path = os.path.join(os.path.dirname(__file__), "results", "paper_repro.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+
+    print("\n# paper-claim validation", file=sys.stderr)
+    failed = 0
+    for k, v in all_checks.items():
+        print(f"#  [{'PASS' if v else 'FAIL'}] {k}", file=sys.stderr)
+        failed += (not v)
+    print(f"# {len(all_checks)-failed}/{len(all_checks)} claims hold "
+          f"({time.time()-t0:.1f}s total) -> {path}", file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Full method comparison (gradient + stochastic families) with CSV export —
+the paper's Figures 4/7 as data.
+
+    PYTHONPATH=src python examples/laq_vs_baselines.py --out /tmp/laq_curves.csv
+"""
+import argparse
+import csv
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CriterionConfig, StrategyConfig, run_gradient_based,
+                        run_stochastic)
+from repro.data import classification_dataset, split_workers
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="laq_curves.csv")
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+
+    X, Y = classification_dataset(jax.random.PRNGKey(0), n_per_class=60)
+    workers = split_workers(X, Y, 10)
+    N = X.shape[0]
+
+    def loss_fn(params, data):
+        x, y = data
+        logits = x @ params["w"].T
+        ce = -jnp.sum(y * jax.nn.log_softmax(logits, -1))
+        return (ce + 0.5 * 0.01 * jnp.sum(params["w"] ** 2)) / N
+
+    p0 = {"w": jnp.zeros((10, 784))}
+    crit = CriterionConfig(D=10, xi=0.8 / 10, t_bar=100)
+
+    rows = [("family", "method", "iteration", "loss", "rounds", "bits")]
+    for kind in ("gd", "qgd", "lag", "laq"):
+        r = run_gradient_based(loss_fn, p0, workers,
+                               StrategyConfig(kind=kind, bits=4, criterion=crit),
+                               steps=args.steps, alpha=2.0)
+        for i in range(0, args.steps, 5):
+            rows.append(("gradient", kind, i, float(r.loss[i]),
+                         int(r.cum_uploads[i]), float(r.cum_bits[i])))
+        print(f"[gradient]   {kind:5s} loss={float(r.loss[-1]):.6f} "
+              f"rounds={int(r.cum_uploads[-1]):6d} bits={float(r.cum_bits[-1]):.3e}")
+    for kind in ("sgd", "qsgd", "ssgd", "slaq"):
+        r = run_stochastic(loss_fn, p0, workers, kind, steps=args.steps,
+                           alpha=0.5, batch=30, bits=3, density=0.1,
+                           laq_cfg=StrategyConfig(kind="laq", bits=3,
+                                                  criterion=crit))
+        for i in range(0, args.steps, 5):
+            rows.append(("stochastic", kind, i, float(r.loss[i]),
+                         int(r.cum_uploads[i]), float(r.cum_bits[i])))
+        print(f"[stochastic] {kind:5s} loss={float(r.loss[-1]):.6f} "
+              f"rounds={int(r.cum_uploads[-1]):6d} bits={float(r.cum_bits[-1]):.3e}")
+
+    with open(args.out, "w", newline="") as f:
+        csv.writer(f).writerows(rows)
+    print(f"curves -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: LAQ vs GD/QGD/LAG on the paper's logistic-regression setting.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's headline result in ~a minute on CPU: LAQ reaches the
+same accuracy as GD with ~100x fewer communication rounds and ~1000x fewer
+transmitted bits (Table 2 of the paper).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CriterionConfig, StrategyConfig, run_gradient_based
+from repro.data import classification_dataset, split_workers
+
+M = 10                                   # workers, as in the paper
+
+
+def main():
+    X, Y = classification_dataset(jax.random.PRNGKey(0), n_per_class=60)
+    workers = split_workers(X, Y, M)
+    N = X.shape[0]
+
+    def loss_fn(params, data):
+        x, y = data
+        logits = x @ params["w"].T
+        ce = -jnp.sum(y * jax.nn.log_softmax(logits, -1))
+        return (ce + 0.5 * 0.01 * jnp.sum(params["w"] ** 2)) / N
+
+    params0 = {"w": jnp.zeros((10, 784))}
+    crit = CriterionConfig(D=10, xi=0.8 / 10, t_bar=100)
+
+    print(f"{'method':6s} {'final loss':>12s} {'rounds':>8s} {'bits':>12s} {'accuracy':>9s}")
+    for kind in ("gd", "qgd", "lag", "laq"):
+        cfg = StrategyConfig(kind=kind, bits=4, criterion=crit)
+        r = run_gradient_based(loss_fn, params0, workers, cfg,
+                               steps=500, alpha=2.0)
+        pred = jnp.argmax(X @ r.params["w"].T, -1)
+        acc = float(jnp.mean((pred == jnp.argmax(Y, -1)).astype(jnp.float32)))
+        print(f"{kind:6s} {float(r.loss[-1]):12.6f} {int(r.cum_uploads[-1]):8d} "
+              f"{float(r.cum_bits[-1]):12.3e} {acc:9.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Batched serving demo: prefill a prompt batch, decode with the sharded
+KV cache (sequence dim on the model axis — flash-decode style).
+
+    PYTHONPATH=src python examples/serve_lm.py --tokens 32
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, smoke_config
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.models import cache_pspecs, init_cache, init_params, param_pspecs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    max_len = args.prompt_len + args.tokens
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pspecs = param_pspecs(cfg, params, mesh.shape["model"])
+    params = jax.device_put(params, jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), pspecs))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    prompts = jax.device_put(prompts, NamedSharding(mesh, P("data", None)))
+
+    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts)
+    cspecs = cache_pspecs(cfg, cache, mesh.shape["data"], mesh.shape["model"])
+    cache = jax.device_put(cache, jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), cspecs))
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.0f} ms "
+          f"({args.batch*args.prompt_len/t_prefill:,.0f} tok/s)")
+
+    out = []
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32) % cfg.vocab
+    t0 = time.time()
+    for _ in range(args.tokens):
+        out.append(tok)
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32) % cfg.vocab
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"decode: {args.tokens} steps x batch {args.batch} in {dt*1e3:.0f} ms "
+          f"({args.batch*args.tokens/dt:,.0f} tok/s)  pos={int(cache['pos'])}")
+    ids = jnp.concatenate(out, axis=1)
+    print("sample continuation ids[0]:", ids[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: LAQ (Lazily Aggregated Quantized Gradients, NeurIPS 2019) as a
+production-grade multi-pod JAX training/serving framework."""

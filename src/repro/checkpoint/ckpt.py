@@ -1,0 +1,64 @@
+"""Pytree checkpointing: flatten key-paths -> npz (single-host).
+
+Stores dtype-preserving arrays under stable '/'-joined key paths plus a
+step counter.  LAQ's CommState checkpoints the same way — it is a pytree —
+so a resumed run continues with the same server aggregate and worker clocks.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree, step: int) -> None:
+    flat = {}
+    def record(kp, leaf):
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            flat["BF16::" + _path_str(kp)] = arr.astype(np.float32)
+        else:
+            flat[_path_str(kp)] = arr
+        return leaf
+    jax.tree_util.tree_map_with_path(record, tree)
+    flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, tree_template) -> Tuple[object, int]:
+    """Restores into the structure (and shardings) of ``tree_template``."""
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+    step = int(data.pop("__step__"))
+
+    def restore(kp, leaf):
+        key = _path_str(kp)
+        if "BF16::" + key in data:
+            arr = data["BF16::" + key].astype(jax.numpy.bfloat16)
+        else:
+            arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        sharding = getattr(leaf, "sharding", None)
+        return jax.device_put(arr, sharding) if sharding else jax.numpy.asarray(arr)
+
+    return jax.tree_util.tree_map_with_path(restore, tree_template), step

@@ -1,0 +1,19 @@
+"""LAQ core: the paper's contribution as composable JAX modules.
+
+Public API:
+    StrategyConfig, CriterionConfig      -- configuration
+    init_comm_state, aggregate, finalize_step, worker_update
+                                         -- the LAQ state machine
+    quantize_innovation / dequantize_innovation / quantize_roundtrip
+                                         -- paper eq. (5)-(6)
+    run_gradient_based / run_stochastic  -- simulated M-worker cluster
+"""
+from .criterion import CriterionConfig, rhs_threshold, should_skip, push_history
+from .quantize import (dense_bits, dequantize_innovation, pack_nibbles,
+                       quantize_innovation, quantize_roundtrip, tau,
+                       tree_inf_norm, tree_size, tree_sq_norm, unpack_nibbles,
+                       upload_bits)
+from .strategy import (KINDS, CommState, RoundMetrics, StrategyConfig,
+                       aggregate, finalize_step, init_comm_state, worker_update)
+from .compressors import qsgd_compress, ssgd_compress
+from .simulated import RunResult, run_gradient_based, run_stochastic

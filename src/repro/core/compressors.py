@@ -1,0 +1,70 @@
+"""Unbiased-compression baselines used in the paper's Table 3.
+
+* QSGD (Alistarh et al., 2017, paper ref [2]): random b-bit quantization
+  q(v)_i = ||v||_2 * sign(v_i) * xi_i(v, s),  s = 2^b - 1 levels, unbiased.
+* SSGD (Wangni et al., 2018, paper ref [30]): unbiased magnitude-proportional
+  random sparsification: coordinate i kept with prob p_i ~ |v_i|, rescaled by
+  1/p_i; expected density is ``density``.
+
+Both are applied per-worker on the stochastic gradient, all workers upload
+every round (no laziness).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Pytree = object
+
+
+def _flat(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    shapes = [l.shape for l in leaves]
+    sizes = [l.size for l in leaves]
+    return flat, (treedef, shapes, sizes)
+
+
+def _unflat(flat, meta):
+    treedef, shapes, sizes = meta
+    out, off = [], 0
+    for sh, sz in zip(shapes, sizes):
+        out.append(flat[off:off + sz].reshape(sh))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def qsgd_compress(key, grad: Pytree, bits: int):
+    """Returns (compressed_grad, wire_bits). Unbiased: E[out] = grad."""
+    v, meta = _flat(grad)
+    s = 2.0**bits - 1.0
+    norm = jnp.linalg.norm(v)
+    scaled = jnp.where(norm > 0, jnp.abs(v) / norm * s, jnp.zeros_like(v))
+    lo = jnp.floor(scaled)
+    prob = scaled - lo
+    rnd = jax.random.uniform(key, v.shape)
+    level = lo + (rnd < prob).astype(jnp.float32)
+    out = jnp.sign(v) * level * norm / s
+    # wire: 32 bits for the norm + (b + 1 sign) bits per coordinate
+    wire_bits = 32.0 + (bits + 1) * v.size
+    return _unflat(out, meta), jnp.asarray(wire_bits, jnp.float32)
+
+
+def ssgd_compress(key, grad: Pytree, density: float):
+    """Unbiased random sparsification with expected density ``density``."""
+    v, meta = _flat(grad)
+    p = v.size
+    absv = jnp.abs(v)
+    denom = jnp.sum(absv)
+    # one-shot probabilities, clipped to [_, 1]; rescale keeps E close to k.
+    k = density * p
+    probs = jnp.where(denom > 0, jnp.minimum(1.0, k * absv / denom), jnp.zeros_like(v))
+    keep = jax.random.uniform(key, v.shape) < probs
+    out = jnp.where(keep, v / jnp.maximum(probs, 1e-12), 0.0)
+    nnz = jnp.sum(keep.astype(jnp.float32))
+    # wire: 32-bit value + index (ceil(log2 p) bits) per surviving coordinate
+    idx_bits = max(1, int(math.ceil(math.log2(p))))
+    wire_bits = nnz * (32.0 + idx_bits)
+    return _unflat(out, meta), wire_bits

@@ -1,0 +1,49 @@
+"""Lazy-aggregation skip criterion (paper eq. 7a / 7b).
+
+Worker m skips its upload at iteration k iff
+
+    ||Q_m(theta_hat^{k-1}) - Q_m(theta^k)||^2
+        <= 1/(alpha^2 M^2) * sum_d xi_d ||theta^{k+1-d} - theta^{k-d}||^2
+           + 3 (||eps_m^k||^2 + ||eps_hat_m^{k-1}||^2)                 (7a)
+    and  t_m <= t_bar                                                  (7b)
+
+where the theta-difference history is maintained by the server (here: by the
+replicated SPMD state), eps_m^k is the current quantization error and
+eps_hat_m^{k-1} the error stored at the worker's last upload.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class CriterionConfig(NamedTuple):
+    D: int = 10                 # history depth
+    xi: float = 0.8 / 10        # xi_d (constant across d, paper Sec. 4)
+    t_bar: int = 100            # staleness bound
+    include_quant_error: bool = True  # the 3(eps^2 + eps_hat^2) slack term
+
+
+def rhs_threshold(theta_diff_hist: jnp.ndarray, alpha, M: int,
+                  eps_sq, eps_hat_sq, cfg: CriterionConfig):
+    """Right-hand side of (7a). ``theta_diff_hist[d-1] = ||theta^{k+1-d}-theta^{k-d}||^2``."""
+    xi = jnp.full((cfg.D,), cfg.xi, dtype=jnp.float32)
+    hist_term = jnp.dot(xi, theta_diff_hist) / (alpha**2 * M**2)
+    err_term = 3.0 * (eps_sq + eps_hat_sq) if cfg.include_quant_error else 0.0
+    return hist_term + err_term
+
+
+def should_skip(innovation_sq, theta_diff_hist, alpha, M: int,
+                eps_sq, eps_hat_sq, clock, cfg: CriterionConfig):
+    """Boolean skip decision for one worker (vmap over workers upstream)."""
+    ok_7a = innovation_sq <= rhs_threshold(theta_diff_hist, alpha, M,
+                                           eps_sq, eps_hat_sq, cfg)
+    ok_7b = clock < cfg.t_bar
+    return jnp.logical_and(ok_7a, ok_7b)
+
+
+def push_history(theta_diff_hist: jnp.ndarray, new_sq) -> jnp.ndarray:
+    """Ring-push the newest ||theta^{k+1} - theta^k||^2 (index 0 = most recent)."""
+    return jnp.concatenate([jnp.reshape(new_sq, (1,)).astype(theta_diff_hist.dtype),
+                            theta_diff_hist[:-1]])

@@ -1,0 +1,151 @@
+"""Gradient-innovation quantizer (paper eq. 5-6).
+
+The paper quantizes the *innovation* ``g - q_hat`` (fresh local gradient minus
+the previously uploaded quantized gradient) onto a uniform b-bit grid whose
+radius is the innovation's infinity-norm ``R``.  The wire format per upload is
+``32 + b*p`` bits: one float32 for ``R`` plus ``b`` bits per coordinate.
+
+All functions operate on pytrees so the "gradient vector" of the paper maps
+directly onto a model's parameter pytree.  A single global radius ``R`` is
+used across the whole pytree, exactly as the paper uses one radius for the
+whole p-dimensional gradient.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Pytree = object
+
+
+def tree_inf_norm(tree: Pytree) -> jax.Array:
+    """Global infinity norm over a pytree (the paper's ``R_m^k``)."""
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if l.size]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.max(jnp.stack([jnp.max(jnp.abs(l)).astype(jnp.float32) for l in leaves]))
+
+
+def tree_sq_norm(tree: Pytree) -> jax.Array:
+    """Global squared L2 norm over a pytree."""
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if l.size]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sum(jnp.stack([jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves]))
+
+
+def tree_size(tree: Pytree) -> int:
+    """Total number of coordinates p."""
+    return sum(l.size for l in jax.tree_util.tree_leaves(tree))
+
+
+def tau(bits: int) -> float:
+    """Quantization granularity tau = 1/(2^b - 1)."""
+    return 1.0 / (2.0**bits - 1.0)
+
+
+def quantize_innovation(grad: Pytree, qhat: Pytree, bits: int,
+                        per_leaf: bool = False):
+    """Quantize ``grad`` against the previous quantized gradient ``qhat``.
+
+    Returns ``(qints, R_tree)`` where ``qints`` is a pytree of integer codes
+    in ``[0, 2^b - 1]`` (stored as uint8 for b <= 8) and ``R_tree`` mirrors
+    the pytree with per-leaf scalar radii.  Paper eq. (5):
+
+        q_i = floor( (g_i - qhat_i + R) / (2 tau R) + 1/2 )
+
+    ``per_leaf=False`` is the paper-faithful mode: a single global radius
+    (one 32-bit sidecar on the wire), replicated into every leaf of
+    ``R_tree``.  ``per_leaf=True`` is bucketed quantization (one radius per
+    parameter tensor, ``32 * n_leaves`` sidecar bits) — at large p the global
+    infinity-norm is dominated by a few embedding/head coordinates and the
+    grid becomes uselessly coarse for everything else; bucketing is the
+    standard production fix (recorded as a beyond-paper change).
+    """
+    diff = jax.tree.map(lambda g, q: g.astype(jnp.float32) - q.astype(jnp.float32), grad, qhat)
+    if per_leaf:
+        R_tree = jax.tree.map(
+            lambda d: (jnp.max(jnp.abs(d)).astype(jnp.float32)
+                       if d.size else jnp.zeros((), jnp.float32)), diff)
+    else:
+        R = tree_inf_norm(diff)
+        R_tree = jax.tree.map(lambda _: R, diff)
+    t = tau(bits)
+    levels = 2**bits - 1
+
+    def _q(d, R):
+        denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
+        q = jnp.floor((d + R) / denom + 0.5)
+        q = jnp.clip(q, 0, levels)
+        # R == 0 -> innovation identically zero -> midpoint code (dequantizes to 0).
+        q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q))
+        return q.astype(jnp.uint8 if bits <= 8 else jnp.int32)
+
+    return jax.tree.map(_q, diff, R_tree), R_tree
+
+
+def dequantize_innovation(qints: Pytree, R_tree: Pytree, bits: int) -> Pytree:
+    """Inverse map: delta_i = 2 tau R q_i - R (paper eq. 6).
+
+    ``qhat_new = qhat + dequantize_innovation(...)`` recovers Q_m(theta^k).
+    """
+    t = tau(bits)
+
+    def _dq(q, R):
+        d = 2.0 * t * R * q.astype(jnp.float32) - R
+        return jnp.where(R > 0, d, jnp.zeros_like(d))
+
+    return jax.tree.map(_dq, qints, R_tree)
+
+
+def quantize_roundtrip(grad: Pytree, qhat: Pytree, bits: int,
+                       per_leaf: bool = False):
+    """Quantize-and-reconstruct in one call.
+
+    Returns ``(q_new, delta, R_max, err_sq)``:
+      * ``q_new``  — Q_m(theta^k) = qhat + delta  (the new quantized gradient)
+      * ``delta``  — the dequantized innovation deltaQ_m^k
+      * ``R_max``  — max leaf radius (diagnostic; paper Fig. 3 decay)
+      * ``err_sq`` — ||grad - q_new||_2^2  (the quantization error eps_m^k)
+
+    Guarantee (paper Fig. 1): ||grad - q_new||_inf <= tau * R.
+    """
+    qints, R_tree = quantize_innovation(grad, qhat, bits, per_leaf)
+    delta = dequantize_innovation(qints, R_tree, bits)
+    q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d, qhat, delta)
+    err_sq = tree_sq_norm(jax.tree.map(lambda g, qn: g.astype(jnp.float32) - qn, grad, q_new))
+    R_max = jnp.max(jnp.stack(jax.tree_util.tree_leaves(R_tree)))
+    return q_new, delta, R_max, err_sq
+
+
+# ---------------------------------------------------------------------------
+# Bit-packing: the physical wire format.  b=4 packs two codes per byte;
+# b=8 is already one byte per code.  Used by the packed-collective wire mode
+# and by the Pallas kernels (kernels/quant_pack.py mirrors this math).
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(q: jax.Array) -> jax.Array:
+    """Pack a flat uint8 array of 4-bit codes, two per byte.
+
+    Length must be even (pad upstream).
+    """
+    lo = q[0::2].astype(jnp.uint8)
+    hi = q[1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_nibbles -> flat uint8 array of 4-bit codes."""
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    return jnp.stack([lo, hi], axis=-1).reshape(-1).astype(jnp.uint8)
+
+
+def upload_bits(p: int, bits: int) -> int:
+    """Paper's wire cost per upload: 32 bits for R + b bits per coordinate."""
+    return 32 + bits * p
+
+
+def dense_bits(p: int) -> int:
+    """Uncompressed float32 upload cost (GD / LAG per-round cost)."""
+    return 32 * p

@@ -1,0 +1,136 @@
+"""Simulated M-worker cluster — drives the paper-reproduction experiments.
+
+Runs the worker/server protocol on a single device with a leading worker axis
+(vmap), which is exactly the paper's M=10 setting.  Production execution on a
+real mesh lives in ``repro/launch/train.py``; both share the per-worker math
+in ``core/strategy.py``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import qsgd_compress, ssgd_compress
+from .quantize import dense_bits, tree_size, tree_sq_norm
+from .strategy import (CommState, RoundMetrics, StrategyConfig, aggregate,
+                       finalize_step, init_comm_state)
+
+Pytree = object
+
+
+class RunResult(NamedTuple):
+    params: Pytree
+    loss: jax.Array          # [K] global loss per iteration
+    grad_norm_sq: jax.Array  # [K]
+    cum_uploads: jax.Array   # [K] cumulative communication rounds
+    cum_bits: jax.Array      # [K] cumulative wire bits
+    quant_err: jax.Array     # [K] max_m R_m (decay diagnostic, paper Fig. 3)
+
+
+def run_gradient_based(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
+                       cfg: StrategyConfig, *, steps: int, alpha: float) -> RunResult:
+    """Deterministic full-gradient methods: GD / QGD / LAG / LAQ.
+
+    ``loss_fn(params, data_shard) -> scalar`` is one worker's local loss
+    f_m; ``worker_data`` has a leading worker axis W.  Global objective is
+    ``sum_m f_m`` (paper eq. 1).
+    """
+    n_workers = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    grad_m = jax.grad(loss_fn)
+
+    def global_loss(p):
+        return jnp.sum(jax.vmap(lambda d: loss_fn(p, d))(worker_data))
+
+    state0 = init_comm_state(params0, n_workers, cfg)
+
+    def step(carry, _):
+        params, cst = carry
+        grads = jax.vmap(lambda d: grad_m(params, d))(worker_data)
+        agg, cst, metrics = aggregate(cst, grads, alpha, cfg)
+        new_params = jax.tree.map(lambda t, g: t - alpha * g, params, agg)
+        dtheta_sq = tree_sq_norm(jax.tree.map(lambda a, b: a - b, new_params, params))
+        cst = finalize_step(cst, dtheta_sq)
+        gn = tree_sq_norm(jax.grad(global_loss)(params))
+        rec = (global_loss(params), gn, cst.total_uploads, cst.total_bits,
+               metrics.radius_max)
+        return (new_params, cst), rec
+
+    (params, _), recs = jax.lax.scan(step, (params0, state0), None, length=steps)
+    loss, gn, cu, cb, qe = recs
+    return RunResult(params, loss, gn, cu, cb, qe)
+
+
+def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
+                   kind: str, *, steps: int, alpha: float, batch: int,
+                   bits: int = 3, density: float = 0.1,
+                   seed: int = 0,
+                   laq_cfg: Optional[StrategyConfig] = None) -> RunResult:
+    """Minibatch methods of Table 3: SGD / QSGD / SSGD / SLAQ.
+
+    Each worker samples ``batch`` local examples per step.  For SLAQ the LAQ
+    state machine runs on the stochastic gradients.
+    """
+    n_workers = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    n_local = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
+    grad_m = jax.grad(loss_fn)
+    p = tree_size(params0)
+
+    def global_loss(pp):
+        return jnp.sum(jax.vmap(lambda d: loss_fn(pp, d))(worker_data))
+
+    if kind == "slaq":
+        scfg = laq_cfg or StrategyConfig(kind="laq", bits=bits)
+        state0 = init_comm_state(params0, n_workers, scfg)
+    else:
+        state0 = init_comm_state(params0, n_workers,
+                                 StrategyConfig(kind="gd"))  # bits bookkeeping only
+
+    key0 = jax.random.PRNGKey(seed)
+
+    def sample(data_m, key):
+        idx = jax.random.randint(key, (batch,), 0, n_local)
+        return jax.tree.map(lambda x: x[idx], data_m)
+
+    def step(carry, _):
+        params, cst, key = carry
+        key, k_idx, k_cmp = jax.random.split(key, 3)
+        keys_idx = jax.random.split(k_idx, n_workers)
+        batches = jax.vmap(sample)(worker_data, keys_idx)
+        # worker gradients scaled so that sum_m E[g_m] = grad of global loss
+        scale = n_local / batch
+        grads = jax.vmap(lambda b: jax.tree.map(lambda g: g * scale,
+                                                grad_m(params, b)))(batches)
+
+        if kind == "slaq":
+            agg, cst, metrics = aggregate(cst, grads, alpha, scfg)
+            qe = metrics.radius_max
+        else:
+            keys_cmp = jax.random.split(k_cmp, n_workers)
+            if kind == "sgd":
+                cgrads = grads
+                bits_m = jnp.full((n_workers,), float(dense_bits(p)))
+            elif kind == "qsgd":
+                cgrads, bits_m = jax.vmap(lambda k, g: qsgd_compress(k, g, bits))(keys_cmp, grads)
+            elif kind == "ssgd":
+                cgrads, bits_m = jax.vmap(lambda k, g: ssgd_compress(k, g, density))(keys_cmp, grads)
+            else:
+                raise ValueError(kind)
+            agg = jax.tree.map(lambda g: jnp.sum(g, axis=0), cgrads)
+            cst = cst._replace(total_bits=cst.total_bits + jnp.sum(bits_m),
+                               total_uploads=cst.total_uploads + n_workers,
+                               step=cst.step + 1)
+            qe = jnp.zeros(())
+
+        new_params = jax.tree.map(lambda t, g: t - alpha * g, params, agg)
+        if kind == "slaq":
+            dsq = tree_sq_norm(jax.tree.map(lambda a, b: a - b, new_params, params))
+            cst = finalize_step(cst, dsq)
+        gn = tree_sq_norm(jax.grad(global_loss)(params))
+        rec = (global_loss(params), gn, cst.total_uploads, cst.total_bits, qe)
+        return (new_params, cst, key), rec
+
+    (params, _, _), recs = jax.lax.scan(step, (params0, state0, key0), None, length=steps)
+    loss, gn, cu, cb, qe = recs
+    return RunResult(params, loss, gn, cu, cb, qe)

@@ -1,0 +1,198 @@
+"""Communication strategies: GD / QGD / LAG / LAQ (+ stochastic variants).
+
+All four gradient-based methods of the paper are one state machine with two
+switches:
+
+    quantize?  lazy-skip?
+GD     no         no        theta^{k+1} = theta^k - alpha * sum_m grad_m
+QGD    yes        no        paper eq. (3)
+LAG    no         yes       Chen et al. 2018 (paper ref [6])
+LAQ    yes        yes       paper eq. (4) + criterion (7)
+
+The *server* aggregate  ``agg^k = agg^{k-1} + sum_{m in M^k} deltaQ_m^k``  is
+maintained as replicated SPMD state.  Stochastic variants (SGD/SLAQ) use the
+same machinery on minibatch gradients.
+
+Two execution modes share the same per-worker math (``worker_update``):
+
+* **simulated** — a leading worker axis ``W`` on the gradient pytree, vmapped.
+  Used by the paper-reproduction benchmarks (M=10 workers on one device).
+* **sharded** — called per-shard inside ``jax.shard_map`` where the worker
+  axis is a mesh axis; the caller supplies the psum. See ``launch/train.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .criterion import CriterionConfig, push_history, should_skip
+from .quantize import (dense_bits, quantize_roundtrip, tree_size, tree_sq_norm,
+                       upload_bits)
+
+Pytree = object
+
+KINDS = ("gd", "qgd", "lag", "laq")
+
+
+class StrategyConfig(NamedTuple):
+    kind: str = "laq"               # one of KINDS
+    bits: int = 4                   # quantization bits per coordinate
+    criterion: CriterionConfig = CriterionConfig()
+    per_leaf_radius: bool = False   # paper: one global R; True = bucketed
+    first_round_upload: bool = True  # init clocks at t_bar: round 1 is dense
+    state_bf16: bool = False        # store qhat/server_agg in bf16 (beyond-
+                                    # paper memory opt; grid values tolerate it
+                                    # and the innovation loop self-corrects)
+    # wire mode is a launch-layer concern ("float" psum vs "packed" all_gather);
+    # the algorithmic state machine is identical for both.
+
+    @property
+    def quantized(self) -> bool:
+        return self.kind in ("qgd", "laq")
+
+    @property
+    def lazy(self) -> bool:
+        return self.kind in ("lag", "laq")
+
+
+class CommState(NamedTuple):
+    """Replicated/sharded LAQ state.
+
+    ``qhat``/``eps_hat_sq``/``clocks`` carry a leading worker dim W in
+    simulated mode; in sharded mode that dim is the mesh worker axis and each
+    shard holds its own slice (no leading dim).
+    """
+    qhat: Pytree            # last uploaded quantized gradient  Q_m(theta_hat)
+    server_agg: Pytree      # server aggregate  agg^{k-1}
+    eps_hat_sq: jax.Array   # ||eps_hat_m||^2 at last upload
+    clocks: jax.Array       # t_m
+    theta_hist: jax.Array   # [D]  ||theta^{k+1-d} - theta^{k-d}||^2 ring
+    total_bits: jax.Array   # float64-ish accumulator (float32 ok for tests)
+    total_uploads: jax.Array
+    step: jax.Array
+
+
+class RoundMetrics(NamedTuple):
+    uploads: jax.Array      # |M^k| this round
+    bits: jax.Array         # wire bits this round
+    mean_skip: jax.Array    # fraction of workers skipping
+    radius_max: jax.Array   # max_m R_m^k (0 for unquantized)
+
+
+def init_comm_state(grad_template: Pytree, n_workers: int,
+                    cfg: StrategyConfig, *, worker_dim: bool = True) -> CommState:
+    """Zero-initialized state. ``grad_template`` gives shapes/dtypes of one
+    worker's gradient pytree (no worker dim)."""
+    sdtype = jnp.bfloat16 if cfg.state_bf16 else jnp.float32
+
+    def zeros_like_s(l):
+        shape = (n_workers,) + l.shape if worker_dim else l.shape
+        return jnp.zeros(shape, sdtype)
+
+    wshape = (n_workers,) if worker_dim else ()
+    # clocks start at t_bar when first_round_upload: criterion (7b) then
+    # forces a dense first round, bootstrapping qhat / the server aggregate.
+    clock0 = cfg.criterion.t_bar if (cfg.lazy and cfg.first_round_upload) else 0
+    return CommState(
+        qhat=jax.tree.map(zeros_like_s, grad_template),
+        server_agg=jax.tree.map(lambda l: jnp.zeros(l.shape, sdtype), grad_template),
+        eps_hat_sq=jnp.zeros(wshape, jnp.float32),
+        clocks=jnp.full(wshape, clock0, jnp.int32),
+        theta_hist=jnp.zeros((cfg.criterion.D,), jnp.float32),
+        total_bits=jnp.zeros((), jnp.float32),
+        total_uploads=jnp.zeros((), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-worker update: the heart of LAQ.  Pure; no collectives.
+# ---------------------------------------------------------------------------
+
+def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
+                  theta_hist, alpha, n_workers: int, cfg: StrategyConfig):
+    """One worker's quantize + skip decision.
+
+    Returns ``(delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
+    bits_m, R_m)`` where ``delta_masked`` is this worker's contribution to the
+    server-aggregate refinement (zero if the upload is skipped).
+    """
+    p = tree_size(grad_m)
+    if cfg.quantized:
+        q_new, delta, R, err_sq = quantize_roundtrip(grad_m, qhat_m, cfg.bits,
+                                                     cfg.per_leaf_radius)
+        n_sidecars = (len(jax.tree_util.tree_leaves(grad_m))
+                      if cfg.per_leaf_radius else 1)
+        bits_if_upload = float(upload_bits(p, cfg.bits)) + 32.0 * (n_sidecars - 1)
+    else:
+        q_new = jax.tree.map(lambda g: g.astype(jnp.float32), grad_m)
+        delta = jax.tree.map(lambda g, q: g - q, q_new, qhat_m)
+        R = jnp.zeros((), jnp.float32)
+        err_sq = jnp.zeros((), jnp.float32)
+        bits_if_upload = float(dense_bits(p))
+
+    innovation_sq = tree_sq_norm(delta)
+
+    if cfg.lazy:
+        skip = should_skip(innovation_sq, theta_hist, alpha, n_workers,
+                           err_sq, eps_hat_sq_m, clock_m, cfg.criterion)
+    else:
+        skip = jnp.zeros((), bool)
+    uploaded = jnp.logical_not(skip)
+
+    fup = uploaded.astype(jnp.float32)
+    delta_masked = jax.tree.map(lambda d: d * fup, delta)
+    qhat_new = jax.tree.map(lambda qn, qh: jnp.where(uploaded, qn.astype(qh.dtype), qh),
+                            q_new, qhat_m)
+    eps_hat_sq_new = jnp.where(uploaded, err_sq, eps_hat_sq_m)
+    clock_new = jnp.where(uploaded, 0, clock_m + 1).astype(jnp.int32)
+    bits_m = fup * bits_if_upload
+    return delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded, bits_m, R
+
+
+# ---------------------------------------------------------------------------
+# Simulated cluster mode (vmap over a leading worker axis).
+# ---------------------------------------------------------------------------
+
+def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig):
+    """Aggregate per-worker gradients (leading dim W) into the LAQ gradient.
+
+    Returns ``(agg_grad, new_state, metrics)``.  The caller applies
+    ``theta <- theta - alpha * agg_grad`` (or feeds agg_grad to an optimizer)
+    and then calls :func:`finalize_step` with the realized parameter change.
+    """
+    n_workers = jax.tree_util.tree_leaves(state.clocks)[0].shape[0] \
+        if hasattr(state.clocks, "shape") and state.clocks.ndim else 1
+    n_workers = state.clocks.shape[0]
+
+    upd = functools.partial(worker_update, theta_hist=state.theta_hist,
+                            alpha=alpha, n_workers=n_workers, cfg=cfg)
+    (delta_masked, qhat_new, eps_hat_sq_new, clock_new,
+     uploaded, bits_m, R_m) = jax.vmap(upd)(grads, state.qhat,
+                                            state.eps_hat_sq, state.clocks)
+
+    # Server recursion: agg^k = agg^{k-1} + sum_m deltaQ_m.
+    agg = jax.tree.map(lambda a, d: a + jnp.sum(d, axis=0),
+                       state.server_agg, delta_masked)
+
+    uploads = jnp.sum(uploaded.astype(jnp.int32))
+    bits = jnp.sum(bits_m)
+    metrics = RoundMetrics(uploads=uploads, bits=bits,
+                           mean_skip=1.0 - uploads / n_workers,
+                           radius_max=jnp.max(R_m))
+    new_state = state._replace(
+        qhat=qhat_new, server_agg=agg, eps_hat_sq=eps_hat_sq_new,
+        clocks=clock_new,
+        total_bits=state.total_bits + bits,
+        total_uploads=state.total_uploads + uploads,
+        step=state.step + 1,
+    )
+    return agg, new_state, metrics
+
+
+def finalize_step(state: CommState, theta_diff_sq) -> CommState:
+    """Push ||theta^{k+1}-theta^k||^2 into the criterion's history ring."""
+    return state._replace(theta_hist=push_history(state.theta_hist, theta_diff_sq))

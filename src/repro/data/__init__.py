@@ -1,0 +1,2 @@
+from .synthetic import (classification_dataset, lm_batches, split_workers,
+                        synthetic_lm_batch)

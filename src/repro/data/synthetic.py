@@ -1,0 +1,84 @@
+"""Synthetic data pipelines (the container is offline; MNIST is emulated).
+
+* ``classification_dataset`` — the paper-repro substrate: a 10-class,
+  784-feature Gaussian-mixture problem with controllable class separation and
+  per-worker heterogeneity (the paper studies heterogeneity in its supp.).
+* ``lm_batches`` / ``synthetic_lm_batch`` — deterministic token streams for
+  LM training: a Zipf-like marginal with a Markov structure so the loss has
+  learnable signal, generated shard-locally from a seeded PRNG (no host I/O),
+  placed onto the mesh with the right sharding.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Paper-repro: MNIST-like classification mixture
+# ---------------------------------------------------------------------------
+
+def classification_dataset(key, *, n_per_class: int = 100, n_classes: int = 10,
+                           n_features: int = 784, separation: float = 2.0,
+                           noise: float = 1.0):
+    """Returns (X [N,F], Y one-hot [N,C]) — a linearly-separable-ish mixture."""
+    kc, kx = jax.random.split(key)
+    centers = separation * jax.random.normal(kc, (n_classes, n_features)) / np.sqrt(n_features)
+    N = n_classes * n_per_class
+    labels = jnp.tile(jnp.arange(n_classes), n_per_class)
+    X = centers[labels] + noise * jax.random.normal(kx, (N, n_features)) / np.sqrt(n_features)
+    Y = jax.nn.one_hot(labels, n_classes)
+    return X, Y
+
+
+def split_workers(X, Y, n_workers: int, *, heterogeneity: float = 0.0,
+                  key: Optional[jax.Array] = None):
+    """Shard a dataset over workers. heterogeneity=0 -> uniform shuffle;
+    1 -> sorted by label (maximally non-iid), as in the paper's supp study."""
+    N = X.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    labels = jnp.argmax(Y, -1)
+    uniform = jax.random.permutation(key, N)
+    sorted_idx = jnp.argsort(labels, stable=True)
+    n_sorted = int(heterogeneity * N)
+    idx = jnp.concatenate([sorted_idx[:n_sorted],
+                           uniform[~jnp.isin(uniform, sorted_idx[:n_sorted])]])[:N]
+    per = N // n_workers
+    idx = idx[:per * n_workers].reshape(n_workers, per)
+    return X[idx], Y[idx]
+
+
+# ---------------------------------------------------------------------------
+# LM token pipeline
+# ---------------------------------------------------------------------------
+
+def synthetic_lm_batch(key, batch: int, seq: int, vocab: int):
+    """Markov-ish token stream: next token depends on current (mod structure)
+    plus Zipf-sampled noise — cheap, deterministic, learnable."""
+    k1, k2 = jax.random.split(key)
+    # Zipf marginal via inverse-CDF on uniform
+    u = jax.random.uniform(k1, (batch, seq + 1))
+    zipf = jnp.minimum((1.0 / jnp.maximum(u, 1e-6)) ** 0.7, float(vocab)) - 1
+    base = zipf.astype(jnp.int32) % vocab
+    # Markov mixing: with prob .5, token t+1 = f(token t)
+    mix = jax.random.bernoulli(k2, 0.5, (batch, seq + 1))
+    rolled = (base * 31 + 7) % vocab
+    stream = jnp.where(mix, rolled, base)
+    return {"tokens": stream[:, :-1], "targets": stream[:, 1:]}
+
+
+def lm_batches(seed: int, batch: int, seq: int, vocab: int,
+               sharding=None) -> Iterator[dict]:
+    """Infinite iterator of device-placed LM batches."""
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        b = synthetic_lm_batch(key, batch, seq, vocab)
+        if sharding is not None:
+            b = jax.device_put(b, sharding)
+        yield b
+        step += 1

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the LAQ wire hot loops (quantize+pack, unpack+
+dequant+accumulate). ops.py: jit wrappers; ref.py: pure-jnp oracles."""
+from .ops import dequant_acc, quantize_pack

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers around the Pallas wire kernels.
+
+Handles padding to the kernel block size, flat<->leaf reshaping, and backend
+selection: interpret=True on CPU (the validation container), compiled Pallas
+on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .quant_pack import BLOCK, dequant_acc_pallas, quantize_pack_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to_block(flat):
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, n
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_pack(grad, qhat, R, bits: int, *, interpret: bool | None = None):
+    """Flat leaf quantize+pack. grad/qhat f32 [n], R scalar.
+
+    Returns (packed uint8 [ceil(n/blk)*blk*bits/8], delta f32 [n]).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    diff = grad.astype(jnp.float32) - qhat.astype(jnp.float32)
+    diff, n = _pad_to_block(diff.reshape(-1))
+    packed, delta = quantize_pack_pallas(diff, R.reshape(1), bits,
+                                         interpret=interpret)
+    return packed, delta[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "interpret"))
+def dequant_acc(packed, R, keep, bits: int, n: int, *,
+                interpret: bool | None = None):
+    """Server-side unpack+dequant+accumulate over the worker dim."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n_padded = packed.shape[1] * 8 // bits
+    out = dequant_acc_pallas(packed, R.astype(jnp.float32),
+                             keep.astype(jnp.float32), bits, n_padded,
+                             interpret=interpret)
+    return out[:n]

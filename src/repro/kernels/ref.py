@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the LAQ wire kernels (the source of truth in tests).
+
+Semantics mirror core/quantize.py exactly, specialized to flat float32
+vectors with a precomputed radius (the kernels operate post-flattening, one
+leaf at a time; the radius reduction itself is a cheap jnp.max upstream).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_pack_ref(diff: jnp.ndarray, R: jnp.ndarray, bits: int):
+    """diff = grad - qhat, flat f32 [n] (n even for bits=4).
+
+    Returns (packed uint8 [n*bits/8], q_new_delta f32 [n]) where
+    q_new_delta = dequantize(codes) (the innovation actually applied).
+    """
+    assert bits in (4, 8)
+    t = 1.0 / (2.0 ** bits - 1.0)
+    levels = 2 ** bits - 1
+    denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
+    q = jnp.floor((diff + R) / denom + 0.5)
+    q = jnp.clip(q, 0, levels)
+    q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q)).astype(jnp.uint8)
+    delta = 2.0 * t * R * q.astype(jnp.float32) - R
+    delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
+    if bits == 4:
+        packed = (q[0::2] | (q[1::2] << 4)).astype(jnp.uint8)
+    else:
+        packed = q
+    return packed, delta
+
+
+def dequant_acc_ref(packed: jnp.ndarray, R: jnp.ndarray, keep: jnp.ndarray,
+                    bits: int, n: int):
+    """packed [W, n*bits/8] uint8, R [W], keep [W] -> sum_w delta_w, f32 [n]."""
+    assert bits in (4, 8)
+    t = 1.0 / (2.0 ** bits - 1.0)
+    if bits == 4:
+        lo = (packed & 0x0F).astype(jnp.float32)
+        hi = ((packed >> 4) & 0x0F).astype(jnp.float32)
+        codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)[:, :n]
+    else:
+        codes = packed.astype(jnp.float32)[:, :n]
+    Rw = R[:, None]
+    delta = 2.0 * t * Rw * codes - Rw
+    delta = jnp.where(Rw > 0, delta, 0.0) * keep[:, None]
+    return jnp.sum(delta, axis=0)

@@ -1,0 +1,1 @@
+from .mesh import make_production_mesh, make_test_mesh, n_workers_of, worker_axes_of

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU integration tests (requires forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def worker_axes_of(mesh, *, hierarchical: bool = False):
+    """LAQ worker granularity: flat = every data shard is a worker;
+    hierarchical = pods are workers (intra-pod full-precision psum)."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod",) if hierarchical else ("pod", "data")
+    return ("data",)
+
+
+def n_workers_of(mesh, worker_axes) -> int:
+    n = 1
+    for a in worker_axes:
+        n *= mesh.shape[a]
+    return n

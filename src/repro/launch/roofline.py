@@ -1,0 +1,131 @@
+"""Roofline terms from a compiled (dry-run) executable.
+
+TPU v5e constants (the TARGET hardware; the container runs CPU):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s per ICI link.
+
+``cost_analysis`` yields per-device HLO FLOPs / bytes; collective bytes are
+not in cost_analysis, so we parse the *post-SPMD-partitioning* HLO text
+(``compiled.as_text()``) and sum the output bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (shapes in
+that module are already per-partition).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[512,128]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")[(\.]")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes (per device) summed over the module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape = m.group(1) or m.group(2)
+        out[m.group(3)] += _shape_bytes(shape)
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: float            # per device
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0     # 6*N*D useful-model flops per device
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": dict(self.coll_breakdown),
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyze(compiled, *, n_devices: int, model_flops_global: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):          # older API returns one dict per device
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    cb = collective_bytes(compiled.as_text())
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(sum(cb.values())),
+        coll_breakdown=cb,
+        model_flops=model_flops_global / n_devices,
+    )
+
+
+def memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out

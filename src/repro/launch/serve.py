@@ -1,0 +1,66 @@
+"""Serving steps: prefill + single-token decode with sharded caches.
+
+``decode_32k`` / ``long_500k`` lower these (one new token against a KV cache
+of ``seq_len``), not train_step.  The KV cache sequence dim is sharded over
+the ``model`` axis (flash-decode); recurrent caches (mamba) shard heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import (cache_pspecs, decode_step, init_cache, init_params,
+                          param_pspecs, prefill)
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, tokens):
+        return prefill(params, tokens, cfg, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cache, tokens, cfg)
+    return serve_step
+
+
+def _dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def serve_specs(cfg: ModelConfig, mesh, batch: int, seq_len: int, *,
+                decode_pos: int | None = None):
+    """(params_specs, cache_specs, tokens_specs) as sharded SDS for lowering.
+
+    For decode shapes the cache is sized/validated at ``seq_len`` (ring
+    buffer of ``sliding_window`` when configured) with ``pos = decode_pos``.
+    """
+    dp = _dp_axes(mesh)
+    data_size = 1
+    for a in dp:
+        data_size *= mesh.shape[a]
+    model_size = mesh.shape["model"]
+
+    params_abs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = param_pspecs(cfg, params_abs, model_size)
+    params_s = jax.tree.map(
+        lambda l, sp: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        params_abs, pspecs)
+
+    cache_abs = jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+    cspecs = cache_pspecs(cfg, cache_abs, data_size, model_size,
+                          data_axis=dp if len(dp) > 1 else dp[0])
+    cache_s = jax.tree.map(
+        lambda l, sp: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        cache_abs, cspecs)
+
+    tok_spec = P(dp if batch % data_size == 0 else None, None)
+    tokens_s = jax.ShapeDtypeStruct((batch, 1), jnp.int32,
+                                    sharding=NamedSharding(mesh, tok_spec))
+    return params_s, cache_s, tokens_s

@@ -1,0 +1,378 @@
+"""Distributed LAQ training step.
+
+The gradient computation + LAQ aggregation run inside a **partial-auto
+shard_map**: manual over the worker axes (``data``, and ``pod`` on multi-pod
+meshes), auto over ``model``.  Inside the manual region each worker sees its
+own batch shard and computes a *local* gradient (no implicit data-axis psum —
+that is exactly what GSPMD would insert for replicated params, and what LAQ
+must intercept).  The LAQ state machine quantizes the innovation, applies the
+skip criterion, and the aggregation collective is explicit:
+
+* ``wire="float"``  — psum of the (dequantized, skip-masked) innovations.
+  Numerically exact LAQ; bits accounted analytically (paper's accounting).
+* ``wire="packed"`` — the TPU-native wire format: per-leaf b-bit codes packed
+  into uint8 payloads and exchanged with ``all_gather`` over the worker axes
+  together with the per-worker radius R and skip mask; every device
+  dequantizes and sums (the SPMD replica of the paper's server).  The
+  collective payload is physically b/32 of the float gradient — visible in
+  the dry-run HLO and the roofline collective term.  Pays off at pod
+  granularity (W=2) where the exchange crosses the slow DCN link.
+
+Tensor parallelism (``model`` axis) stays under GSPMD: inside the manual
+region, model-sharded arrays keep their global shapes and einsum/norm
+reductions over them lower to the usual collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.quantize import (dequantize_innovation, pack_nibbles,
+                                 quantize_innovation, tree_sq_norm,
+                                 unpack_nibbles)
+from repro.core.strategy import CommState, StrategyConfig, worker_update
+from repro.core.criterion import push_history
+from repro.models import lm_loss, param_pspecs
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer
+
+from .mesh import n_workers_of
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt_state: object
+    comm: CommState
+    step: jax.Array
+
+
+class StepMetrics(NamedTuple):
+    loss: jax.Array
+    uploads: jax.Array
+    bits: jax.Array
+    grad_sq: jax.Array
+
+
+def _squeeze0(tree):
+    return jax.tree.map(lambda x: jnp.squeeze(x, 0), tree)
+
+
+def _unsqueeze0(tree):
+    return jax.tree.map(lambda x: x[None], tree)
+
+
+def _axis_size_static(worker_axes) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    axes = (worker_axes,) if isinstance(worker_axes, str) else worker_axes
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+    return n
+
+
+def _packed_aggregate(grads, qhat, skip_mask, bits: int, worker_axes,
+                      per_leaf: bool, pspecs=None):
+    """The packed-uint8 wire: per-leaf quantize -> pack -> all_gather ->
+    dequantize -> masked sum.  Returns (sum_of_innovations, q_new_tree).
+
+    ``pspecs`` (a pytree of PartitionSpec matching ``grads``) pins the
+    payload's model-axis sharding through the exchange: without it GSPMD
+    replicates the payload over ``model`` *before* the worker-axis
+    all_gather, multiplying the exchanged bytes by the model-axis size.
+    """
+    from repro.models.layers import maybe_constrain
+    qints, R_tree = quantize_innovation(grads, qhat, bits, per_leaf)
+    keep = jnp.logical_not(skip_mask).astype(jnp.float32)
+    keep_w = jax.lax.all_gather(keep, worker_axes)
+
+    def _packable(q):
+        return bits == 4 and q.ndim >= 1 and q.shape[-1] % 2 == 0
+
+    def leaf_payload(q):
+        # pack two 4-bit codes per byte ALONG THE LAST DIM (no flatten: a
+        # flatten of a model-sharded leaf forces GSPMD to regather it, and
+        # at large meshes trips an XLA spmd_partitioner assertion)
+        if _packable(q):
+            pairs = q.reshape(q.shape[:-1] + (q.shape[-1] // 2, 2))
+            return (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+        return q                          # odd last dim or b == 8: raw codes
+
+    def leaf_unpack(payload, orig):
+        if _packable(orig):
+            lo = payload & 0x0F
+            hi = (payload >> 4) & 0x0F
+            return jnp.stack([lo, hi], axis=-1).reshape(orig.shape)
+        return payload
+
+    def gather_dequant_sum(q, R, orig, spec):
+        pl = leaf_payload(q)
+        if spec is not None:
+            pl = maybe_constrain(pl, *spec)
+        payload = jax.lax.all_gather(pl, worker_axes)               # [W, ...]
+        if spec is not None:
+            payload = maybe_constrain(payload, None, *spec)
+        Rw = jax.lax.all_gather(R, worker_axes)                     # [W]
+        W = Rw.shape[0]
+        codes = jax.vmap(lambda p_: leaf_unpack(p_, orig))(payload)
+        t = 1.0 / (2.0 ** bits - 1.0)
+        Rb = Rw.reshape((W,) + (1,) * orig.ndim)
+        kb = keep_w.reshape((W,) + (1,) * orig.ndim)
+        delta = (2.0 * t * Rb * codes.astype(jnp.float32) - Rb)
+        delta = jnp.where(Rb > 0, delta, 0.0) * kb
+        return jnp.sum(delta, axis=0)
+
+    def permute_dequant_sum(q, R, orig, spec):
+        # two-worker wire (pods): a single collective-permute payload
+        # exchange — p*b/8 bytes on the link, nothing for GSPMD to re-shard
+        perm = [(0, 1), (1, 0)]
+        pl = leaf_payload(q)
+        if spec is not None:
+            pl = maybe_constrain(pl, *spec)
+        peer_pl = jax.lax.ppermute(pl, worker_axes, perm)
+        peer_R = jax.lax.ppermute(R, worker_axes, perm)
+        peer_keep = jax.lax.ppermute(keep, worker_axes, perm)
+        t = 1.0 / (2.0 ** bits - 1.0)
+
+        def dq(codes_pl, Rv):
+            codes = leaf_unpack(codes_pl, orig).astype(jnp.float32)
+            d = 2.0 * t * Rv * codes - Rv
+            return jnp.where(Rv > 0, d, 0.0)
+
+        return dq(pl, R) * keep + dq(peer_pl, peer_R) * peer_keep
+
+    q_leaves, treedef = jax.tree_util.tree_flatten(qints)
+    r_leaves = jax.tree_util.tree_leaves(R_tree)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    s_leaves = (jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, tuple))
+                if pspecs is not None else [None] * len(q_leaves))
+    n_workers = _axis_size_static(worker_axes)
+    leaf_fn = permute_dequant_sum if n_workers == 2 else gather_dequant_sum
+    agg_leaves = [leaf_fn(q, r, g, s) for q, r, g, s
+                  in zip(q_leaves, r_leaves, g_leaves, s_leaves)]
+    agg_delta = jax.tree_util.tree_unflatten(treedef, agg_leaves)
+    # local reconstruction of this worker's new quantized gradient
+    delta_local = dequantize_innovation(qints, R_tree, bits)
+    q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d, qhat, delta_local)
+    return agg_delta, q_new
+
+
+def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
+                    optimizer: Optimizer, *, lr: float,
+                    worker_axes=None, wire: str = "float",
+                    hierarchical: bool = False, microbatch: int = 1):
+    """Returns ``step(state, batch) -> (state, metrics)`` (to be jitted).
+
+    ``microbatch > 1`` splits each worker's batch into that many sequential
+    microbatches with f32 gradient accumulation — the standard production
+    lever for the activation-memory term (saved activations shrink by the
+    factor; LAQ semantics unchanged, it still sees the full-batch gradient).
+    """
+    from .mesh import worker_axes_of
+    if worker_axes is None:
+        worker_axes = worker_axes_of(mesh, hierarchical=hierarchical)
+    W = n_workers_of(mesh, worker_axes)
+    wa = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    assert wire in ("float", "packed")
+    grad_pspecs = None
+    if wire == "packed":
+        assert strategy.quantized and strategy.bits in (4, 8), \
+            "packed wire requires a 4- or 8-bit quantized strategy"
+        from repro.models import init_params
+        params_abs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+        grad_pspecs = param_pspecs(cfg, params_abs, mesh.shape["model"])
+
+    def sharded_step(params, opt_state, comm, batch):
+        qhat = _squeeze0(comm.qhat)
+        eps_hat_sq = jnp.squeeze(comm.eps_hat_sq, 0)
+        clock = jnp.squeeze(comm.clocks, 0)
+
+        def loss_fn(p, b):
+            return lm_loss(p, b, cfg) / W          # sum_m loss_m == global mean
+
+        if microbatch == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, b):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) / microbatch,
+                                     g_acc, g)
+                return (loss_acc + l / microbatch, g_acc), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            if cfg.scan_layers:
+                (loss, grads), _ = jax.lax.scan(acc_body, zero, mb)
+            else:
+                # probe mode (unrolled layers): unroll microbatches too so
+                # cost_analysis counts every pass (scan bodies count once)
+                carry = zero
+                for i in range(microbatch):
+                    carry, _ = acc_body(carry, jax.tree.map(lambda x: x[i], mb))
+                loss, grads = carry
+
+        (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
+         bits_m, R) = worker_update(grads, qhat, eps_hat_sq, clock,
+                                    comm.theta_hist, lr, W, strategy)
+
+        if wire == "float":
+            agg_delta = jax.tree.map(
+                functools.partial(jax.lax.psum, axis_name=wa), delta_masked)
+        else:
+            skip = jnp.logical_not(uploaded)
+            agg_delta, _ = _packed_aggregate(grads, qhat, skip, strategy.bits,
+                                             wa, strategy.per_leaf_radius,
+                                             pspecs=grad_pspecs)
+
+        agg = jax.tree.map(lambda a, d: a.astype(jnp.float32) + d,
+                           comm.server_agg, agg_delta)
+        agg_store = jax.tree.map(lambda a, s: a.astype(s.dtype), agg,
+                                 comm.server_agg)
+        new_params, new_opt = optimizer.update(agg, opt_state, params, lr)
+        dtheta_sq = tree_sq_norm(jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            new_params, params))
+
+        new_comm = CommState(
+            qhat=_unsqueeze0(qhat_new),
+            server_agg=agg_store,
+            eps_hat_sq=eps_hat_sq_new[None],
+            clocks=clock_new[None],
+            theta_hist=push_history(comm.theta_hist, dtheta_sq),
+            total_bits=comm.total_bits + jax.lax.psum(bits_m, wa),
+            total_uploads=comm.total_uploads
+            + jax.lax.psum(uploaded.astype(jnp.int32), wa),
+            step=comm.step + 1,
+        )
+        metrics = StepMetrics(
+            loss=jax.lax.psum(loss, wa),
+            uploads=jax.lax.psum(uploaded.astype(jnp.int32), wa),
+            bits=jax.lax.psum(bits_m, wa),
+            grad_sq=tree_sq_norm(agg),
+        )
+        return new_params, new_opt, new_comm, metrics
+
+    # --- partial-auto shard_map: manual over worker axes, auto over model ---
+    worker_set = set(worker_axes)
+
+    def step(state: TrainState, batch):
+        comm = state.comm
+        specs_comm = CommState(
+            qhat=jax.tree.map(lambda _: P(wa), comm.qhat),
+            server_agg=jax.tree.map(lambda _: P(), comm.server_agg),
+            eps_hat_sq=P(wa), clocks=P(wa), theta_hist=P(),
+            total_bits=P(), total_uploads=P(), step=P(),
+        )
+        sm = jax.shard_map(
+            sharded_step, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), state.params),
+                      jax.tree.map(lambda _: P(), state.opt_state),
+                      specs_comm,
+                      jax.tree.map(lambda _: P(wa), batch)),
+            out_specs=(jax.tree.map(lambda _: P(), state.params),
+                       jax.tree.map(lambda _: P(), state.opt_state),
+                       specs_comm,
+                       StepMetrics(P(), P(), P(), P())),
+            axis_names=worker_set, check_vma=False)
+        new_params, new_opt, new_comm, metrics = sm(
+            state.params, state.opt_state, comm, batch)
+        return TrainState(new_params, new_opt, new_comm, state.step + 1), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# State construction (concrete and abstract/dry-run variants)
+# ---------------------------------------------------------------------------
+
+def init_train_state(key, cfg: ModelConfig, mesh, strategy: StrategyConfig,
+                     optimizer: Optimizer, worker_axes):
+    from repro.models import init_params
+    from repro.core.strategy import init_comm_state
+    params = init_params(key, cfg)
+    opt_state = optimizer.init(params)
+    W = n_workers_of(mesh, worker_axes)
+    comm = init_comm_state(params, W, strategy)
+    return TrainState(params, opt_state, comm,
+                      jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
+                      optimizer: Optimizer, worker_axes):
+    """Abstract TrainState of ShapeDtypeStructs with NamedShardings attached —
+    lowers without allocating (the multi-pod dry-run path)."""
+    from repro.models import init_params
+    from repro.core.strategy import init_comm_state
+
+    W = n_workers_of(mesh, worker_axes)
+    wa = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    model_size = mesh.shape["model"]
+
+    params_abs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = param_pspecs(cfg, params_abs, model_size)
+    opt_abs = jax.eval_shape(optimizer.init, params_abs)
+    # optimizer state mirrors params (AdamState carries extra scalars)
+    def opt_spec(leaf_path, leaf):
+        return _match_param_spec(leaf, params_abs, pspecs)
+    comm_abs = jax.eval_shape(lambda: init_comm_state(params_abs, W, strategy))
+
+    def shard(abs_leaf, spec):
+        return jax.ShapeDtypeStruct(abs_leaf.shape, abs_leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    params_s = jax.tree.map(shard, params_abs, pspecs)
+
+    def opt_state_specs(opt_abs):
+        # match each opt leaf to the param it mirrors by shape, else replicate
+        shape2spec = {}
+        for leaf, spec in zip(jax.tree.leaves(params_abs), jax.tree.leaves(pspecs)):
+            shape2spec.setdefault(leaf.shape, spec)
+        return jax.tree.map(
+            lambda l: shard(l, shape2spec.get(l.shape, P())), opt_abs)
+
+    opt_s = opt_state_specs(opt_abs)
+
+    def comm_leaf_spec(qh_leaf, pspec):
+        return shard(qh_leaf, P(*((wa,) + tuple(pspec))))
+
+    comm_s = CommState(
+        qhat=jax.tree.map(comm_leaf_spec, comm_abs.qhat, pspecs),
+        server_agg=jax.tree.map(lambda l, sp: shard(l, sp),
+                                comm_abs.server_agg, pspecs),
+        eps_hat_sq=shard(comm_abs.eps_hat_sq, P(wa)),
+        clocks=shard(comm_abs.clocks, P(wa)),
+        theta_hist=shard(comm_abs.theta_hist, P()),
+        total_bits=shard(comm_abs.total_bits, P()),
+        total_uploads=shard(comm_abs.total_uploads, P()),
+        step=shard(comm_abs.step, P()),
+    )
+    step_s = shard(jax.ShapeDtypeStruct((), jnp.int32), P())
+    return TrainState(params_s, opt_s, comm_s, step_s)
+
+
+def _match_param_spec(leaf, params_abs, pspecs):
+    for pl, sp in zip(jax.tree.leaves(params_abs), jax.tree.leaves(pspecs)):
+        if pl.shape == leaf.shape:
+            return sp
+    return P()
+
+
+def batch_specs(cfg: ModelConfig, mesh, batch: int, seq: int, worker_axes=None):
+    """Global batch sharded over *all* data-parallel axes (regardless of LAQ
+    worker granularity — hierarchical mode keeps per-pod data parallelism
+    under GSPMD)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    s = NamedSharding(mesh, P(dp, None))
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32, sharding=s),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32, sharding=s),
+    }

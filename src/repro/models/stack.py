@@ -1,0 +1,414 @@
+"""Decoder stack: scan-over-layers assembly of blocks, per arch family.
+
+Layers are *stacked*: block parameters carry a leading layer dim and the
+forward is a single ``lax.scan`` over it (MaxText-style), so the HLO contains
+one layer body regardless of depth — essential to keep 36-54-layer models
+compilable on the 512-device dry-run meshes.
+
+Hybrid (Zamba2-style) stacks scan over Mamba2 blocks and apply one *shared*
+attention+MLP block (single weight set) after every ``cfg.attn_every``-th
+layer via ``lax.cond``; its per-application KV caches are carried as a
+stacked ``[n_shared, ...]`` array.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_forward, decode_attention, init_attention,
+                        init_kv_cache)
+from .config import ModelConfig
+from .layers import init_mlp, normal_init, rms_norm, swiglu
+from .mamba2 import (init_mamba2, init_mamba_cache, mamba2_decode,
+                     mamba2_forward)
+from .moe import init_moe, moe_forward, moe_forward_dense
+
+
+# ---------------------------------------------------------------------------
+# Block initializers
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+         "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+         "attn": init_attention(k1, cfg, dtype)}
+    if cfg.n_experts:
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype):
+    return {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mamba": init_mamba2(key, cfg, dtype)}
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = cfg.param_dtype
+    V, D = cfg.padded_vocab(), cfg.d_model
+    k_embed, k_head, k_blocks, k_shared = jax.random.split(key, 4)
+    params = {
+        "embed": normal_init(k_embed, (V, D), 1.0, dtype),
+        "final_norm": jnp.zeros((D,), jnp.float32),
+        "lm_head": normal_init(k_head, (D, V), D ** -0.5, dtype),
+    }
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        params["blocks"] = jax.vmap(lambda k: init_attn_block(k, cfg, dtype))(keys)
+    elif cfg.arch_type == "ssm":
+        params["blocks"] = jax.vmap(lambda k: init_mamba_block(k, cfg, dtype))(keys)
+    elif cfg.arch_type == "hybrid":
+        params["blocks"] = jax.vmap(lambda k: init_mamba_block(k, cfg, dtype))(keys)
+        params["shared_attn"] = init_attn_block(k_shared, cfg, dtype)
+    else:
+        raise ValueError(cfg.arch_type)
+    return params
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+# ---------------------------------------------------------------------------
+# Block forwards (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attn_block_fwd(bp, x, positions, cfg: ModelConfig, *, return_kv=False):
+    """Returns (x, aux, kv)."""
+    h, kv = (attention_forward(bp["attn"], rms_norm(x, bp["ln1"], cfg.norm_eps),
+                               positions, cfg, return_kv=True)
+             if return_kv else
+             (attention_forward(bp["attn"], rms_norm(x, bp["ln1"], cfg.norm_eps),
+                                positions, cfg), None))
+    x = x + h
+    h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        m, aux = moe_forward(bp["moe"], h2, cfg)
+    else:
+        m, aux = swiglu(h2, **bp["mlp"]), jnp.zeros((), jnp.float32)
+    return x + m, aux, kv
+
+
+def mamba_block_fwd(bp, x, cfg: ModelConfig, *, return_state=False):
+    h, state, tail = mamba2_forward(bp["mamba"], rms_norm(x, bp["ln"], cfg.norm_eps), cfg)
+    return x + h, (state, tail) if return_state else None
+
+
+# ---------------------------------------------------------------------------
+# Full-stack forward: training (no caches)
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: ModelConfig):
+    """tokens:[B,S] -> (logits [B,S,V], aux_loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    positions = jnp.arange(S)
+
+    def maybe_remat(fn):
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    if not cfg.scan_layers:
+        x, aux = _forward_unrolled(params, x, positions, cfg, maybe_remat)
+    elif cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        @maybe_remat
+        def layer(x, bp):
+            y, a, _ = attn_block_fwd(bp, x, positions, cfg)
+            return y, a
+
+        def body(carry, bp):
+            x, aux = carry
+            x, a = layer(x, bp)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    elif cfg.arch_type == "ssm":
+        @maybe_remat
+        def layer(x, bp):
+            y, _ = mamba_block_fwd(bp, x, cfg)
+            return y
+
+        def body(x, bp):
+            return layer(x, bp), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+
+        @maybe_remat
+        def layer(x, bp, idx):
+            x, _ = mamba_block_fwd(bp, x, cfg)
+            def with_attn(x):
+                y, _, _ = attn_block_fwd(shared, x, positions, cfg)
+                return y
+            return jax.lax.cond((idx + 1) % cfg.attn_every == 0, with_attn,
+                                lambda x: x, x)
+
+        def body(x, xs):
+            bp, idx = xs
+            return layer(x, bp, idx), None
+        x, _ = jax.lax.scan(body, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+    return logits, aux
+
+
+def _layer_slice(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _forward_unrolled(params, x, positions, cfg: ModelConfig, maybe_remat):
+    """Python-unrolled stack (exact cost_analysis; roofline probes only)."""
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        bp = _layer_slice(params["blocks"], i)
+        if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+            def layer(x, bp=bp):
+                y, a, _ = attn_block_fwd(bp, x, positions, cfg)
+                return y, a
+            x, a = maybe_remat(layer)(x)
+            aux = aux + a
+        else:
+            def layer(x, bp=bp):
+                y, _ = mamba_block_fwd(bp, x, cfg)
+                return y
+            x = maybe_remat(layer)(x)
+            if cfg.arch_type == "hybrid" and (i + 1) % cfg.attn_every == 0:
+                def shared_layer(x):
+                    y, _, _ = attn_block_fwd(params["shared_attn"], x,
+                                             positions, cfg)
+                    return y
+                x = maybe_remat(shared_layer)(x)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        cache["attn"] = init_kv_cache(cfg, batch, max_len, cfg.n_layers)
+    elif cfg.arch_type == "ssm":
+        cache["mamba"] = init_mamba_cache(cfg, batch, cfg.n_layers)
+    elif cfg.arch_type == "hybrid":
+        cache["mamba"] = init_mamba_cache(cfg, batch, cfg.n_layers)
+        cache["attn"] = init_kv_cache(cfg, batch, max_len, n_shared_applications(cfg))
+    return cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int):
+    """Processes the prompt; returns (last_token_logits, cache)."""
+    B, S = tokens.shape
+    assert not cfg.sliding_window or S <= cfg.sliding_window, \
+        "ring-buffer prefill not supported; window must cover the prompt"
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    positions = jnp.arange(S)
+    cache = init_cache(cfg, B, max_len)
+    Sc = jax.tree_util.tree_leaves(cache["attn"])[0].shape[2] if "attn" in cache else 0
+
+    def place_kv(kv):
+        k, v = kv
+        z = jnp.zeros((B, Sc) + k.shape[2:], cfg.compute_dtype)
+        return (jax.lax.dynamic_update_slice(z, k.astype(z.dtype), (0, 0, 0, 0)),
+                jax.lax.dynamic_update_slice(z, v.astype(z.dtype), (0, 0, 0, 0)))
+
+    if not cfg.scan_layers:
+        x, cache = _prefill_unrolled(params, x, positions, cfg, cache, place_kv)
+    elif cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        def body(carry, bp):
+            x, aux = carry
+            x, a, kv = attn_block_fwd(bp, x, positions, cfg, return_kv=True)
+            return (x, aux + a), place_kv(kv)
+        (x, _), (ks, vs) = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        params["blocks"])
+        cache["attn"] = {"k": ks, "v": vs}
+    elif cfg.arch_type == "ssm":
+        def body(x, bp):
+            x, st = mamba_block_fwd(bp, x, cfg, return_state=True)
+            return x, st
+        x, (states, tails) = jax.lax.scan(body, x, params["blocks"])
+        cache["mamba"] = {"ssm": states, "conv_x": tails["x"],
+                          "conv_B": tails["B"], "conv_C": tails["C"]}
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+        n_sh = n_shared_applications(cfg)
+        kz = jnp.zeros((n_sh, B, Sc, cfg.n_kv_heads, cfg.hd), cfg.compute_dtype)
+        vz = jnp.zeros_like(kz)
+
+        def body(carry, xs):
+            x, ck, cv = carry
+            bp, idx = xs
+            x, st = mamba_block_fwd(bp, x, cfg, return_state=True)
+
+            def with_attn(args):
+                x, ck, cv = args
+                y, _, kv = attn_block_fwd(shared, x, positions, cfg, return_kv=True)
+                k_full, v_full = place_kv(kv)
+                j = idx // cfg.attn_every
+                ck = jax.lax.dynamic_update_index_in_dim(ck, k_full, j, 0)
+                cv = jax.lax.dynamic_update_index_in_dim(cv, v_full, j, 0)
+                return y, ck, cv
+
+            x, ck, cv = jax.lax.cond((idx + 1) % cfg.attn_every == 0, with_attn,
+                                     lambda a: a, (x, ck, cv))
+            return (x, ck, cv), st
+
+        (x, ks, vs), (states, tails) = jax.lax.scan(
+            body, (x, kz, vz), (params["blocks"], jnp.arange(cfg.n_layers)))
+        cache["mamba"] = {"ssm": states, "conv_x": tails["x"],
+                          "conv_B": tails["B"], "conv_C": tails["C"]}
+        cache["attn"] = {"k": ks, "v": vs}
+
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+    return logits, cache
+
+
+def _prefill_unrolled(params, x, positions, cfg: ModelConfig, cache, place_kv):
+    """Python-unrolled prefill (roofline probes)."""
+    attn_k, attn_v, states, tx, tB, tC = [], [], [], [], [], []
+    for i in range(cfg.n_layers):
+        bp = _layer_slice(params["blocks"], i)
+        if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+            x, _, kv = attn_block_fwd(bp, x, positions, cfg, return_kv=True)
+            k, v = place_kv(kv)
+            attn_k.append(k); attn_v.append(v)
+        else:
+            x, (st, tail) = mamba_block_fwd(bp, x, cfg, return_state=True)
+            states.append(st); tx.append(tail["x"]); tB.append(tail["B"]); tC.append(tail["C"])
+            if cfg.arch_type == "hybrid" and (i + 1) % cfg.attn_every == 0:
+                x, _, kv = attn_block_fwd(params["shared_attn"], x, positions,
+                                          cfg, return_kv=True)
+                k, v = place_kv(kv)
+                attn_k.append(k); attn_v.append(v)
+    if attn_k:
+        cache["attn"] = {"k": jnp.stack(attn_k), "v": jnp.stack(attn_v)}
+    if states:
+        cache["mamba"] = {"ssm": jnp.stack(states), "conv_x": jnp.stack(tx),
+                          "conv_B": jnp.stack(tB), "conv_C": jnp.stack(tC)}
+    return x, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One-token decode. tokens:[B,1] -> (logits [B,1,V], new cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    new_cache = dict(cache)
+
+    if not cfg.scan_layers:
+        x, new_cache = _decode_unrolled(params, cache, x, pos, cfg)
+    elif cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        def body(x, xs):
+            bp, ck, cv = xs
+            h, nk, nv = decode_attention(bp["attn"],
+                                         rms_norm(x, bp["ln1"], cfg.norm_eps),
+                                         ck, cv, pos, cfg)
+            x = x + h
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if "moe" in bp:
+                m, _ = moe_forward_dense(bp["moe"], h2, cfg)
+            else:
+                m = swiglu(h2, **bp["mlp"])
+            return x + m, (nk, nv)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
+                                             cache["attn"]["k"], cache["attn"]["v"]))
+        new_cache["attn"] = {"k": ks, "v": vs}
+    elif cfg.arch_type == "ssm":
+        def body(x, xs):
+            bp, cslice = xs
+            h, nc = mamba2_decode(bp["mamba"], rms_norm(x, bp["ln"], cfg.norm_eps),
+                                  cslice, cfg)
+            return x + h, nc
+        x, nmamba = jax.lax.scan(body, x, (params["blocks"], cache["mamba"]))
+        new_cache["mamba"] = nmamba
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+
+        def body(carry, xs):
+            x, ck, cv = carry
+            bp, idx, cslice = xs
+            h, nc = mamba2_decode(bp["mamba"], rms_norm(x, bp["ln"], cfg.norm_eps),
+                                  cslice, cfg)
+            x = x + h
+
+            def with_attn(args):
+                x, ck, cv = args
+                j = idx // cfg.attn_every
+                ckj = jax.lax.dynamic_index_in_dim(ck, j, 0, keepdims=False)
+                cvj = jax.lax.dynamic_index_in_dim(cv, j, 0, keepdims=False)
+                h, nk, nv = decode_attention(shared["attn"],
+                                             rms_norm(x, shared["ln1"], cfg.norm_eps),
+                                             ckj, cvj, pos, cfg)
+                x = x + h
+                h2 = rms_norm(x, shared["ln2"], cfg.norm_eps)
+                x = x + swiglu(h2, **shared["mlp"])
+                ck = jax.lax.dynamic_update_index_in_dim(ck, nk, j, 0)
+                cv = jax.lax.dynamic_update_index_in_dim(cv, nv, j, 0)
+                return x, ck, cv
+
+            x, ck, cv = jax.lax.cond((idx + 1) % cfg.attn_every == 0, with_attn,
+                                     lambda a: a, (x, ck, cv))
+            return (x, ck, cv), nc
+
+        (x, ks, vs), nmamba = jax.lax.scan(
+            body, (x, cache["attn"]["k"], cache["attn"]["v"]),
+            (params["blocks"], jnp.arange(cfg.n_layers), cache["mamba"]))
+        new_cache["mamba"] = nmamba
+        new_cache["attn"] = {"k": ks, "v": vs}
+
+    new_cache["pos"] = pos + 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _decode_unrolled(params, cache, x, pos, cfg: ModelConfig):
+    """Python-unrolled decode step (roofline probes)."""
+    new_cache = dict(cache)
+    ks, vs, mslices = [], [], []
+    n_attn_seen = 0
+    for i in range(cfg.n_layers):
+        bp = _layer_slice(params["blocks"], i)
+        if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+            ck = cache["attn"]["k"][i]
+            cv = cache["attn"]["v"][i]
+            h, nk, nv = decode_attention(bp["attn"],
+                                         rms_norm(x, bp["ln1"], cfg.norm_eps),
+                                         ck, cv, pos, cfg)
+            x = x + h
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            m = (moe_forward_dense(bp["moe"], h2, cfg)[0] if "moe" in bp
+                 else swiglu(h2, **bp["mlp"]))
+            x = x + m
+            ks.append(nk); vs.append(nv)
+        else:
+            cs = _layer_slice(cache["mamba"], i)
+            h, nc = mamba2_decode(bp["mamba"], rms_norm(x, bp["ln"], cfg.norm_eps),
+                                  cs, cfg)
+            x = x + h
+            mslices.append(nc)
+            if cfg.arch_type == "hybrid" and (i + 1) % cfg.attn_every == 0:
+                j = n_attn_seen
+                n_attn_seen += 1
+                sh = params["shared_attn"]
+                h, nk, nv = decode_attention(sh["attn"],
+                                             rms_norm(x, sh["ln1"], cfg.norm_eps),
+                                             cache["attn"]["k"][j],
+                                             cache["attn"]["v"][j], pos, cfg)
+                x = x + h
+                x = x + swiglu(rms_norm(x, sh["ln2"], cfg.norm_eps), **sh["mlp"])
+                ks.append(nk); vs.append(nv)
+    if ks:
+        new_cache["attn"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    if mslices:
+        new_cache["mamba"] = jax.tree.map(lambda *xs: jnp.stack(xs), *mslices)
+    return x, new_cache

@@ -1,0 +1,79 @@
+"""Pure-JAX optimizers (no external deps).
+
+The LAQ strategies produce an *aggregated gradient*; these optimizers consume
+it.  The paper's own method is plain GD (``sgd``); ``adamw`` keeps a float32
+master copy of bf16 parameters (standard mixed-precision practice), so the
+optimizer state is where full precision lives.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = object
+
+
+class Optimizer(NamedTuple):
+    init: Callable      # params -> opt_state
+    update: Callable    # (grads, opt_state, params, lr) -> (new_params, new_state)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, new_m)
+        return new_p, new_m
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    master: Pytree      # float32 master weights
+    count: jax.Array
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            mu=jax.tree.map(f32, params),
+            nu=jax.tree.map(f32, params),
+            master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        def step(w, m, v):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return w - lr * (upd + weight_decay * w)
+        master = jax.tree.map(step, state.master, mu, nu)
+        new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+        return new_params, AdamState(mu, nu, master, c)
+    return Optimizer(init, update)

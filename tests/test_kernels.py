@@ -1,0 +1,75 @@
+"""Pallas kernel validation: interpret-mode vs the pure-jnp ref oracle,
+swept over shapes / bits / dtypes, plus hypothesis property coverage."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dequant_acc, quantize_pack
+from repro.kernels.quant_pack import BLOCK
+from repro.kernels.ref import dequant_acc_ref, quantize_pack_ref
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("n", [BLOCK, 2 * BLOCK, 3 * BLOCK + 17, 5000, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_pack_matches_ref(bits, n, dtype):
+    key = jax.random.PRNGKey(n * bits)
+    g = (jax.random.normal(key, (n,)) * 5).astype(dtype)
+    qh = jax.random.normal(jax.random.fold_in(key, 1), (n,)).astype(dtype)
+    diff = g.astype(jnp.float32) - qh.astype(jnp.float32)
+    R = jnp.max(jnp.abs(diff))
+    packed, delta = quantize_pack(g, qh, R, bits)
+    pad = (-n) % BLOCK
+    dpad = jnp.concatenate([diff, jnp.zeros((pad,))]) if pad else diff
+    packed_ref, delta_ref = quantize_pack_ref(dpad, R, bits)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(packed_ref))
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(delta_ref[:n]),
+                               atol=1e-5)
+    # the LAQ error bound holds through the kernel
+    tau = 1.0 / (2 ** bits - 1)
+    assert float(jnp.max(jnp.abs(diff - delta))) <= float(tau * R) + 1e-5
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("W", [1, 2, 4, 16])
+def test_dequant_acc_matches_ref(bits, W):
+    n = 2 * BLOCK
+    key = jax.random.PRNGKey(W)
+    packed = jax.random.randint(key, (W, n * bits // 8), 0, 256).astype(jnp.uint8)
+    R = jax.random.uniform(jax.random.fold_in(key, 1), (W,)) * 3
+    keep = (jax.random.uniform(jax.random.fold_in(key, 2), (W,)) > 0.3).astype(jnp.float32)
+    out = dequant_acc(packed, R, keep, bits, n)
+    ref = dequant_acc_ref(packed, R, keep, bits, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_roundtrip_wire_identity():
+    """send-side kernel -> receive-side kernel == float-mode innovation."""
+    n, bits, W = BLOCK, 4, 3
+    key = jax.random.PRNGKey(7)
+    grads = [jax.random.normal(jax.random.fold_in(key, w), (n,)) for w in range(W)]
+    qh = jnp.zeros((n,))
+    payloads, Rs, deltas = [], [], []
+    for g in grads:
+        R = jnp.max(jnp.abs(g - qh))
+        pk, dl = quantize_pack(g, qh, R, bits)
+        payloads.append(pk); Rs.append(R); deltas.append(dl)
+    acc = dequant_acc(jnp.stack(payloads), jnp.stack(Rs),
+                      jnp.ones((W,)), bits, n)
+    np.testing.assert_allclose(np.asarray(acc),
+                               np.asarray(sum(deltas)), atol=1e-4)
+
+
+@hypothesis.given(scale=st.floats(1e-3, 1e3), bits=st.sampled_from([4, 8]))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_kernel_error_bound(scale, bits):
+    key = jax.random.PRNGKey(int(scale * 1000) % 2**31)
+    g = jax.random.normal(key, (BLOCK,)) * scale
+    qh = jnp.zeros((BLOCK,))
+    R = jnp.max(jnp.abs(g))
+    _, delta = quantize_pack(g, qh, R, bits)
+    tau = 1.0 / (2 ** bits - 1)
+    assert float(jnp.max(jnp.abs(g - delta))) <= float(tau * R) * (1 + 1e-5) + 1e-6

@@ -1,0 +1,96 @@
+"""Unit + property tests for the innovation quantizer (paper eq. 5-6)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (dequantize_innovation, quantize_innovation,
+                        quantize_roundtrip, tau, tree_inf_norm, tree_sq_norm,
+                        pack_nibbles, unpack_nibbles, upload_bits, dense_bits)
+
+
+def _tree(key, shapes):
+    ks = jax.random.split(key, len(shapes))
+    return {f"w{i}": jax.random.normal(k, s) * (i + 1)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("per_leaf", [False, True])
+def test_roundtrip_error_bound(bits, per_leaf):
+    """Paper Fig. 1 guarantee: ||grad - Q(grad)||_inf <= tau * R."""
+    key = jax.random.PRNGKey(0)
+    g = _tree(key, [(64,), (8, 16), (3, 5, 7)])
+    qh = jax.tree.map(jnp.zeros_like, g)
+    q_new, delta, R_max, err_sq = quantize_roundtrip(g, qh, bits, per_leaf)
+    qints, R_tree = quantize_innovation(g, qh, bits, per_leaf)
+    for leaf_g, leaf_q, leaf_R in zip(jax.tree.leaves(g), jax.tree.leaves(q_new),
+                                      jax.tree.leaves(R_tree)):
+        err = jnp.max(jnp.abs(leaf_g - leaf_q))
+        assert err <= tau(bits) * leaf_R + 1e-5
+
+
+@pytest.mark.parametrize("bits", [3, 4, 8])
+def test_server_recovery(bits):
+    """Server reconstructs Q_m(theta^k) = qhat + dequant(codes, R)."""
+    key = jax.random.PRNGKey(1)
+    g = _tree(key, [(32,), (4, 4)])
+    qh = _tree(jax.random.PRNGKey(2), [(32,), (4, 4)])
+    qints, R_tree = quantize_innovation(g, qh, bits)
+    delta = dequantize_innovation(qints, R_tree, bits)
+    q_new, delta2, _, _ = quantize_roundtrip(g, qh, bits)
+    for a, b in zip(jax.tree.leaves(delta), jax.tree.leaves(delta2)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+    # codes fit in b bits
+    for leaf in jax.tree.leaves(qints):
+        assert leaf.dtype == jnp.uint8
+        assert int(leaf.max()) <= 2 ** bits - 1
+
+
+def test_zero_innovation_is_exact():
+    g = {"w": jnp.ones((16,))}
+    q_new, delta, R, err_sq = quantize_roundtrip(g, g, 4)
+    assert float(R) == 0.0
+    np.testing.assert_allclose(jax.tree.leaves(delta)[0], 0.0)
+    np.testing.assert_allclose(float(err_sq), 0.0)
+
+
+@hypothesis.given(
+    arr=hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                                max_side=32),
+                   elements=st.floats(-1e4, 1e4, width=32)),
+    bits=st.integers(1, 8),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_property_quantization_error(arr, bits):
+    """Invariant: elementwise error <= tau*R for arbitrary finite inputs."""
+    g = {"w": jnp.asarray(arr)}
+    qh = jax.tree.map(jnp.zeros_like, g)
+    q_new, _, R, _ = quantize_roundtrip(g, qh, bits)
+    err = float(jnp.max(jnp.abs(g["w"] - q_new["w"])))
+    assert err <= float(tau(bits) * R) * (1 + 1e-5) + 1e-5
+
+
+@hypothesis.given(
+    codes=hnp.arrays(np.uint8, st.integers(2, 64).filter(lambda n: n % 2 == 0),
+                     elements=st.integers(0, 15)))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_property_pack_unpack_inverse(codes):
+    packed = pack_nibbles(jnp.asarray(codes))
+    assert packed.nbytes == codes.size // 2
+    out = unpack_nibbles(packed)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_wire_cost_accounting():
+    assert upload_bits(1000, 4) == 32 + 4000
+    assert dense_bits(1000) == 32000
+
+
+def test_tree_norms():
+    g = {"a": jnp.array([3.0, -4.0]), "b": jnp.array([[0.0]])}
+    assert float(tree_inf_norm(g)) == 4.0
+    assert float(tree_sq_norm(g)) == 25.0
