@@ -17,9 +17,11 @@ def main() -> None:
     out_rows, results = [], {}
     all_checks = {}
 
-    from . import bits_sweep, convergence, table2_gradient, table3_stochastic
+    from . import (adaptive_sweep, bits_sweep, convergence, table2_gradient,
+                   table3_stochastic)
     for name, mod in (("table2", table2_gradient), ("table3", table3_stochastic),
-                      ("convergence", convergence), ("bits_sweep", bits_sweep)):
+                      ("convergence", convergence), ("bits_sweep", bits_sweep),
+                      ("adaptive_sweep", adaptive_sweep)):
         t = time.time()
         checks = mod.run(out_rows, results)
         all_checks.update({f"{name}: {k}": v for k, v in checks.items()})

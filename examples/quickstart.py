@@ -13,7 +13,8 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
-from repro.core import CriterionConfig, StrategyConfig, run_gradient_based
+from repro.core import (BitSchedule, CriterionConfig, StrategyConfig,
+                        run_gradient_based)
 from repro.data import classification_dataset, split_workers
 
 M = 10                                   # workers, as in the paper
@@ -33,9 +34,18 @@ def main():
     params0 = {"w": jnp.zeros((10, 784))}
     crit = CriterionConfig(D=10, xi=0.8 / 10, t_bar=100)
 
+    # a-laq: per-worker per-round width from the innovation-radius decay
+    # (thresholds sit on this problem's R trajectory: ~5e-3 at the dense
+    # bootstrap round, ~1e-6 at convergence)
+    alaq_schedule = BitSchedule(kind="radius", grid=(2, 4, 8),
+                                thresholds=(3e-4, 3e-3))
+    configs = [(kind, StrategyConfig(kind=kind, bits=4, criterion=crit))
+               for kind in ("gd", "qgd", "lag", "laq")]
+    configs.append(("a-laq", StrategyConfig(kind="laq", criterion=crit,
+                                            bit_schedule=alaq_schedule)))
+
     print(f"{'method':6s} {'final loss':>12s} {'rounds':>8s} {'bits':>12s} {'accuracy':>9s}")
-    for kind in ("gd", "qgd", "lag", "laq"):
-        cfg = StrategyConfig(kind=kind, bits=4, criterion=crit)
+    for kind, cfg in configs:
         r = run_gradient_based(loss_fn, params0, workers, cfg,
                                steps=500, alpha=2.0)
         pred = jnp.argmax(X @ r.params["w"].T, -1)

@@ -1,0 +1,135 @@
+"""jax version-compatibility shims (validated on 0.4.37 and the current API).
+
+Two API moves are papered over here so the rest of the codebase can be
+written against the modern surface:
+
+* ``shard_map`` — new jax exposes ``jax.shard_map(f, mesh=..., in_specs=...,
+  out_specs=..., axis_names=..., check_vma=...)``; 0.4.x only has
+  ``jax.experimental.shard_map.shard_map(f, mesh, in_specs, out_specs,
+  check_rep=..., auto=...)``.  The shim translates ``axis_names`` (the set of
+  *manual* axes) into ``auto`` (its complement over the mesh) and ``check_vma``
+  into ``check_rep``.
+
+* ``get_abstract_mesh`` — new jax tracks an ambient abstract mesh
+  (``jax.sharding.get_abstract_mesh``) that sharding-constraint helpers query
+  for axis names.  0.4.x has no such tracking, so the shim maintains its own
+  thread-local ambient-mesh record that the compat ``shard_map`` installs
+  around the wrapped function, so code *inside* a shard_map region can see
+  the mesh axes on both versions.  Deliberately NOT installed: the physical
+  mesh context (``with mesh:``) — it would let bare-``PartitionSpec``
+  ``with_sharding_constraint`` trace inside the manual region, but on 0.4.x
+  those constraints lower without the manual-subgroup marking and the XLA
+  spmd partitioner check-fails (hard abort).  Sharding-pin helpers
+  (``models.layers.maybe_constrain``) already treat an unresolvable
+  constraint as a no-op, which is the correct 0.4.x degradation: the pins
+  are a collective-payload perf optimization, not a correctness requirement.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import NamedTuple
+
+import jax
+
+_HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_NATIVE_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+
+
+class AmbientMesh(NamedTuple):
+    """Duck-typed stand-in for jax's AbstractMesh (names + sizes only)."""
+    axis_names: tuple
+    axis_sizes: tuple
+
+
+_tls = threading.local()
+
+# The 0.4.x SPMD partitioner check-fails (hard abort: "Check failed:
+# sharding.IsManualSubgroup()") on XLA control flow (scan/while/cond) whose
+# body touches values sharded over the *auto* axes of a partially-manual
+# shard_map.  Model code must statically unroll such loops there.
+SUPPORTS_LOOPS_OVER_AUTO_AXES = _HAS_NATIVE_SHARD_MAP
+
+# Likewise, inside a partially-manual shard_map the 0.4.x partitioner only
+# lowers ``psum``: ``all_gather``/``ppermute`` hit the same hard abort, and
+# the psum-emulation escape hatch (one-hot by ``axis_index``) dies earlier
+# still because ``axis_index`` lowers to a PartitionId instruction the
+# partitioner rejects.  Payload-exchange code must degrade to psum-only
+# transport on 0.4.x (see launch/train.py ``_packed_aggregate``).
+SUPPORTS_PARTIAL_AUTO_COLLECTIVES = _HAS_NATIVE_SHARD_MAP
+
+
+def needs_loop_unrolling() -> bool:
+    """True while tracing inside a compat shard_map region on a jax whose
+    partitioner aborts on loops over auto-axis-sharded values (0.4.x).
+
+    Model code consults this to swap ``lax.scan`` for a static python loop
+    (layer stack, flash-attention kv chunks, microbatch accumulation).  Known
+    limitation: the Mamba2 sequence scan and the hybrid stack's ``lax.cond``
+    have no unrolled variant, so SSM/hybrid architectures still cannot run
+    under partial-auto shard_map on 0.4.x.
+    """
+    return (not SUPPORTS_LOOPS_OVER_AUTO_AXES
+            and getattr(_tls, "mesh", None) is not None)
+
+
+def get_abstract_mesh():
+    """The ambient mesh (axis_names/axis_sizes), or None when there isn't one.
+
+    Native on new jax; on 0.4.x, the record installed by the compat
+    :func:`shard_map` wrapper, falling back to the physical mesh context
+    (``with mesh:``) when one is active.
+    """
+    if _HAS_NATIVE_ABSTRACT_MESH:
+        return jax.sharding.get_abstract_mesh()
+    am = getattr(_tls, "mesh", None)
+    if am is not None:
+        return am
+    try:
+        phys = jax._src.mesh.thread_resources.env.physical_mesh
+        if phys.axis_names:
+            return AmbientMesh(tuple(phys.axis_names),
+                               tuple(phys.shape[a] for a in phys.axis_names))
+    except Exception:
+        pass
+    return None
+
+
+@contextlib.contextmanager
+def _ambient(mesh):
+    prev = getattr(_tls, "mesh", None)
+    _tls.mesh = AmbientMesh(tuple(mesh.axis_names),
+                            tuple(mesh.shape[a] for a in mesh.axis_names))
+    try:
+        yield
+    finally:
+        _tls.mesh = prev
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check_vma=True):
+    """Version-portable shard_map with the new-API argument names.
+
+    ``axis_names`` is the set of axes the function is *manual* over; all other
+    mesh axes stay auto (GSPMD).  ``axis_names=None`` means manual over every
+    axis (both APIs' default).
+    """
+    if _HAS_NATIVE_SHARD_MAP:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    all_axes = set(mesh.axis_names)
+    manual = all_axes if axis_names is None else set(axis_names)
+    auto = frozenset(all_axes - manual)
+
+    @functools.wraps(f)
+    def wrapped(*args, **kw):
+        with _ambient(mesh):
+            return f(*args, **kw)
+
+    return _shard_map(wrapped, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma), auto=auto)

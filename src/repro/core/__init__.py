@@ -6,13 +6,16 @@ Public API:
                                          -- the LAQ state machine
     quantize_innovation / dequantize_innovation / quantize_roundtrip
                                          -- paper eq. (5)-(6)
+    BitSchedule / select_bits            -- adaptive bit-width (A-LAQ)
     run_gradient_based / run_stochastic  -- simulated M-worker cluster
 """
+from .adaptive import (BitSchedule, adaptive_roundtrip, grid_costs,
+                       select_bits)
 from .criterion import CriterionConfig, rhs_threshold, should_skip, push_history
-from .quantize import (dense_bits, dequantize_innovation, pack_nibbles,
-                       quantize_innovation, quantize_roundtrip, tau,
-                       tree_inf_norm, tree_size, tree_sq_norm, unpack_nibbles,
-                       upload_bits)
+from .quantize import (dense_bits, dequantize_innovation, pack_codes,
+                       pack_nibbles, quantize_innovation, quantize_roundtrip,
+                       tau, tree_inf_norm, tree_size, tree_sq_norm,
+                       unpack_codes, unpack_nibbles, upload_bits)
 from .strategy import (KINDS, CommState, RoundMetrics, StrategyConfig,
                        aggregate, finalize_step, init_comm_state, worker_update)
 from .compressors import qsgd_compress, ssgd_compress

@@ -1,0 +1,163 @@
+"""Adaptive bit-width selection (A-LAQ; Mahmoudi et al. 2022).
+
+LAQ fixes the quantization width ``b`` for the whole run, but the innovation
+radius ``R_m^k`` decays as training converges (paper Fig. 3): a fixed grid
+wastes wire bits late and starves precision early.  This module picks a
+per-worker, per-round width ``b_m^k`` from a small grid (default {2, 4, 8}):
+
+* ``kind="radius"`` — radius-decay schedule: thresholds on the current
+  innovation radius; large R (early training / high innovation) buys more
+  bits, small R fewer.  Stateless given R.
+* ``kind="budget"`` — A-LAQ-style budgeted controller: a cumulative
+  per-worker wire-bit budget ``total_bits`` spread over ``horizon`` rounds;
+  each round the worker takes the radius-preferred width, then steps down the
+  grid until the upload fits its remaining allowance (always at least the
+  smallest width, so progress never stalls).
+* ``kind="constant"`` — degenerate schedule; the strategy layer routes it to
+  the fixed-bit code path, so it is bit-exact with classic LAQ by
+  construction.
+
+Everything here is traceable: the chosen width is a traced scalar, and the
+dynamic quantizer evaluates the (static, tiny) grid of widths and selects by
+mask, so it lives happily under vmap/scan/shard_map.  The dequantization
+arithmetic is kept expression-for-expression identical to
+:mod:`repro.core.quantize` so a pinned dynamic selection reproduces the fixed
+path bit-for-bit (property-tested in tests/test_adaptive.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import (innovation, quantize_codes, tau, tree_sq_norm,
+                       upload_bits)
+
+Pytree = object
+
+
+class BitSchedule(NamedTuple):
+    kind: str = "constant"          # constant | radius | budget
+    bits: int = 4                   # constant-mode width
+    grid: tuple = (2, 4, 8)         # ascending candidate widths
+    # radius schedule: len(grid)-1 ascending thresholds on R_m^k;
+    # R <= thresholds[0] -> grid[0], ..., R > thresholds[-1] -> grid[-1]
+    thresholds: tuple = (0.05, 0.5)
+    # budget controller: total per-worker wire bits spread over horizon rounds
+    total_bits: float = 0.0
+    horizon: int = 0
+
+    @property
+    def adaptive(self) -> bool:
+        return self.kind != "constant"
+
+    def validate(self):
+        assert self.kind in ("constant", "radius", "budget"), self.kind
+        assert tuple(sorted(self.grid)) == tuple(self.grid), self.grid
+        assert all(b in (2, 4, 8) for b in self.grid), self.grid
+        if self.adaptive:
+            assert len(self.thresholds) == len(self.grid) - 1, self
+        if self.kind == "budget":
+            assert self.total_bits > 0 and self.horizon > 0, self
+        return self
+
+
+def grid_costs(schedule: BitSchedule, p: int, n_radii: int = 1) -> jnp.ndarray:
+    """Per-upload wire cost of each grid width (codes + R/b sidecars)."""
+    return jnp.asarray([upload_bits(p, b, n_radii=n_radii, bit_sidecar=True)
+                        for b in schedule.grid], jnp.float32)
+
+
+def select_bits(schedule: BitSchedule, R, bits_spent, step, p: int,
+                n_radii: int = 1):
+    """Pick this worker's width for the round.
+
+    Args: ``R`` — current innovation radius (scalar); ``bits_spent`` — this
+    worker's cumulative wire bits; ``step`` — round index; ``p`` — gradient
+    dimension.  Returns ``(b_sel, onehot)`` where ``b_sel`` is the chosen
+    width as a traced f32 scalar and ``onehot`` is its indicator over the
+    grid.
+
+    Budget invariant (property-tested): whenever the burst-extended allowance
+    covers at least the smallest width, the chosen upload fits it; otherwise
+    the smallest width is chosen.  The allowance is pro-rata plus a one-upload
+    *burst* (the cost of the widest grid entry) — without the burst the dense
+    bootstrap round would be starved by an empty round-0 allowance; with it,
+    cumulative spend provably stays within ``rate * k + cost(max(grid))``.
+    """
+    schedule.validate()   # malformed schedules (e.g. stale thresholds after a
+    # grid change) would otherwise select an all-zero onehot -> b_sel = 0 and
+    # silently corrupt training; validate() turns that into a trace-time error
+    G = len(schedule.grid)
+    th = jnp.asarray(schedule.thresholds, jnp.float32)
+    idx = jnp.sum((R > th).astype(jnp.int32))           # radius preference
+    if schedule.kind == "budget":
+        costs = grid_costs(schedule, p, n_radii)
+        rate = float(schedule.total_bits) / float(schedule.horizon)
+        allowance = rate * (jnp.asarray(step, jnp.float32) + 1.0) \
+            + costs[-1] - jnp.asarray(bits_spent, jnp.float32)
+        fits = costs <= allowance
+        idx_budget = jnp.max(jnp.where(fits, jnp.arange(G), 0))
+        idx = jnp.minimum(idx, idx_budget)
+    onehot = jax.nn.one_hot(idx, G, dtype=jnp.float32)
+    b_sel = jnp.sum(onehot * jnp.asarray(schedule.grid, jnp.float32))
+    return b_sel, onehot
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-width quantization: evaluate the static grid, select by mask.
+# Shares the radius/codes math with core/quantize.py (bit-exactness by
+# construction: `innovation` and `quantize_codes` are the same functions the
+# fixed path uses).
+# ---------------------------------------------------------------------------
+
+def quantize_dynamic(diff: Pytree, R_tree: Pytree, grid, onehot) -> Pytree:
+    """Codes for the selected width: grid evaluated statically, masked select."""
+    def leaf(d, R):
+        out = None
+        for i, b in enumerate(grid):
+            q = quantize_codes(d, R, b)
+            out = q if out is None else jnp.where(onehot[i] > 0, q, out)
+        return out
+    return jax.tree.map(leaf, diff, R_tree)
+
+
+def tau_of_selection(grid, onehot):
+    """tau(b_sel) selected from precomputed per-grid constants (bit-exact
+    with the fixed path: x2 scaling commutes with the f64->f32 rounding)."""
+    taus = jnp.asarray([tau(b) for b in grid], jnp.float32)
+    return jnp.sum(taus * onehot)
+
+
+def tau_of_width(grid, b):
+    """Per-worker tau lookup from an exchanged width sidecar ``b`` (any
+    shape). Table lookup, not ``1/(2**b - 1)`` arithmetic, so the wire decode
+    matches :func:`tau_of_selection` bit-for-bit."""
+    grid_arr = jnp.asarray(grid, jnp.float32)
+    taus = jnp.asarray([tau(g) for g in grid], jnp.float32)
+    return jnp.sum(jnp.where(grid_arr == b[..., None], taus, 0.0), axis=-1)
+
+
+def dequantize_dynamic(codes: Pytree, R_tree: Pytree, t_sel) -> Pytree:
+    """delta_i = 2 tau(b_sel) R q_i - R (paper eq. 6 with the selected b)."""
+    def leaf(q, R):
+        d = 2.0 * t_sel * R * q.astype(jnp.float32) - R
+        return jnp.where(R > 0, d, jnp.zeros_like(d))
+    return jax.tree.map(leaf, codes, R_tree)
+
+
+def adaptive_roundtrip(grad: Pytree, qhat: Pytree, grid, onehot,
+                       per_leaf: bool = False):
+    """Dynamic-width analogue of :func:`repro.core.quantize.quantize_roundtrip`.
+
+    Returns ``(q_new, delta, R_max, err_sq)`` for the width encoded in
+    ``onehot``.
+    """
+    diff, R_tree, R_max = innovation(grad, qhat, per_leaf)
+    codes = quantize_dynamic(diff, R_tree, grid, onehot)
+    delta = dequantize_dynamic(codes, R_tree, tau_of_selection(grid, onehot))
+    q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d, qhat, delta)
+    err_sq = tree_sq_norm(jax.tree.map(
+        lambda g, qn: g.astype(jnp.float32) - qn, grad, q_new))
+    return q_new, delta, R_max, err_sq

@@ -44,15 +44,49 @@ def tau(bits: int) -> float:
     return 1.0 / (2.0**bits - 1.0)
 
 
+def innovation(grad: Pytree, qhat: Pytree, per_leaf: bool = False):
+    """``(diff, R_tree, R_max)`` for the innovation ``grad - qhat``.
+
+    The single source of the radius logic shared by the fixed-bit quantizer
+    below and the dynamic-width quantizer in :mod:`repro.core.adaptive`
+    (their bit-exact equivalence depends on this being one implementation).
+    """
+    diff = jax.tree.map(
+        lambda g, q: g.astype(jnp.float32) - q.astype(jnp.float32), grad, qhat)
+    if per_leaf:
+        R_tree = jax.tree.map(
+            lambda d: (jnp.max(jnp.abs(d)).astype(jnp.float32)
+                       if d.size else jnp.zeros((), jnp.float32)), diff)
+    else:
+        R = tree_inf_norm(diff)
+        R_tree = jax.tree.map(lambda _: R, diff)
+    R_max = jnp.max(jnp.stack(jax.tree_util.tree_leaves(R_tree)))
+    return diff, R_tree, R_max
+
+
+def quantize_codes(d: jax.Array, R: jax.Array, bits: int) -> jax.Array:
+    """Per-leaf quantization codes (paper eq. 5) for one static width:
+
+        q_i = floor( (d_i + R) / (2 tau R) + 1/2 ),  clipped to [0, 2^b - 1]
+
+    R == 0 -> innovation identically zero -> midpoint code (dequantizes to 0).
+    """
+    t = tau(bits)
+    levels = 2 ** bits - 1
+    denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
+    q = jnp.floor((d + R) / denom + 0.5)
+    q = jnp.clip(q, 0, levels)
+    q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q))
+    return q.astype(jnp.uint8 if bits <= 8 else jnp.int32)
+
+
 def quantize_innovation(grad: Pytree, qhat: Pytree, bits: int,
                         per_leaf: bool = False):
     """Quantize ``grad`` against the previous quantized gradient ``qhat``.
 
     Returns ``(qints, R_tree)`` where ``qints`` is a pytree of integer codes
     in ``[0, 2^b - 1]`` (stored as uint8 for b <= 8) and ``R_tree`` mirrors
-    the pytree with per-leaf scalar radii.  Paper eq. (5):
-
-        q_i = floor( (g_i - qhat_i + R) / (2 tau R) + 1/2 )
+    the pytree with per-leaf scalar radii.
 
     ``per_leaf=False`` is the paper-faithful mode: a single global radius
     (one 32-bit sidecar on the wire), replicated into every leaf of
@@ -62,26 +96,9 @@ def quantize_innovation(grad: Pytree, qhat: Pytree, bits: int,
     grid becomes uselessly coarse for everything else; bucketing is the
     standard production fix (recorded as a beyond-paper change).
     """
-    diff = jax.tree.map(lambda g, q: g.astype(jnp.float32) - q.astype(jnp.float32), grad, qhat)
-    if per_leaf:
-        R_tree = jax.tree.map(
-            lambda d: (jnp.max(jnp.abs(d)).astype(jnp.float32)
-                       if d.size else jnp.zeros((), jnp.float32)), diff)
-    else:
-        R = tree_inf_norm(diff)
-        R_tree = jax.tree.map(lambda _: R, diff)
-    t = tau(bits)
-    levels = 2**bits - 1
-
-    def _q(d, R):
-        denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
-        q = jnp.floor((d + R) / denom + 0.5)
-        q = jnp.clip(q, 0, levels)
-        # R == 0 -> innovation identically zero -> midpoint code (dequantizes to 0).
-        q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q))
-        return q.astype(jnp.uint8 if bits <= 8 else jnp.int32)
-
-    return jax.tree.map(_q, diff, R_tree), R_tree
+    diff, R_tree, _ = innovation(grad, qhat, per_leaf)
+    qints = jax.tree.map(lambda d, R: quantize_codes(d, R, bits), diff, R_tree)
+    return qints, R_tree
 
 
 def dequantize_innovation(qints: Pytree, R_tree: Pytree, bits: int) -> Pytree:
@@ -119,31 +136,60 @@ def quantize_roundtrip(grad: Pytree, qhat: Pytree, bits: int,
 
 
 # ---------------------------------------------------------------------------
-# Bit-packing: the physical wire format.  b=4 packs two codes per byte;
-# b=8 is already one byte per code.  Used by the packed-collective wire mode
-# and by the Pallas kernels (kernels/quant_pack.py mirrors this math).
+# Bit-packing: the physical wire format.  b=2 packs four codes per byte,
+# b=4 two per byte; b=8 is already one byte per code.  Used by the
+# packed-collective wire mode and by the Pallas kernels
+# (kernels/quant_pack.py mirrors this math).
 # ---------------------------------------------------------------------------
+
+def pack_codes(q: jax.Array, bits: int) -> jax.Array:
+    """Pack a flat uint8 array of b-bit codes, 8/b per byte (b in {2,4,8}).
+
+    Code i lands in byte i // (8/b) at bit offset b * (i % (8/b)) — the
+    little-end-first layout shared by pack_nibbles and the Pallas kernels.
+    Length must be a multiple of 8/b (pad upstream).
+    """
+    assert bits in (2, 4, 8), bits
+    cpb = 8 // bits
+    if cpb == 1:
+        return q.astype(jnp.uint8)
+    acc = q[0::cpb].astype(jnp.uint8)
+    for j in range(1, cpb):
+        acc = acc | (q[j::cpb].astype(jnp.uint8) << (bits * j))
+    return acc.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, bits: int) -> jax.Array:
+    """Inverse of pack_codes -> flat uint8 array of b-bit codes."""
+    assert bits in (2, 4, 8), bits
+    cpb = 8 // bits
+    if cpb == 1:
+        return packed.astype(jnp.uint8)
+    mask = (1 << bits) - 1
+    parts = [(packed >> (bits * j)) & mask for j in range(cpb)]
+    return jnp.stack(parts, axis=-1).reshape(-1).astype(jnp.uint8)
+
 
 def pack_nibbles(q: jax.Array) -> jax.Array:
     """Pack a flat uint8 array of 4-bit codes, two per byte.
 
     Length must be even (pad upstream).
     """
-    lo = q[0::2].astype(jnp.uint8)
-    hi = q[1::2].astype(jnp.uint8)
-    return (lo | (hi << 4)).astype(jnp.uint8)
+    return pack_codes(q, 4)
 
 
 def unpack_nibbles(packed: jax.Array) -> jax.Array:
     """Inverse of pack_nibbles -> flat uint8 array of 4-bit codes."""
-    lo = packed & 0x0F
-    hi = (packed >> 4) & 0x0F
-    return jnp.stack([lo, hi], axis=-1).reshape(-1).astype(jnp.uint8)
+    return unpack_codes(packed, 4)
 
 
-def upload_bits(p: int, bits: int) -> int:
-    """Paper's wire cost per upload: 32 bits for R + b bits per coordinate."""
-    return 32 + bits * p
+def upload_bits(p: int, bits, *, n_radii: int = 1, bit_sidecar: bool = False):
+    """Wire cost of one upload: ``32 * n_radii`` sidecar bits for the
+    radius/radii, b bits per coordinate, plus (adaptive LAQ only) one byte
+    announcing the chosen bit-width b.  ``bits`` may be a traced value in
+    the adaptive path; with the defaults and a python int this reduces to the
+    paper's ``32 + b p``."""
+    return 32 * n_radii + (8 if bit_sidecar else 0) + bits * p
 
 
 def dense_bits(p: int) -> int:

@@ -27,6 +27,8 @@ class RunResult(NamedTuple):
     cum_uploads: jax.Array   # [K] cumulative communication rounds
     cum_bits: jax.Array      # [K] cumulative wire bits
     quant_err: jax.Array     # [K] max_m R_m (decay diagnostic, paper Fig. 3)
+    mean_bits: jax.Array = None  # [K] mean selected width over uploaders
+                                 # (adaptive-LAQ diagnostic; static otherwise)
 
 
 def run_gradient_based(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
@@ -54,12 +56,12 @@ def run_gradient_based(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
         cst = finalize_step(cst, dtheta_sq)
         gn = tree_sq_norm(jax.grad(global_loss)(params))
         rec = (global_loss(params), gn, cst.total_uploads, cst.total_bits,
-               metrics.radius_max)
+               metrics.radius_max, metrics.mean_bits)
         return (new_params, cst), rec
 
     (params, _), recs = jax.lax.scan(step, (params0, state0), None, length=steps)
-    loss, gn, cu, cb, qe = recs
-    return RunResult(params, loss, gn, cu, cb, qe)
+    loss, gn, cu, cb, qe, mb = recs
+    return RunResult(params, loss, gn, cu, cb, qe, mb)
 
 
 def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
@@ -106,6 +108,7 @@ def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
         if kind == "slaq":
             agg, cst, metrics = aggregate(cst, grads, alpha, scfg)
             qe = metrics.radius_max
+            mb = metrics.mean_bits
         else:
             keys_cmp = jax.random.split(k_cmp, n_workers)
             if kind == "sgd":
@@ -122,15 +125,16 @@ def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
                                total_uploads=cst.total_uploads + n_workers,
                                step=cst.step + 1)
             qe = jnp.zeros(())
+            mb = jnp.mean(bits_m) / p
 
         new_params = jax.tree.map(lambda t, g: t - alpha * g, params, agg)
         if kind == "slaq":
             dsq = tree_sq_norm(jax.tree.map(lambda a, b: a - b, new_params, params))
             cst = finalize_step(cst, dsq)
         gn = tree_sq_norm(jax.grad(global_loss)(params))
-        rec = (global_loss(params), gn, cst.total_uploads, cst.total_bits, qe)
+        rec = (global_loss(params), gn, cst.total_uploads, cst.total_bits, qe, mb)
         return (new_params, cst, key), rec
 
     (params, _, _), recs = jax.lax.scan(step, (params0, state0, key0), None, length=steps)
-    loss, gn, cu, cb, qe = recs
-    return RunResult(params, loss, gn, cu, cb, qe)
+    loss, gn, cu, cb, qe, mb = recs
+    return RunResult(params, loss, gn, cu, cb, qe, mb)

@@ -28,9 +28,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from .adaptive import (BitSchedule, dequantize_dynamic, quantize_dynamic,
+                       select_bits, tau_of_selection)
 from .criterion import CriterionConfig, push_history, should_skip
-from .quantize import (dense_bits, quantize_roundtrip, tree_size, tree_sq_norm,
-                       upload_bits)
+from .quantize import (dense_bits, innovation, quantize_roundtrip, tree_size,
+                       tree_sq_norm, upload_bits)
 
 Pytree = object
 
@@ -46,6 +48,9 @@ class StrategyConfig(NamedTuple):
     state_bf16: bool = False        # store qhat/server_agg in bf16 (beyond-
                                     # paper memory opt; grid values tolerate it
                                     # and the innovation loop self-corrects)
+    bit_schedule: Optional[BitSchedule] = None  # None/"constant" -> fixed
+                                    # bits; adaptive kinds pick b_m^k per
+                                    # worker per round (core/adaptive.py)
     # wire mode is a launch-layer concern ("float" psum vs "packed" all_gather);
     # the algorithmic state machine is identical for both.
 
@@ -56,6 +61,19 @@ class StrategyConfig(NamedTuple):
     @property
     def lazy(self) -> bool:
         return self.kind in ("lag", "laq")
+
+    @property
+    def adaptive(self) -> bool:
+        return (self.quantized and self.bit_schedule is not None
+                and self.bit_schedule.adaptive)
+
+    @property
+    def effective_bits(self) -> int:
+        """Static width of the fixed-bit path (a constant schedule routes
+        here so it is bit-exact with classic fixed-bit LAQ)."""
+        if self.bit_schedule is not None and not self.bit_schedule.adaptive:
+            return self.bit_schedule.bits
+        return self.bits
 
 
 class CommState(NamedTuple):
@@ -69,6 +87,8 @@ class CommState(NamedTuple):
     server_agg: Pytree      # server aggregate  agg^{k-1}
     eps_hat_sq: jax.Array   # ||eps_hat_m||^2 at last upload
     clocks: jax.Array       # t_m
+    bits_spent: jax.Array   # [W] cumulative wire bits per worker (drives the
+                            # adaptive budget controller; diagnostics otherwise)
     theta_hist: jax.Array   # [D]  ||theta^{k+1-d} - theta^{k-d}||^2 ring
     total_bits: jax.Array   # float64-ish accumulator (float32 ok for tests)
     total_uploads: jax.Array
@@ -80,6 +100,8 @@ class RoundMetrics(NamedTuple):
     bits: jax.Array         # wire bits this round
     mean_skip: jax.Array    # fraction of workers skipping
     radius_max: jax.Array   # max_m R_m^k (0 for unquantized)
+    mean_bits: jax.Array    # mean selected width over uploading workers
+                            # (== the static width for fixed-bit runs)
 
 
 def init_comm_state(grad_template: Pytree, n_workers: int,
@@ -101,6 +123,7 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
         server_agg=jax.tree.map(lambda l: jnp.zeros(l.shape, sdtype), grad_template),
         eps_hat_sq=jnp.zeros(wshape, jnp.float32),
         clocks=jnp.full(wshape, clock0, jnp.int32),
+        bits_spent=jnp.zeros(wshape, jnp.float32),
         theta_hist=jnp.zeros((cfg.criterion.D,), jnp.float32),
         total_bits=jnp.zeros((), jnp.float32),
         total_uploads=jnp.zeros((), jnp.int32),
@@ -113,26 +136,48 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
 # ---------------------------------------------------------------------------
 
 def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
-                  theta_hist, alpha, n_workers: int, cfg: StrategyConfig):
-    """One worker's quantize + skip decision.
+                  bits_spent_m, theta_hist, alpha, n_workers: int,
+                  cfg: StrategyConfig, step=None):
+    """One worker's bit-width selection + quantize + skip decision.
 
     Returns ``(delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-    bits_m, R_m)`` where ``delta_masked`` is this worker's contribution to the
-    server-aggregate refinement (zero if the upload is skipped).
+    bits_m, R_m, width_m)`` where ``delta_masked`` is this worker's
+    contribution to the server-aggregate refinement (zero if the upload is
+    skipped) and ``width_m`` the selected per-coordinate width b_m^k (the
+    static width on the fixed path, 32 for dense uploads).
     """
     p = tree_size(grad_m)
-    if cfg.quantized:
-        q_new, delta, R, err_sq = quantize_roundtrip(grad_m, qhat_m, cfg.bits,
+    n_sidecars = (len(jax.tree_util.tree_leaves(grad_m))
+                  if cfg.per_leaf_radius else 1)
+    if cfg.adaptive:
+        sched = cfg.bit_schedule
+        step_ = jnp.zeros((), jnp.int32) if step is None else step
+        diff, R_tree, R = innovation(grad_m, qhat_m, cfg.per_leaf_radius)
+        width_m, onehot = select_bits(sched, R, bits_spent_m, step_, p,
+                                      n_radii=n_sidecars)
+        codes = quantize_dynamic(diff, R_tree, sched.grid, onehot)
+        delta = dequantize_dynamic(codes, R_tree,
+                                   tau_of_selection(sched.grid, onehot))
+        q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d,
+                             qhat_m, delta)
+        err_sq = tree_sq_norm(jax.tree.map(
+            lambda g, qn: g.astype(jnp.float32) - qn, grad_m, q_new))
+        bits_if_upload = upload_bits(p, width_m, n_radii=n_sidecars,
+                                     bit_sidecar=True)
+    elif cfg.quantized:
+        q_new, delta, R, err_sq = quantize_roundtrip(grad_m, qhat_m,
+                                                     cfg.effective_bits,
                                                      cfg.per_leaf_radius)
-        n_sidecars = (len(jax.tree_util.tree_leaves(grad_m))
-                      if cfg.per_leaf_radius else 1)
-        bits_if_upload = float(upload_bits(p, cfg.bits)) + 32.0 * (n_sidecars - 1)
+        bits_if_upload = float(upload_bits(p, cfg.effective_bits,
+                                           n_radii=n_sidecars))
+        width_m = jnp.full((), float(cfg.effective_bits), jnp.float32)
     else:
         q_new = jax.tree.map(lambda g: g.astype(jnp.float32), grad_m)
         delta = jax.tree.map(lambda g, q: g - q, q_new, qhat_m)
         R = jnp.zeros((), jnp.float32)
         err_sq = jnp.zeros((), jnp.float32)
         bits_if_upload = float(dense_bits(p))
+        width_m = jnp.full((), 32.0, jnp.float32)
 
     innovation_sq = tree_sq_norm(delta)
 
@@ -150,7 +195,8 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
     eps_hat_sq_new = jnp.where(uploaded, err_sq, eps_hat_sq_m)
     clock_new = jnp.where(uploaded, 0, clock_m + 1).astype(jnp.int32)
     bits_m = fup * bits_if_upload
-    return delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded, bits_m, R
+    return (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
+            bits_m, R, width_m)
 
 
 # ---------------------------------------------------------------------------
@@ -164,15 +210,15 @@ def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig):
     ``theta <- theta - alpha * agg_grad`` (or feeds agg_grad to an optimizer)
     and then calls :func:`finalize_step` with the realized parameter change.
     """
-    n_workers = jax.tree_util.tree_leaves(state.clocks)[0].shape[0] \
-        if hasattr(state.clocks, "shape") and state.clocks.ndim else 1
     n_workers = state.clocks.shape[0]
 
     upd = functools.partial(worker_update, theta_hist=state.theta_hist,
-                            alpha=alpha, n_workers=n_workers, cfg=cfg)
-    (delta_masked, qhat_new, eps_hat_sq_new, clock_new,
-     uploaded, bits_m, R_m) = jax.vmap(upd)(grads, state.qhat,
-                                            state.eps_hat_sq, state.clocks)
+                            alpha=alpha, n_workers=n_workers, cfg=cfg,
+                            step=state.step)
+    (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
+     bits_m, R_m, width_m) = jax.vmap(upd)(grads, state.qhat,
+                                           state.eps_hat_sq, state.clocks,
+                                           state.bits_spent)
 
     # Server recursion: agg^k = agg^{k-1} + sum_m deltaQ_m.
     agg = jax.tree.map(lambda a, d: a + jnp.sum(d, axis=0),
@@ -180,12 +226,16 @@ def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig):
 
     uploads = jnp.sum(uploaded.astype(jnp.int32))
     bits = jnp.sum(bits_m)
+    fup = uploaded.astype(jnp.float32)
     metrics = RoundMetrics(uploads=uploads, bits=bits,
                            mean_skip=1.0 - uploads / n_workers,
-                           radius_max=jnp.max(R_m))
+                           radius_max=jnp.max(R_m),
+                           mean_bits=jnp.sum(width_m * fup)
+                           / jnp.maximum(jnp.sum(fup), 1.0))
     new_state = state._replace(
         qhat=qhat_new, server_agg=agg, eps_hat_sq=eps_hat_sq_new,
         clocks=clock_new,
+        bits_spent=state.bits_spent + bits_m,
         total_bits=state.total_bits + bits,
         total_uploads=state.total_uploads + uploads,
         step=state.step + 1,

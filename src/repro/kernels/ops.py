@@ -2,7 +2,8 @@
 
 Handles padding to the kernel block size, flat<->leaf reshaping, and backend
 selection: interpret=True on CPU (the validation container), compiled Pallas
-on TPU.
+on TPU.  Covers the full adaptive-LAQ width grid: b in {2, 4, 8} packs
+4 / 2 / 1 codes per byte.
 """
 from __future__ import annotations
 

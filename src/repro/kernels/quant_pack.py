@@ -9,8 +9,9 @@ pass instead of XLA's multi-kernel materialization of the intermediate code
 and float tensors.
 
 Tiling: flat vectors are processed in LANE-aligned blocks (multiples of
-1024 floats = 8 sublanes x 128 lanes); bits=4 packs two codes per byte so
-the packed block is block/2 bytes. All shapes are padded upstream in ops.py.
+1024 floats = 8 sublanes x 128 lanes); bits=4 packs two codes per byte and
+bits=2 four codes per byte, so the packed block is block*b/8 bytes.  All
+shapes are padded upstream in ops.py.
 
 Validated in interpret mode on CPU against kernels/ref.py (tests sweep
 shapes x bits x dtypes); compiled lowering targets TPU.
@@ -42,11 +43,15 @@ def _quantize_pack_kernel(bits, diff_ref, R_ref, packed_ref, delta_ref):
     t = 1.0 / (2.0 ** bits - 1.0)
     delta = 2.0 * t * R * q.astype(jnp.float32) - R
     delta_ref[...] = jnp.where(R > 0, delta, jnp.zeros_like(delta))
-    if bits == 4:
-        q2 = q.reshape(-1, 2)
-        packed_ref[...] = (q2[:, 0] | (q2[:, 1] << 4)).astype(jnp.uint8)
-    else:
+    if bits == 8:
         packed_ref[...] = q
+    else:
+        cpb = 8 // bits                      # codes per byte (2 or 4)
+        qs = q.reshape(-1, cpb)
+        acc = qs[:, 0]
+        for j in range(1, cpb):
+            acc = acc | (qs[:, j] << (bits * j))
+        packed_ref[...] = acc.astype(jnp.uint8)
 
 
 def quantize_pack_pallas(diff, R, bits: int, *, interpret: bool = True):
@@ -56,7 +61,8 @@ def quantize_pack_pallas(diff, R, bits: int, *, interpret: bool = True):
     """
     n = diff.shape[0]
     assert n % BLOCK == 0, n
-    out_block = BLOCK // 2 if bits == 4 else BLOCK
+    assert bits in (2, 4, 8), bits
+    out_block = BLOCK * bits // 8
     grid = (n // BLOCK,)
     return pl.pallas_call(
         functools.partial(_quantize_pack_kernel, bits),
@@ -82,12 +88,13 @@ def _dequant_acc_kernel(bits, W, packed_ref, R_ref, keep_ref, out_ref):
     acc = jnp.zeros(out_ref.shape, jnp.float32)
     for w in range(W):                       # W is static & small (workers/pods)
         pk = packed_ref[w, :]
-        if bits == 4:
-            lo = (pk & 0x0F).astype(jnp.float32)
-            hi = ((pk >> 4) & 0x0F).astype(jnp.float32)
-            codes = jnp.stack([lo, hi], axis=-1).reshape(-1)
-        else:
+        if bits == 8:
             codes = pk.astype(jnp.float32)
+        else:
+            mask = (1 << bits) - 1
+            parts = [((pk >> (bits * j)) & mask).astype(jnp.float32)
+                     for j in range(8 // bits)]
+            codes = jnp.stack(parts, axis=-1).reshape(-1)
         R = R_ref[w]
         delta = 2.0 * t * R * codes - R
         delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
@@ -98,6 +105,7 @@ def _dequant_acc_kernel(bits, W, packed_ref, R_ref, keep_ref, out_ref):
 def dequant_acc_pallas(packed, R, keep, bits: int, n: int, *,
                        interpret: bool = True):
     """packed: [W, n*bits/8] uint8; R, keep: [W] f32 -> f32 [n] (summed)."""
+    assert bits in (2, 4, 8), bits
     W, nbytes = packed.shape
     in_block = BLOCK * bits // 8
     assert nbytes % in_block == 0, (nbytes, in_block)

@@ -15,7 +15,7 @@ def quantize_pack_ref(diff: jnp.ndarray, R: jnp.ndarray, bits: int):
     Returns (packed uint8 [n*bits/8], q_new_delta f32 [n]) where
     q_new_delta = dequantize(codes) (the innovation actually applied).
     """
-    assert bits in (4, 8)
+    assert bits in (2, 4, 8)
     t = 1.0 / (2.0 ** bits - 1.0)
     levels = 2 ** bits - 1
     denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
@@ -24,7 +24,10 @@ def quantize_pack_ref(diff: jnp.ndarray, R: jnp.ndarray, bits: int):
     q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q)).astype(jnp.uint8)
     delta = 2.0 * t * R * q.astype(jnp.float32) - R
     delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
-    if bits == 4:
+    if bits == 2:
+        packed = (q[0::4] | (q[1::4] << 2) | (q[2::4] << 4)
+                  | (q[3::4] << 6)).astype(jnp.uint8)
+    elif bits == 4:
         packed = (q[0::2] | (q[1::2] << 4)).astype(jnp.uint8)
     else:
         packed = q
@@ -34,12 +37,13 @@ def quantize_pack_ref(diff: jnp.ndarray, R: jnp.ndarray, bits: int):
 def dequant_acc_ref(packed: jnp.ndarray, R: jnp.ndarray, keep: jnp.ndarray,
                     bits: int, n: int):
     """packed [W, n*bits/8] uint8, R [W], keep [W] -> sum_w delta_w, f32 [n]."""
-    assert bits in (4, 8)
+    assert bits in (2, 4, 8)
     t = 1.0 / (2.0 ** bits - 1.0)
-    if bits == 4:
-        lo = (packed & 0x0F).astype(jnp.float32)
-        hi = ((packed >> 4) & 0x0F).astype(jnp.float32)
-        codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)[:, :n]
+    if bits < 8:
+        mask = (1 << bits) - 1
+        parts = [((packed >> (bits * j)) & mask).astype(jnp.float32)
+                 for j in range(8 // bits)]
+        codes = jnp.stack(parts, axis=-1).reshape(packed.shape[0], -1)[:, :n]
     else:
         codes = packed.astype(jnp.float32)[:, :n]
     Rw = R[:, None]

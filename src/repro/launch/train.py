@@ -18,6 +18,30 @@ skip criterion, and the aggregation collective is explicit:
   the dry-run HLO and the roofline collective term.  Pays off at pod
   granularity (W=2) where the exchange crosses the slow DCN link.
 
+Packed wire format (per worker, per round):
+
+* **fixed-bit** (``bit_schedule`` None/constant, width b in {2, 4, 8}) —
+  per leaf, codes packed little-end-first at 8/b codes per byte when the
+  leaf's last dim divides 8/b (odd last dims ship raw uint8 codes), plus two
+  sidecars exchanged once per round: the radius ``R`` (f32 per leaf for
+  ``per_leaf_radius``, else one global f32) and the skip-mask bit.
+* **adaptive** (``bit_schedule`` radius/budget, core/adaptive.py) — each
+  worker additionally announces its selected width ``b_m^k`` as a third
+  sidecar, and every receiver decodes with the sender's tau(b_m^k).  The
+  payload buffer is *provisioned* at the static width max(grid) — SPMD
+  collectives need static shapes, so the adaptivity shows up in the exact
+  wire-bit accounting (``upload_bits`` with variable b + the width sidecar)
+  rather than in the buffer shape; a grid capped below 8 shrinks the
+  physical buffer correspondingly.  Decode taus come from a grid-table
+  lookup, never ``1/(2^b - 1)`` float arithmetic, so packed and float wires
+  stay bit-identical.
+* **0.4.x jax degradation** — the 0.4.x partitioner only lowers ``psum``
+  inside partial-auto shard_map (compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES),
+  so the exchange falls back to each worker decoding its *own* payload
+  through the identical pack->unpack->dequant math and psum-ing the f32
+  delta: bit-identical results, analytic bit accounting, no physical byte
+  saving on that jax.
+
 Tensor parallelism (``model`` axis) stays under GSPMD: inside the manual
 region, model-sharded arrays keep their global shapes and einsum/norm
 reductions over them lower to the usual collectives.
@@ -32,9 +56,11 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.quantize import (dequantize_innovation, pack_nibbles,
-                                 quantize_innovation, tree_sq_norm,
-                                 unpack_nibbles)
+from repro import compat
+from repro.core.adaptive import (dequantize_dynamic, quantize_dynamic,
+                                 tau_of_selection, tau_of_width)
+from repro.core.quantize import (dequantize_innovation, innovation,
+                                 quantize_innovation, tree_sq_norm)
 from repro.core.strategy import CommState, StrategyConfig, worker_update
 from repro.core.criterion import push_history
 from repro.models import lm_loss, param_pspecs
@@ -67,7 +93,7 @@ def _unsqueeze0(tree):
 
 
 def _axis_size_static(worker_axes) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     axes = (worker_axes,) if isinstance(worker_axes, str) else worker_axes
     n = 1
     for a in axes:
@@ -75,8 +101,8 @@ def _axis_size_static(worker_axes) -> int:
     return n
 
 
-def _packed_aggregate(grads, qhat, skip_mask, bits: int, worker_axes,
-                      per_leaf: bool, pspecs=None):
+def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
+                      worker_axes, pspecs=None, width=None):
     """The packed-uint8 wire: per-leaf quantize -> pack -> all_gather ->
     dequantize -> masked sum.  Returns (sum_of_innovations, q_new_tree).
 
@@ -84,29 +110,65 @@ def _packed_aggregate(grads, qhat, skip_mask, bits: int, worker_axes,
     payload's model-axis sharding through the exchange: without it GSPMD
     replicates the payload over ``model`` *before* the worker-axis
     all_gather, multiplying the exchanged bytes by the model-axis size.
+
+    ``width`` (the per-shard selected bit-width from ``worker_update``)
+    switches on the adaptive wire: codes are produced at the selected width,
+    the buffer is provisioned at max(grid), and the width rides along as a
+    sidecar so receivers decode with the sender's tau (see module docstring).
     """
     from repro.models.layers import maybe_constrain
-    qints, R_tree = quantize_innovation(grads, qhat, bits, per_leaf)
+    per_leaf = strategy.per_leaf_radius
+    adaptive = width is not None
+    if adaptive:
+        grid = strategy.bit_schedule.grid
+        onehot = (jnp.asarray(grid, jnp.float32) == width).astype(jnp.float32)
+        diff, R_tree, _ = innovation(grads, qhat, per_leaf)
+        qints = quantize_dynamic(diff, R_tree, grid, onehot)
+        provision = max(grid)
+    else:
+        bits = strategy.effective_bits
+        qints, R_tree = quantize_innovation(grads, qhat, bits, per_leaf)
+        provision = bits
+    cpb = 8 // provision                     # codes per payload byte
     keep = jnp.logical_not(skip_mask).astype(jnp.float32)
-    keep_w = jax.lax.all_gather(keep, worker_axes)
+    n_workers = _axis_size_static(worker_axes)
+    use_gather = (compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES and n_workers != 2)
+    use_permute = (compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES and n_workers == 2)
+    # per-round sidecars exchanged ONCE, outside the per-leaf loop (XLA does
+    # not CSE collectives; a per-leaf exchange would issue one tiny
+    # collective per parameter tensor)
+    _perm2 = [(0, 1), (1, 0)]
+    t_self = tau_of_selection(grid, onehot) if adaptive else None
+    if use_gather:
+        keep_w = jax.lax.all_gather(keep, worker_axes)              # [W]
+        if adaptive:
+            width_w = jax.lax.all_gather(width, worker_axes)        # [W] sidecar
+            tau_w = tau_of_width(grid, width_w)                     # [W]
+    elif use_permute:
+        peer_keep = jax.lax.ppermute(keep, worker_axes, _perm2)
+        if adaptive:
+            t_peer = jax.lax.ppermute(t_self, worker_axes, _perm2)
 
     def _packable(q):
-        return bits == 4 and q.ndim >= 1 and q.shape[-1] % 2 == 0
+        return cpb > 1 and q.ndim >= 1 and q.shape[-1] % cpb == 0
 
     def leaf_payload(q):
-        # pack two 4-bit codes per byte ALONG THE LAST DIM (no flatten: a
-        # flatten of a model-sharded leaf forces GSPMD to regather it, and
-        # at large meshes trips an XLA spmd_partitioner assertion)
+        # pack 8/b codes per byte ALONG THE LAST DIM (no flatten: a flatten
+        # of a model-sharded leaf forces GSPMD to regather it, and at large
+        # meshes trips an XLA spmd_partitioner assertion)
         if _packable(q):
-            pairs = q.reshape(q.shape[:-1] + (q.shape[-1] // 2, 2))
-            return (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
-        return q                          # odd last dim or b == 8: raw codes
+            parts = q.reshape(q.shape[:-1] + (q.shape[-1] // cpb, cpb))
+            acc = parts[..., 0]
+            for j in range(1, cpb):
+                acc = acc | (parts[..., j] << (provision * j))
+            return acc.astype(jnp.uint8)
+        return q              # indivisible last dim or provision 8: raw codes
 
     def leaf_unpack(payload, orig):
         if _packable(orig):
-            lo = payload & 0x0F
-            hi = (payload >> 4) & 0x0F
-            return jnp.stack([lo, hi], axis=-1).reshape(orig.shape)
+            mask = (1 << provision) - 1
+            parts = [(payload >> (provision * j)) & mask for j in range(cpb)]
+            return jnp.stack(parts, axis=-1).reshape(orig.shape)
         return payload
 
     def gather_dequant_sum(q, R, orig, spec):
@@ -119,44 +181,70 @@ def _packed_aggregate(grads, qhat, skip_mask, bits: int, worker_axes,
         Rw = jax.lax.all_gather(R, worker_axes)                     # [W]
         W = Rw.shape[0]
         codes = jax.vmap(lambda p_: leaf_unpack(p_, orig))(payload)
-        t = 1.0 / (2.0 ** bits - 1.0)
+        if adaptive:
+            t = tau_w.reshape((W,) + (1,) * orig.ndim)
+        else:
+            t = 1.0 / (2.0 ** provision - 1.0)
         Rb = Rw.reshape((W,) + (1,) * orig.ndim)
         kb = keep_w.reshape((W,) + (1,) * orig.ndim)
         delta = (2.0 * t * Rb * codes.astype(jnp.float32) - Rb)
         delta = jnp.where(Rb > 0, delta, 0.0) * kb
         return jnp.sum(delta, axis=0)
 
+    def local_decode_psum(q, R, orig, spec):
+        # 0.4.x jax: the partial-auto partitioner only lowers psum (see
+        # compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES), so every worker decodes
+        # its OWN payload through the full pack->unpack->dequant wire math
+        # and the transport is a float psum.  unpack(pack(codes)) == codes,
+        # so this is bit-identical to the real payload exchange — only the
+        # bytes on the link differ (accounting stays analytic either way).
+        codes = leaf_unpack(leaf_payload(q), orig).astype(jnp.float32)
+        t = t_self if adaptive else 1.0 / (2.0 ** provision - 1.0)
+        d = 2.0 * t * R * codes - R
+        d = jnp.where(R > 0, d, 0.0) * keep
+        return jax.lax.psum(d, worker_axes)
+
     def permute_dequant_sum(q, R, orig, spec):
         # two-worker wire (pods): a single collective-permute payload
         # exchange — p*b/8 bytes on the link, nothing for GSPMD to re-shard
-        perm = [(0, 1), (1, 0)]
         pl = leaf_payload(q)
         if spec is not None:
             pl = maybe_constrain(pl, *spec)
-        peer_pl = jax.lax.ppermute(pl, worker_axes, perm)
-        peer_R = jax.lax.ppermute(R, worker_axes, perm)
-        peer_keep = jax.lax.ppermute(keep, worker_axes, perm)
-        t = 1.0 / (2.0 ** bits - 1.0)
+        peer_pl = jax.lax.ppermute(pl, worker_axes, _perm2)
+        peer_R = jax.lax.ppermute(R, worker_axes, _perm2)
+        if adaptive:
+            tv_self, tv_peer = t_self, t_peer
+        else:
+            tv_self = tv_peer = 1.0 / (2.0 ** provision - 1.0)
 
-        def dq(codes_pl, Rv):
+        def dq(codes_pl, Rv, tv):
             codes = leaf_unpack(codes_pl, orig).astype(jnp.float32)
-            d = 2.0 * t * Rv * codes - Rv
+            d = 2.0 * tv * Rv * codes - Rv
             return jnp.where(Rv > 0, d, 0.0)
 
-        return dq(pl, R) * keep + dq(peer_pl, peer_R) * peer_keep
+        return (dq(pl, R, tv_self) * keep
+                + dq(peer_pl, peer_R, tv_peer) * peer_keep)
 
     q_leaves, treedef = jax.tree_util.tree_flatten(qints)
     r_leaves = jax.tree_util.tree_leaves(R_tree)
     g_leaves = jax.tree_util.tree_leaves(grads)
     s_leaves = (jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, tuple))
                 if pspecs is not None else [None] * len(q_leaves))
-    n_workers = _axis_size_static(worker_axes)
-    leaf_fn = permute_dequant_sum if n_workers == 2 else gather_dequant_sum
+    if use_gather:
+        leaf_fn = gather_dequant_sum
+    elif compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES:
+        leaf_fn = permute_dequant_sum          # two-worker (pod) wire
+    else:
+        leaf_fn = local_decode_psum            # 0.4.x psum-only degradation
     agg_leaves = [leaf_fn(q, r, g, s) for q, r, g, s
                   in zip(q_leaves, r_leaves, g_leaves, s_leaves)]
     agg_delta = jax.tree_util.tree_unflatten(treedef, agg_leaves)
     # local reconstruction of this worker's new quantized gradient
-    delta_local = dequantize_innovation(qints, R_tree, bits)
+    if adaptive:
+        delta_local = dequantize_dynamic(qints, R_tree,
+                                         tau_of_selection(grid, onehot))
+    else:
+        delta_local = dequantize_innovation(qints, R_tree, provision)
     q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d, qhat, delta_local)
     return agg_delta, q_new
 
@@ -180,8 +268,13 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
     assert wire in ("float", "packed")
     grad_pspecs = None
     if wire == "packed":
-        assert strategy.quantized and strategy.bits in (4, 8), \
-            "packed wire requires a 4- or 8-bit quantized strategy"
+        assert strategy.quantized, "packed wire requires a quantized strategy"
+        if strategy.adaptive:
+            assert all(b in (2, 4, 8) for b in strategy.bit_schedule.grid), \
+                "packed wire covers the {2,4,8} grid"
+        else:
+            assert strategy.effective_bits in (2, 4, 8), \
+                "packed wire requires a 2-, 4- or 8-bit quantized strategy"
         from repro.models import init_params
         params_abs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
         grad_pspecs = param_pspecs(cfg, params_abs, mesh.shape["model"])
@@ -190,6 +283,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         qhat = _squeeze0(comm.qhat)
         eps_hat_sq = jnp.squeeze(comm.eps_hat_sq, 0)
         clock = jnp.squeeze(comm.clocks, 0)
+        bits_spent = jnp.squeeze(comm.bits_spent, 0)
 
         def loss_fn(p, b):
             return lm_loss(p, b, cfg) / W          # sum_m loss_m == global mean
@@ -210,7 +304,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
 
             zero = (jnp.zeros((), jnp.float32),
                     jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
-            if cfg.scan_layers:
+            if cfg.scan_layers and not compat.needs_loop_unrolling():
                 (loss, grads), _ = jax.lax.scan(acc_body, zero, mb)
             else:
                 # probe mode (unrolled layers): unroll microbatches too so
@@ -221,17 +315,18 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
                 loss, grads = carry
 
         (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-         bits_m, R) = worker_update(grads, qhat, eps_hat_sq, clock,
-                                    comm.theta_hist, lr, W, strategy)
+         bits_m, R, width_m) = worker_update(grads, qhat, eps_hat_sq, clock,
+                                             bits_spent, comm.theta_hist, lr,
+                                             W, strategy, step=comm.step)
 
         if wire == "float":
             agg_delta = jax.tree.map(
                 functools.partial(jax.lax.psum, axis_name=wa), delta_masked)
         else:
             skip = jnp.logical_not(uploaded)
-            agg_delta, _ = _packed_aggregate(grads, qhat, skip, strategy.bits,
-                                             wa, strategy.per_leaf_radius,
-                                             pspecs=grad_pspecs)
+            agg_delta, _ = _packed_aggregate(
+                grads, qhat, skip, strategy, wa, pspecs=grad_pspecs,
+                width=width_m if strategy.adaptive else None)
 
         agg = jax.tree.map(lambda a, d: a.astype(jnp.float32) + d,
                            comm.server_agg, agg_delta)
@@ -247,6 +342,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             server_agg=agg_store,
             eps_hat_sq=eps_hat_sq_new[None],
             clocks=clock_new[None],
+            bits_spent=(bits_spent + bits_m)[None],
             theta_hist=push_history(comm.theta_hist, dtheta_sq),
             total_bits=comm.total_bits + jax.lax.psum(bits_m, wa),
             total_uploads=comm.total_uploads
@@ -269,10 +365,10 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         specs_comm = CommState(
             qhat=jax.tree.map(lambda _: P(wa), comm.qhat),
             server_agg=jax.tree.map(lambda _: P(), comm.server_agg),
-            eps_hat_sq=P(wa), clocks=P(wa), theta_hist=P(),
+            eps_hat_sq=P(wa), clocks=P(wa), bits_spent=P(wa), theta_hist=P(),
             total_bits=P(), total_uploads=P(), step=P(),
         )
-        sm = jax.shard_map(
+        sm = compat.shard_map(
             sharded_step, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), state.params),
                       jax.tree.map(lambda _: P(), state.opt_state),
@@ -350,6 +446,7 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
                                 comm_abs.server_agg, pspecs),
         eps_hat_sq=shard(comm_abs.eps_hat_sq, P(wa)),
         clocks=shard(comm_abs.clocks, P(wa)),
+        bits_spent=shard(comm_abs.bits_spent, P(wa)),
         theta_hist=shard(comm_abs.theta_hist, P()),
         total_bits=shard(comm_abs.total_bits, P()),
         total_uploads=shard(comm_abs.total_uploads, P()),

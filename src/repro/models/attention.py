@@ -23,6 +23,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from .config import ModelConfig
 from .layers import apply_rope, normal_init, rms_norm
 
@@ -101,7 +103,13 @@ def chunked_causal_attention(q, k, v, q_positions, kv_positions, cfg: ModelConfi
         m0 = jnp.full((B, KV, G, Cq), -jnp.inf, jnp.float32)
         l0 = jnp.zeros((B, KV, G, Cq), jnp.float32)
         a0 = jnp.zeros((B, KV, G, Cq, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kp))
+        if compat.needs_loop_unrolling():
+            carry = (m0, l0, a0)
+            for j in range(n_kv):
+                carry, _ = body(carry, (kc[j], vc[j], kp[j]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kp))
         o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
         # [B,KV,G,Cq,hd] -> [B,Cq,KV,G,hd] -> [B,Cq,H,hd]
         out_chunks.append(o.transpose(0, 3, 1, 2, 4).reshape(B, Cq, H, hd))

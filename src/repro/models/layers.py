@@ -5,11 +5,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def maybe_constrain(x, *spec):
     """with_sharding_constraint guarded on an ambient mesh having the axes."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         names = getattr(mesh, "axis_names", ()) or ()
         for s in spec:
             if s is not None and s not in names:

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from .config import ModelConfig
 from .layers import normal_init
 
@@ -40,7 +42,7 @@ def _shard_experts(x, spec):
     cotangents.
     """
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if mesh is None or "model" not in mesh.axis_names:
             return x
         return jax.lax.with_sharding_constraint(x, P(*spec))

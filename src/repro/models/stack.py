@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from .attention import (attention_forward, decode_attention, init_attention,
                         init_kv_cache)
 from .config import ModelConfig
@@ -109,7 +111,7 @@ def forward(params, tokens, cfg: ModelConfig):
     def maybe_remat(fn):
         return jax.checkpoint(fn) if cfg.remat else fn
 
-    if not cfg.scan_layers:
+    if not cfg.scan_layers or compat.needs_loop_unrolling():
         x, aux = _forward_unrolled(params, x, positions, cfg, maybe_remat)
     elif cfg.arch_type in ("dense", "moe", "vlm", "audio"):
         @maybe_remat
@@ -163,7 +165,9 @@ def _layer_slice(tree, i):
 
 
 def _forward_unrolled(params, x, positions, cfg: ModelConfig, maybe_remat):
-    """Python-unrolled stack (exact cost_analysis; roofline probes only)."""
+    """Python-unrolled stack (exact cost_analysis for roofline probes; also
+    the mandatory path inside shard_map on 0.4.x jax — see
+    ``compat.needs_loop_unrolling``)."""
     aux = jnp.zeros((), jnp.float32)
     for i in range(cfg.n_layers):
         bp = _layer_slice(params["blocks"], i)

@@ -1,0 +1,170 @@
+"""Shared test config.
+
+Provides a minimal, deterministic fallback implementation of the `hypothesis`
+API surface these tests use when the real package is unavailable (the
+offline validation container has no network; CI installs the real thing via
+``pip install -e .[test]``).  The fallback draws a fixed number of seeded
+pseudo-random examples per test — strictly weaker than hypothesis (no
+shrinking, no example database) but it keeps every property test collecting
+and exercising the invariants everywhere.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+
+def _install_hypothesis_fallback():
+    import numpy as np
+
+    class Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise RuntimeError("filter predicate too strict")
+            return Strategy(draw)
+
+        def map(self, fn):
+            return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def floats(min_value=None, max_value=None, width=64, **_):
+        lo = -1e9 if min_value is None else float(min_value)
+        hi = 1e9 if max_value is None else float(max_value)
+
+        def draw(rng):
+            # bias towards the endpoints (hypothesis probes corners first)
+            r = rng.rand()
+            if r < 0.05:
+                v = lo
+            elif r < 0.1:
+                v = hi
+            else:
+                v = lo + (hi - lo) * rng.rand()
+            if width == 32:
+                v = float(np.float32(v))
+                v = min(max(v, lo), hi)
+            return v
+        return Strategy(draw)
+
+    def integers(min_value, max_value):
+        def draw(rng):
+            r = rng.rand()
+            if r < 0.05:
+                return int(min_value)
+            if r < 0.1:
+                return int(max_value)
+            return int(rng.randint(min_value, max_value + 1))
+        return Strategy(draw)
+
+    def booleans():
+        return Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return Strategy(lambda rng: seq[rng.randint(0, len(seq))])
+
+    def tuples(*strats):
+        return Strategy(lambda rng: tuple(_draw_any(s, rng) for s in strats))
+
+    def just(v):
+        return Strategy(lambda rng: v)
+
+    def _draw_any(v, rng):
+        return v.draw(rng) if isinstance(v, Strategy) else v
+
+    def array_shapes(min_dims=1, max_dims=3, min_side=1, max_side=10):
+        def draw(rng):
+            nd = rng.randint(min_dims, max_dims + 1)
+            return tuple(int(rng.randint(min_side, max_side + 1))
+                         for _ in range(nd))
+        return Strategy(draw)
+
+    def arrays(dtype, shape, elements=None, **_):
+        def draw(rng):
+            shp = _draw_any(shape, rng)
+            if isinstance(shp, int):
+                shp = (shp,)
+            n = int(np.prod(shp)) if shp else 1
+            if elements is None:
+                flat = rng.rand(n)
+            else:
+                flat = np.array([_draw_any(elements, rng) for _ in range(n)])
+            return flat.astype(dtype).reshape(shp)
+        return Strategy(draw)
+
+    def given(*gargs, **gkwargs):
+        assert not gargs, "fallback @given supports keyword strategies only"
+
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                # settings() may sit above or below given(): check both
+                max_examples = getattr(
+                    wrapper, "_fallback_max_examples",
+                    getattr(fn, "_fallback_max_examples", 25))
+                seed = zlib.adler32(fn.__qualname__.encode())
+                rng = np.random.RandomState(seed)
+                for _ in range(max_examples):
+                    drawn = {k: s.draw(rng) for k, s in gkwargs.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except _FallbackAssume:
+                        continue          # rejected example, like hypothesis
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples=25, **_):
+        def deco(fn):
+            # applied below @given (decorators run bottom-up): tag the raw fn
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = lambda cond: None if cond else (_ for _ in ()).throw(
+        _FallbackAssume())
+    hyp.__is_repro_fallback__ = True
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name, obj in (("floats", floats), ("integers", integers),
+                      ("booleans", booleans), ("sampled_from", sampled_from),
+                      ("tuples", tuples), ("just", just)):
+        setattr(st_mod, name, obj)
+    hyp.strategies = st_mod
+
+    extra_mod = types.ModuleType("hypothesis.extra")
+    hnp_mod = types.ModuleType("hypothesis.extra.numpy")
+    hnp_mod.arrays = arrays
+    hnp_mod.array_shapes = array_shapes
+    extra_mod.numpy = hnp_mod
+    hyp.extra = extra_mod
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+    sys.modules["hypothesis.extra"] = extra_mod
+    sys.modules["hypothesis.extra.numpy"] = hnp_mod
+
+
+class _FallbackAssume(Exception):
+    pass
+
+
+try:
+    import hypothesis  # noqa: F401  (the real package, when installed)
+except ImportError:
+    _install_hypothesis_fallback()

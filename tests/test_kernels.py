@@ -12,7 +12,7 @@ from repro.kernels.quant_pack import BLOCK
 from repro.kernels.ref import dequant_acc_ref, quantize_pack_ref
 
 
-@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("bits", [2, 4, 8])
 @pytest.mark.parametrize("n", [BLOCK, 2 * BLOCK, 3 * BLOCK + 17, 5000, 128])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_quantize_pack_matches_ref(bits, n, dtype):
@@ -33,7 +33,7 @@ def test_quantize_pack_matches_ref(bits, n, dtype):
     assert float(jnp.max(jnp.abs(diff - delta))) <= float(tau * R) + 1e-5
 
 
-@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("bits", [2, 4, 8])
 @pytest.mark.parametrize("W", [1, 2, 4, 16])
 def test_dequant_acc_matches_ref(bits, W):
     n = 2 * BLOCK
@@ -63,7 +63,7 @@ def test_roundtrip_wire_identity():
                                np.asarray(sum(deltas)), atol=1e-4)
 
 
-@hypothesis.given(scale=st.floats(1e-3, 1e3), bits=st.sampled_from([4, 8]))
+@hypothesis.given(scale=st.floats(1e-3, 1e3), bits=st.sampled_from([2, 4, 8]))
 @hypothesis.settings(max_examples=20, deadline=None)
 def test_property_kernel_error_bound(scale, bits):
     key = jax.random.PRNGKey(int(scale * 1000) % 2**31)

@@ -78,6 +78,7 @@ import json
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, smoke_config
+from repro.core.adaptive import BitSchedule
 from repro.core.strategy import StrategyConfig
 from repro.optim import sgd
 from repro.launch.train import (make_train_step, train_state_specs,
@@ -93,13 +94,17 @@ opt = sgd()
 # --- single-pod flat mode -------------------------------------------------
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 wa = ("data",)
-specs = train_state_specs(cfg, mesh, strategy, opt, wa)
 batch = synthetic_lm_batch(jax.random.PRNGKey(1), 8, 64, cfg.vocab)
 batch = jax.device_put(batch, NamedSharding(mesh, P("data", None)))
 
-def fresh():
-    s = init_train_state(jax.random.PRNGKey(0), cfg, mesh, strategy, opt, wa)
-    return jax.tree.map(lambda x, sp: jax.device_put(x, sp.sharding), s, specs)
+def fresh(strat=strategy):
+    s = init_train_state(jax.random.PRNGKey(0), cfg, mesh, strat, opt, wa)
+    sp = train_state_specs(cfg, mesh, strat, opt, wa)
+    return jax.tree.map(lambda x, spc: jax.device_put(x, spc.sharding), s, sp)
+
+def max_param_diff(a, b):
+    return max(jax.tree.leaves(jax.tree.map(lambda x, y: float(jnp.max(jnp.abs(
+        x.astype(jnp.float32) - y.astype(jnp.float32)))), a.params, b.params)))
 
 losses = []
 state = fresh()
@@ -116,13 +121,35 @@ jp = jax.jit(make_train_step(cfg, mesh, strategy, opt, lr=1e-2,
 for _ in range(3):
     s1, m1 = jstep(s1, batch)
     s2, m2 = jp(s2, batch)
-diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
-    a.astype(jnp.float32) - b.astype(jnp.float32)))), s1.params, s2.params)
-out["packed_max_diff"] = max(jax.tree.leaves(diffs))
+out["packed_max_diff"] = max_param_diff(s1, s2)
+
+# adaptive bit-width (A-LAQ): packed wire must stay bit-identical to float
+ad = strategy._replace(bit_schedule=BitSchedule(kind="radius", grid=(2, 4, 8),
+                                                thresholds=(1e-3, 1e-2)))
+a1, a2 = fresh(ad), fresh(ad)
+jaf = jax.jit(make_train_step(cfg, mesh, ad, opt, lr=1e-2,
+                              worker_axes=wa, wire="float"))
+jap = jax.jit(make_train_step(cfg, mesh, ad, opt, lr=1e-2,
+                              worker_axes=wa, wire="packed"))
+for _ in range(3):
+    a1, _ = jaf(a1, batch)
+    a2, _ = jap(a2, batch)
+out["adaptive_packed_max_diff"] = max_param_diff(a1, a2)
+
+# constant schedule routes to the fixed-bit path: exact match with bits=4
+cs = strategy._replace(bits=7, bit_schedule=BitSchedule(kind="constant", bits=4))
+c2 = fresh(cs)
+jcp = jax.jit(make_train_step(cfg, mesh, cs, opt, lr=1e-2,
+                              worker_axes=wa, wire="packed"))
+for _ in range(3):
+    c2, _ = jcp(c2, batch)
+out["const_packed_max_diff"] = max_param_diff(s2, c2)
 
 params_s, cache_s, tokens_s = serve_specs(cfg, mesh, batch=8, seq_len=128)
 c = jax.jit(make_decode_step(cfg)).lower(params_s, cache_s, tokens_s).compile()
-out["decode_flops"] = float(c.cost_analysis().get("flops", -1))
+ca = c.cost_analysis()
+ca = ca[0] if isinstance(ca, (list, tuple)) else ca   # jax<0.5 returns [dict]
+out["decode_flops"] = float(ca.get("flops", -1))
 
 # --- multi-pod hierarchical mode -------------------------------------------
 mesh2 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -155,6 +182,8 @@ def test_sharded_integration_subprocess():
     out = json.loads(line[len("RESULT "):])
     assert out["losses"][-1] < out["losses"][0], out["losses"]
     assert out["packed_max_diff"] == 0.0, out
+    assert out["adaptive_packed_max_diff"] == 0.0, out
+    assert out["const_packed_max_diff"] == 0.0, out
     assert out["decode_flops"] > 0
     assert out["pod_losses"][-1] < out["pod_losses"][0], out["pod_losses"]
     assert 0 <= out["pod_uploads"] <= 2
