@@ -18,10 +18,11 @@ def main() -> None:
     all_checks = {}
 
     from . import (adaptive_sweep, bits_sweep, convergence, table2_gradient,
-                   table3_stochastic)
+                   table3_stochastic, wire_microbench)
     for name, mod in (("table2", table2_gradient), ("table3", table3_stochastic),
                       ("convergence", convergence), ("bits_sweep", bits_sweep),
-                      ("adaptive_sweep", adaptive_sweep)):
+                      ("adaptive_sweep", adaptive_sweep),
+                      ("wire_microbench", wire_microbench)):
         t = time.time()
         checks = mod.run(out_rows, results)
         all_checks.update({f"{name}: {k}": v for k, v in checks.items()})

@@ -7,6 +7,8 @@ Public API:
     quantize_innovation / dequantize_innovation / quantize_roundtrip
                                          -- paper eq. (5)-(6)
     BitSchedule / select_bits            -- adaptive bit-width (A-LAQ)
+    WireBackend / get_backend            -- pluggable quantize pipeline
+                                            (reference jnp vs fused 2-pass)
     run_gradient_based / run_stochastic  -- simulated M-worker cluster
 """
 from .adaptive import (BitSchedule, adaptive_roundtrip, grid_costs,
@@ -18,5 +20,7 @@ from .quantize import (dense_bits, dequantize_innovation, pack_codes,
                        unpack_codes, unpack_nibbles, upload_bits)
 from .strategy import (KINDS, CommState, RoundMetrics, StrategyConfig,
                        aggregate, finalize_step, init_comm_state, worker_update)
+from .wire import (FusedWire, ReferenceWire, WireBackend, WireRoundtrip,
+                   get_backend)
 from .compressors import qsgd_compress, ssgd_compress
 from .simulated import RunResult, run_gradient_based, run_stochastic

@@ -115,6 +115,22 @@ def dequantize_innovation(qints: Pytree, R_tree: Pytree, bits: int) -> Pytree:
     return jax.tree.map(_dq, qints, R_tree)
 
 
+def roundtrip_parts(grad: Pytree, qhat: Pytree, bits: int,
+                    per_leaf: bool = False):
+    """The full quantize roundtrip with every intermediate exposed:
+    ``(qints, R_tree, delta, q_new, R_max, err_sq)``.  Single source of the
+    composition shared by :func:`quantize_roundtrip` and the reference wire
+    backend (core/wire.py) — their bit-identity contract depends on this
+    being one implementation.
+    """
+    qints, R_tree = quantize_innovation(grad, qhat, bits, per_leaf)
+    delta = dequantize_innovation(qints, R_tree, bits)
+    q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d, qhat, delta)
+    err_sq = tree_sq_norm(jax.tree.map(lambda g, qn: g.astype(jnp.float32) - qn, grad, q_new))
+    R_max = jnp.max(jnp.stack(jax.tree_util.tree_leaves(R_tree)))
+    return qints, R_tree, delta, q_new, R_max, err_sq
+
+
 def quantize_roundtrip(grad: Pytree, qhat: Pytree, bits: int,
                        per_leaf: bool = False):
     """Quantize-and-reconstruct in one call.
@@ -127,11 +143,8 @@ def quantize_roundtrip(grad: Pytree, qhat: Pytree, bits: int,
 
     Guarantee (paper Fig. 1): ||grad - q_new||_inf <= tau * R.
     """
-    qints, R_tree = quantize_innovation(grad, qhat, bits, per_leaf)
-    delta = dequantize_innovation(qints, R_tree, bits)
-    q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d, qhat, delta)
-    err_sq = tree_sq_norm(jax.tree.map(lambda g, qn: g.astype(jnp.float32) - qn, grad, q_new))
-    R_max = jnp.max(jnp.stack(jax.tree_util.tree_leaves(R_tree)))
+    _, _, delta, q_new, R_max, err_sq = roundtrip_parts(grad, qhat, bits,
+                                                        per_leaf)
     return q_new, delta, R_max, err_sq
 
 
@@ -148,26 +161,36 @@ def pack_codes(q: jax.Array, bits: int) -> jax.Array:
     Code i lands in byte i // (8/b) at bit offset b * (i % (8/b)) — the
     little-end-first layout shared by pack_nibbles and the Pallas kernels.
     Length must be a multiple of 8/b (pad upstream).
+
+    Vectorized: one contiguous reshape to ``[n/cpb, cpb]`` and a broadcast
+    shift-and-OR over the (static, tiny) byte-lane axis, instead of 8/b
+    strided gathers over the full code vector.
     """
     assert bits in (2, 4, 8), bits
     cpb = 8 // bits
     if cpb == 1:
         return q.astype(jnp.uint8)
-    acc = q[0::cpb].astype(jnp.uint8)
-    for j in range(1, cpb):
-        acc = acc | (q[j::cpb].astype(jnp.uint8) << (bits * j))
+    lanes = q.astype(jnp.uint8).reshape(-1, cpb)
+    acc = lanes[:, 0]
+    for j in range(1, cpb):       # static, <= 3 iterations; contiguous columns
+        acc = acc | (lanes[:, j] << (bits * j))
     return acc.astype(jnp.uint8)
 
 
 def unpack_codes(packed: jax.Array, bits: int) -> jax.Array:
-    """Inverse of pack_codes -> flat uint8 array of b-bit codes."""
+    """Inverse of pack_codes -> flat uint8 array of b-bit codes.
+
+    Vectorized: one broadcast shift-and-mask to ``[nbytes, cpb]`` and a
+    contiguous reshape back to the flat code vector.
+    """
     assert bits in (2, 4, 8), bits
     cpb = 8 // bits
     if cpb == 1:
         return packed.astype(jnp.uint8)
-    mask = (1 << bits) - 1
-    parts = [(packed >> (bits * j)) & mask for j in range(cpb)]
-    return jnp.stack(parts, axis=-1).reshape(-1).astype(jnp.uint8)
+    mask = jnp.uint8((1 << bits) - 1)
+    shifts = jnp.arange(cpb, dtype=jnp.uint8) * bits
+    lanes = (packed.reshape(-1, 1) >> shifts[None, :]) & mask
+    return lanes.reshape(-1).astype(jnp.uint8)
 
 
 def pack_nibbles(q: jax.Array) -> jax.Array:

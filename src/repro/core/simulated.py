@@ -4,6 +4,12 @@ Runs the worker/server protocol on a single device with a leading worker axis
 (vmap), which is exactly the paper's M=10 setting.  Production execution on a
 real mesh lives in ``repro/launch/train.py``; both share the per-worker math
 in ``core/strategy.py``.
+
+The quantize pipeline inside each round is pluggable via
+``StrategyConfig.wire_backend`` (core/wire.py): ``"reference"`` runs the
+paper-faithful jnp sweeps, ``"fused"`` the two-pass pipeline (Pallas on TPU,
+blocked jnp on CPU) whose wire content is bit-identical — so a whole
+simulated run reproduces the same trajectory on either backend.
 """
 from __future__ import annotations
 

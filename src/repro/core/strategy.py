@@ -31,8 +31,8 @@ import jax.numpy as jnp
 from .adaptive import (BitSchedule, dequantize_dynamic, quantize_dynamic,
                        select_bits, tau_of_selection)
 from .criterion import CriterionConfig, push_history, should_skip
-from .quantize import (dense_bits, innovation, quantize_roundtrip, tree_size,
-                       tree_sq_norm, upload_bits)
+from .quantize import dense_bits, tree_size, tree_sq_norm, upload_bits
+from .wire import get_backend
 
 Pytree = object
 
@@ -51,6 +51,10 @@ class StrategyConfig(NamedTuple):
     bit_schedule: Optional[BitSchedule] = None  # None/"constant" -> fixed
                                     # bits; adaptive kinds pick b_m^k per
                                     # worker per round (core/adaptive.py)
+    wire_backend: str = "reference"  # quantize-pipeline implementation
+                                    # (core/wire.py): "reference" jnp vs
+                                    # "fused" two-pass Pallas/blocked-jnp;
+                                    # bit-identical wire content either way
     # wire mode is a launch-layer concern ("float" psum vs "packed" all_gather);
     # the algorithmic state machine is identical for both.
 
@@ -147,12 +151,20 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
     static width on the fixed path, 32 for dense uploads).
     """
     p = tree_size(grad_m)
+    # sidecar count is wire-backend-INDEPENDENT by construction: both
+    # backends exchange one f32 radius per leaf (per-leaf mode) or one
+    # global radius, so bits_m accounting is identical across backends
+    # (asserted in tests/test_wire_backend.py).
     n_sidecars = (len(jax.tree_util.tree_leaves(grad_m))
                   if cfg.per_leaf_radius else 1)
+    backend = get_backend(cfg.wire_backend)
     if cfg.adaptive:
         sched = cfg.bit_schedule
         step_ = jnp.zeros((), jnp.int32) if step is None else step
-        diff, R_tree, R = innovation(grad_m, qhat_m, cfg.per_leaf_radius)
+        # pass 1 of the wire pipeline: the backend's radius reduction (the
+        # fused backend computes R without materializing the diff tensor)
+        diff, R_tree, R = backend.innovation(grad_m, qhat_m,
+                                             cfg.per_leaf_radius)
         width_m, onehot = select_bits(sched, R, bits_spent_m, step_, p,
                                       n_radii=n_sidecars)
         codes = quantize_dynamic(diff, R_tree, sched.grid, onehot)
@@ -162,12 +174,16 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
                              qhat_m, delta)
         err_sq = tree_sq_norm(jax.tree.map(
             lambda g, qn: g.astype(jnp.float32) - qn, grad_m, q_new))
+        innovation_sq = tree_sq_norm(delta)
         bits_if_upload = upload_bits(p, width_m, n_radii=n_sidecars,
                                      bit_sidecar=True)
     elif cfg.quantized:
-        q_new, delta, R, err_sq = quantize_roundtrip(grad_m, qhat_m,
-                                                     cfg.effective_bits,
-                                                     cfg.per_leaf_radius)
+        rt = backend.roundtrip(grad_m, qhat_m, cfg.effective_bits,
+                               cfg.per_leaf_radius)
+        q_new, delta, R = rt.q_new, rt.delta, rt.R_max
+        # the fused backend emits both criterion moments as in-pass partial
+        # sums; the reference backend spends two extra sweeps on them
+        err_sq, innovation_sq = rt.err_sq, rt.innovation_sq
         bits_if_upload = float(upload_bits(p, cfg.effective_bits,
                                            n_radii=n_sidecars))
         width_m = jnp.full((), float(cfg.effective_bits), jnp.float32)
@@ -176,10 +192,9 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
         delta = jax.tree.map(lambda g, q: g - q, q_new, qhat_m)
         R = jnp.zeros((), jnp.float32)
         err_sq = jnp.zeros((), jnp.float32)
+        innovation_sq = tree_sq_norm(delta)
         bits_if_upload = float(dense_bits(p))
         width_m = jnp.full((), 32.0, jnp.float32)
-
-    innovation_sq = tree_sq_norm(delta)
 
     if cfg.lazy:
         skip = should_skip(innovation_sq, theta_hist, alpha, n_workers,

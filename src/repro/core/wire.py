@@ -1,0 +1,305 @@
+"""Pluggable wire backends: one interface for the quantize/pack/dequant hot
+path, with a ``reference`` jnp implementation and a ``fused`` two-pass
+implementation.
+
+Every consumer of the quantizer — ``worker_update`` (fixed and adaptive
+paths), the simulated runner, the wire microbenchmark, and the packed
+sharded wire in ``launch/train.py`` — routes through this interface, so the
+kernel-level pipeline can be swapped without touching the LAQ state machine.
+Selection is by name via ``StrategyConfig.wire_backend``:
+
+* ``reference`` — the paper-faithful jnp path from :mod:`repro.core.quantize`
+  (~5-6 full-gradient sweeps per round: diff+inf-norm, codes, delta, q_new,
+  err_sq, innovation_sq as separate elementwise passes).
+* ``fused`` — the two-pass pipeline: pass 1 reduces the radius
+  ``R = ||grad - qhat||_inf`` blockwise without materializing the diff;
+  pass 2 emits codes+payload, delta, q_new AND the per-block partial sums
+  for ``||grad - q_new||^2`` / ``||delta||^2`` in a single sweep, so the
+  skip-criterion inputs come for free.  Two lowerings of the same
+  algorithm: compiled Pallas kernels (:mod:`repro.kernels`) off-CPU, and an
+  op-for-op blocked jnp expression on CPU, where interpret-mode Pallas would
+  serialize the grid (lowering="auto" picks per ``jax.default_backend()``;
+  tests pin "pallas"/"jnp" explicitly).
+
+Equivalence contract (asserted in tests/test_wire_backend.py over
+{qgd, laq} x bits {2, 4, 8} x {global, per-leaf} radii): the wire content —
+codes, radii, ``delta``, ``q_new`` — is **bit-identical** across backends
+(the elementwise expressions are kept identical, down to association order),
+and whole simulated LAQ runs reproduce bit-identical trajectories on either
+backend.  The scalar moments ``err_sq``/``innovation_sq`` are reduced with
+the same tree as the reference on the CPU jnp lowering (usually bit-equal),
+but XLA may re-derive a fused producer inside a reduce with a different
+mul-add contraction, and the Pallas lowering emits blockwise partial sums —
+so moments are only guaranteed to float32 reduction accuracy (~1e-7
+relative), which the skip criterion's O(1) threshold margins tolerate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import (innovation, pack_codes, roundtrip_parts, tau,
+                       tree_sq_norm)
+
+Pytree = object
+
+
+class WireRoundtrip(NamedTuple):
+    """Everything one round's quantize step produces for one worker."""
+    q_new: Pytree           # Q_m(theta^k) = qhat + delta
+    delta: Pytree           # dequantized innovation deltaQ_m^k
+    R_tree: Pytree          # per-leaf radii (global R replicated if not per-leaf)
+    R_max: jax.Array        # max leaf radius (paper Fig. 3 diagnostic)
+    err_sq: jax.Array       # ||grad - q_new||^2  (criterion eps term)
+    innovation_sq: jax.Array  # ||delta||^2       (criterion LHS)
+    payload: Optional[list]   # per-leaf packed uint8 codes (with_payload only);
+                              # layout is backend-specific (the fused payload is
+                              # BLOCK-padded), byte semantics are shared
+
+
+class WireBackend:
+    """Interface: radius reduction, quantize roundtrip, server dequant-acc."""
+
+    name = "?"
+
+    def innovation(self, grad: Pytree, qhat: Pytree, per_leaf: bool = False):
+        """``(diff, R_tree, R_max)`` — same contract as quantize.innovation."""
+        raise NotImplementedError
+
+    def roundtrip(self, grad: Pytree, qhat: Pytree, bits: int,
+                  per_leaf: bool = False,
+                  with_payload: bool = False) -> WireRoundtrip:
+        raise NotImplementedError
+
+    def dequant_acc(self, packed, R, keep, bits: int, n: int, acc=None):
+        """Server side: ``(acc +) sum_w keep_w * dequant(packed_w, R_w)``."""
+        raise NotImplementedError
+
+
+class ReferenceWire(WireBackend):
+    """The jnp path of core/quantize.py, verbatim (the tests' ground truth)."""
+
+    name = "reference"
+
+    def innovation(self, grad, qhat, per_leaf=False):
+        return innovation(grad, qhat, per_leaf)
+
+    def roundtrip(self, grad, qhat, bits, per_leaf=False, with_payload=False):
+        qints, R_tree, delta, q_new, R_max, err_sq = roundtrip_parts(
+            grad, qhat, bits, per_leaf)
+        innovation_sq = tree_sq_norm(delta)
+        payload = None
+        if with_payload:
+            cpb = 8 // bits
+            mid = jnp.uint8((2 ** bits) // 2)
+
+            def leaf_payload(q):
+                flat = q.reshape(-1)
+                pad = (-flat.shape[0]) % cpb
+                if pad:
+                    flat = jnp.concatenate([flat, jnp.full((pad,), mid,
+                                                           jnp.uint8)])
+                return pack_codes(flat, bits)
+
+            payload = [leaf_payload(q) for q in jax.tree_util.tree_leaves(qints)]
+        return WireRoundtrip(q_new, delta, R_tree, R_max, err_sq,
+                             innovation_sq, payload)
+
+    def dequant_acc(self, packed, R, keep, bits, n, acc=None):
+        from repro.kernels.ref import dequant_acc_ref
+        return dequant_acc_ref(packed, R.astype(jnp.float32),
+                               keep.astype(jnp.float32), bits, n, acc)
+
+
+def _fused_leaf_jnp(g, qh, R, bits, with_payload):
+    """Op-for-op jnp lowering of the pass-2 kernel, on the dense flat leaf.
+
+    Padding and block tiling belong to the Pallas lowering only: a jnp
+    moment reduce fused with a slice-of-padded-array lowers to a masked
+    wide reduction whose partial-sum grouping differs from the reference's
+    dense reduce at the last ulp — enough to flip near-tie skip decisions.
+    Dense flat arrays give both backends the identical elementwise
+    expressions AND the identical reduction tree, so wire content and
+    moments are bit-identical on CPU.
+    """
+    n = g.size
+    gf = g.reshape(-1).astype(jnp.float32)
+    qf = qh.reshape(-1).astype(jnp.float32)
+    d = gf - qf
+    t = tau(bits)
+    levels = 2 ** bits - 1
+    denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
+    q = jnp.clip(jnp.floor((d + R) / denom + 0.5), 0, levels)
+    q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q)).astype(jnp.uint8)
+    delta = 2.0 * t * R * q.astype(jnp.float32) - R
+    delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
+    qn = qf + delta
+    err = gf - qn
+    err_sq = jnp.sum(err * err)
+    inn_sq = jnp.sum(delta * delta)
+    payload = None
+    if with_payload:
+        cpb = 8 // bits
+        pad = (-n) % cpb
+        qp = q
+        if pad:
+            qp = jnp.concatenate(
+                [q, jnp.full((pad,), (levels + 1) // 2, jnp.uint8)])
+        payload = pack_codes(qp, bits)
+    return delta, qn, err_sq, inn_sq, payload
+
+
+class FusedWire(WireBackend):
+    """The two-pass fused pipeline (see module docstring).
+
+    ``lowering``: "auto" (Pallas off-CPU, blocked jnp on CPU), "pallas"
+    (force the kernels — interpret mode on CPU; the test configuration), or
+    "jnp" (force the blocked jnp expression).
+    """
+
+    name = "fused"
+
+    def __init__(self, lowering: str = "auto"):
+        assert lowering in ("auto", "pallas", "jnp"), lowering
+        self.lowering = lowering
+
+    def _use_pallas(self) -> bool:
+        if self.lowering == "auto":
+            return jax.default_backend() != "cpu"
+        return self.lowering == "pallas"
+
+    def _leaf_absmax(self, g, qh):
+        if g.size == 0:
+            return jnp.zeros((), jnp.float32)
+        if self._use_pallas():
+            from repro.kernels import absmax
+            return absmax(g, qh)
+        return jnp.max(jnp.abs(g.astype(jnp.float32)
+                               - qh.astype(jnp.float32))).astype(jnp.float32)
+
+    def _radii(self, g_leaves, q_leaves, per_leaf):
+        maxes = [self._leaf_absmax(g, qh) for g, qh in zip(g_leaves, q_leaves)]
+        if per_leaf:
+            return maxes, jnp.max(jnp.stack(maxes))
+        R = jnp.max(jnp.stack([m for m, g in zip(maxes, g_leaves) if g.size]
+                              or [jnp.zeros((), jnp.float32)]))
+        return [R for _ in g_leaves], R
+
+    def innovation(self, grad, qhat, per_leaf=False):
+        """Radius via the pass-1 absmax reduction; the diff itself stays a
+        lazy elementwise expression for downstream consumers (the adaptive
+        quantizer), so no extra full-gradient sweep is spent on it here."""
+        diff = jax.tree.map(
+            lambda g, q: g.astype(jnp.float32) - q.astype(jnp.float32),
+            grad, qhat)
+        g_leaves, treedef = jax.tree_util.tree_flatten(grad)
+        q_leaves = jax.tree_util.tree_leaves(qhat)
+        R_leaves, R_max = self._radii(g_leaves, q_leaves, per_leaf)
+        R_tree = jax.tree_util.tree_unflatten(treedef, R_leaves)
+        return diff, R_tree, R_max
+
+    def roundtrip(self, grad, qhat, bits, per_leaf=False, with_payload=False):
+        assert bits in (2, 4, 8), \
+            f"fused wire backend covers the packed-width grid, got bits={bits}"
+        g_leaves, treedef = jax.tree_util.tree_flatten(grad)
+        q_leaves = jax.tree_util.tree_leaves(qhat)
+        R_leaves, R_max = self._radii(g_leaves, q_leaves, per_leaf)
+        use_pallas = self._use_pallas()
+
+        delta_leaves, qnew_leaves, payload = [], [], []
+        err_parts, inn_parts = [], []
+        for g, qh, R in zip(g_leaves, q_leaves, R_leaves):
+            if g.size == 0:
+                delta_leaves.append(jnp.zeros(g.shape, jnp.float32))
+                qnew_leaves.append(jnp.zeros(g.shape, jnp.float32))
+                if with_payload:
+                    # keep the payload list leaf-aligned (one entry per leaf)
+                    payload.append(jnp.zeros((0,), jnp.uint8))
+                continue
+            if use_pallas:
+                from repro.kernels import quantize_pack_fused
+                pk, dl, qn, esq, isq = quantize_pack_fused(g, qh, R, bits)
+            else:
+                dl, qn, esq, isq, pk = _fused_leaf_jnp(g, qh, R, bits,
+                                                       with_payload)
+            delta_leaves.append(dl.reshape(g.shape))
+            qnew_leaves.append(qn.reshape(g.shape))
+            err_parts.append(esq)
+            inn_parts.append(isq)
+            if with_payload:
+                payload.append(pk)
+
+        err_sq = (jnp.sum(jnp.stack(err_parts)) if err_parts
+                  else jnp.zeros((), jnp.float32))
+        inn_sq = (jnp.sum(jnp.stack(inn_parts)) if inn_parts
+                  else jnp.zeros((), jnp.float32))
+        return WireRoundtrip(
+            q_new=jax.tree_util.tree_unflatten(treedef, qnew_leaves),
+            delta=jax.tree_util.tree_unflatten(treedef, delta_leaves),
+            R_tree=jax.tree_util.tree_unflatten(treedef, R_leaves),
+            R_max=R_max, err_sq=err_sq, innovation_sq=inn_sq,
+            payload=payload if with_payload else None)
+
+    def dequant_acc(self, packed, R, keep, bits, n, acc=None):
+        if self._use_pallas():
+            from repro.kernels import dequant_acc
+            return dequant_acc(packed, R, keep, bits, n, acc)
+        from repro.kernels.ref import dequant_acc_ref
+        return dequant_acc_ref(packed, R.astype(jnp.float32),
+                               keep.astype(jnp.float32), bits, n, acc)
+
+
+_BACKENDS = {
+    "reference": ReferenceWire(),
+    "fused": FusedWire(),
+}
+
+
+def get_backend(name) -> WireBackend:
+    """Resolve a backend by name (or pass a WireBackend instance through —
+    tests use that to pin the fused lowering)."""
+    if isinstance(name, WireBackend):
+        return name
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire backend {name!r}; have {sorted(_BACKENDS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Axis-packed wire payload helpers — the sharded collective wire format
+# shared by launch/train.py (pack along the LAST dim: flattening a
+# model-sharded leaf would force GSPMD to regather it).  Same
+# little-end-first byte semantics as pack_codes / the Pallas kernels.
+# ---------------------------------------------------------------------------
+
+def axis_packable(q, bits: int) -> bool:
+    cpb = 8 // bits
+    return cpb > 1 and q.ndim >= 1 and q.shape[-1] % cpb == 0
+
+
+def pack_codes_along_axis(q, bits: int):
+    """Pack 8/b codes per byte along the last dim (no-op layout for b=8 or
+    an indivisible last dim: raw uint8 codes ship unpacked)."""
+    if not axis_packable(q, bits):
+        return q
+    cpb = 8 // bits
+    parts = q.reshape(q.shape[:-1] + (q.shape[-1] // cpb, cpb))
+    acc = parts[..., 0]
+    for j in range(1, cpb):
+        acc = acc | (parts[..., j] << (bits * j))
+    return acc.astype(jnp.uint8)
+
+
+def unpack_codes_along_axis(payload, bits: int, orig):
+    """Inverse of :func:`pack_codes_along_axis`; ``orig`` supplies the
+    unpacked shape (and whether packing applied at all)."""
+    if not axis_packable(orig, bits):
+        return payload
+    cpb = 8 // bits
+    mask = (1 << bits) - 1
+    parts = [(payload >> (bits * j)) & mask for j in range(cpb)]
+    return jnp.stack(parts, axis=-1).reshape(orig.shape)

@@ -1,3 +1,4 @@
-"""Pallas TPU kernels for the LAQ wire hot loops (quantize+pack, unpack+
-dequant+accumulate). ops.py: jit wrappers; ref.py: pure-jnp oracles."""
-from .ops import dequant_acc, quantize_pack
+"""Pallas TPU kernels for the LAQ wire hot loops (absmax radius reduction;
+fused quantize+pack with moment side-outputs; unpack+dequant+accumulate).
+ops.py: jit wrappers; ref.py: pure-jnp oracles."""
+from .ops import absmax, dequant_acc, quantize_pack, quantize_pack_fused

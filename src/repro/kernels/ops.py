@@ -4,6 +4,12 @@ Handles padding to the kernel block size, flat<->leaf reshaping, and backend
 selection: interpret=True on CPU (the validation container), compiled Pallas
 on TPU.  Covers the full adaptive-LAQ width grid: b in {2, 4, 8} packs
 4 / 2 / 1 codes per byte.
+
+The production entry point is the ``fused`` wire backend in
+``repro.core.wire``, which routes the per-worker hot loop through
+:func:`absmax` (pass 1) and :func:`quantize_pack_fused` (pass 2) on TPU and
+through an op-for-op jnp lowering of the same two-pass algorithm on CPU,
+where interpret-mode Pallas would serialize the grid.
 """
 from __future__ import annotations
 
@@ -12,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .quant_pack import BLOCK, dequant_acc_pallas, quantize_pack_pallas
+from .quant_pack import (BLOCK, absmax_pallas, dequant_acc_pallas,
+                         quantize_pack_pallas, quantize_pack_payload_pallas)
 
 
 def _on_cpu() -> bool:
@@ -27,29 +34,79 @@ def _pad_to_block(flat):
     return flat, n
 
 
+def _pad_pair(grad, qhat):
+    g = grad.astype(jnp.float32).reshape(-1)
+    qh = qhat.astype(jnp.float32).reshape(-1)
+    g, n = _pad_to_block(g)
+    qh, _ = _pad_to_block(qh)
+    return g, qh, n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def absmax(grad, qhat, *, interpret: bool | None = None):
+    """Pass 1: R = ||grad - qhat||_inf without materializing the diff.
+
+    grad/qhat f32 (any shape, flattened); returns a f32 scalar.  Zero
+    padding is harmless (pad diff is 0, abs-max >= 0).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    g, qh, _ = _pad_pair(grad, qhat)
+    partial_max = absmax_pallas(g, qh, interpret=interpret)
+    return jnp.max(partial_max)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_pack_fused(grad, qhat, R, bits: int, *,
+                        interpret: bool | None = None):
+    """Pass 2: fused quantize+pack with moment side-outputs.
+
+    grad/qhat f32 [n], R scalar.  Returns ``(packed uint8
+    [ceil(n/blk)*blk*bits/8], delta f32 [n], q_new f32 [n], err_sq,
+    innovation_sq)`` where the scalar moments are the block-partial sums of
+    ||grad - q_new||^2 and ||delta||^2 over the n real elements.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    g, qh, n = _pad_pair(grad, qhat)
+    packed, delta, q_new, err_p, inn_p = quantize_pack_pallas(
+        g, qh, R.astype(jnp.float32).reshape(1), bits, n, interpret=interpret)
+    return packed, delta[:n], q_new[:n], jnp.sum(err_p), jnp.sum(inn_p)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def quantize_pack(grad, qhat, R, bits: int, *, interpret: bool | None = None):
     """Flat leaf quantize+pack. grad/qhat f32 [n], R scalar.
 
     Returns (packed uint8 [ceil(n/blk)*blk*bits/8], delta f32 [n]).
+    The payload-only kernel: no q_new/moment outputs, so payload-only
+    callers don't pay their VMEM writes (use quantize_pack_fused when the
+    criterion moments are wanted too).
     """
     if interpret is None:
         interpret = _on_cpu()
-    diff = grad.astype(jnp.float32) - qhat.astype(jnp.float32)
-    diff, n = _pad_to_block(diff.reshape(-1))
-    packed, delta = quantize_pack_pallas(diff, R.reshape(1), bits,
-                                         interpret=interpret)
+    g, qh, n = _pad_pair(grad, qhat)
+    packed, delta = quantize_pack_payload_pallas(
+        g, qh, R.astype(jnp.float32).reshape(1), bits, interpret=interpret)
     return packed, delta[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "n", "interpret"))
-def dequant_acc(packed, R, keep, bits: int, n: int, *,
+def dequant_acc(packed, R, keep, bits: int, n: int, acc=None, *,
                 interpret: bool | None = None):
-    """Server-side unpack+dequant+accumulate over the worker dim."""
+    """Server-side unpack+dequant+accumulate over the worker dim.
+
+    ``acc`` (optional f32 [n], e.g. the server aggregate) is folded into the
+    same pass: out = acc + sum_w keep_w * delta_w.
+    """
     if interpret is None:
         interpret = _on_cpu()
     n_padded = packed.shape[1] * 8 // bits
+    acc_padded = None
+    if acc is not None:
+        acc_padded, _ = _pad_to_block(acc.astype(jnp.float32).reshape(-1))
+        assert acc_padded.shape[0] == n_padded, (acc.shape, n_padded)
     out = dequant_acc_pallas(packed, R.astype(jnp.float32),
                              keep.astype(jnp.float32), bits, n_padded,
-                             interpret=interpret)
+                             acc_padded, interpret=interpret)
     return out[:n]

@@ -1,20 +1,43 @@
-"""Pallas TPU kernels for the LAQ wire hot loops.
+"""Pallas TPU kernels for the LAQ wire hot loops — the fused two-pass pipeline.
 
 The per-step elementwise sweep over the full gradient (quantize -> pack on
 the send side; unpack -> dequantize -> accumulate over W workers on the
 server side) is the paper's compute hot spot — it touches every parameter
 every iteration.  On TPU these are VPU (vector-unit) kernels: the win is
-fusing quantize+pack (resp. unpack+dequant+W-accumulate) into one VMEM-tiled
-pass instead of XLA's multi-kernel materialization of the intermediate code
-and float tensors.
+fusing the whole send-side pipeline into two VMEM-tiled passes instead of
+XLA's multi-kernel materialization of the intermediate diff / code / float
+tensors.
+
+Sweep-count accounting (one worker, one round, p-dim gradient):
+
+    reference (core/quantize.py jnp path)       fused (this module)
+    1. diff = grad - qhat  (materialized)       1. absmax: R = ||grad-qhat||_inf
+    2. R = ||diff||_inf                            (in-kernel diff, no tensor)
+    3. codes = quantize(diff, R)                2. quantize_pack: codes+pack,
+    4. delta = dequantize(codes, R)                delta, q_new, and per-block
+    5. q_new = qhat + delta                        partial sums for
+    6. err_sq = ||grad - q_new||^2                 ||grad-q_new||^2 and
+    7. innovation_sq = ||delta||^2                 ||delta||^2 — all in one
+       (~5-6 full-gradient sweeps, 2+             VMEM pass (side-outputs are
+       materialized temporaries)                   one f32 per block)
+
+so the skip-criterion inputs (err_sq / innovation_sq) come for free with the
+wire payload instead of costing two extra sweeps, and the radius reduction
+no longer needs a materialized diff tensor.  The receive side
+(``dequant_acc``) additionally takes an optional ``acc`` operand so the
+server recursion ``agg^k = agg^{k-1} + sum_m delta_m`` folds into the same
+pass instead of a separate p-length add.
 
 Tiling: flat vectors are processed in LANE-aligned blocks (multiples of
 1024 floats = 8 sublanes x 128 lanes); bits=4 packs two codes per byte and
 bits=2 four codes per byte, so the packed block is block*b/8 bytes.  All
-shapes are padded upstream in ops.py.
+shapes are padded upstream in ops.py; the moment side-outputs mask the pad
+tail (pad codes dequantize to a *nonzero* midpoint delta, so an unmasked
+sum would be wrong for non-BLOCK-multiple lengths).
 
-Validated in interpret mode on CPU against kernels/ref.py (tests sweep
-shapes x bits x dtypes); compiled lowering targets TPU.
+Validated in interpret mode on CPU against kernels/ref.py and against the
+pure-jnp fused lowering in core/wire.py (tests sweep shapes x bits x
+radii); compiled lowering targets TPU.
 """
 from __future__ import annotations
 
@@ -36,38 +59,146 @@ def _quant_codes(diff, R, bits):
     return jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q)).astype(jnp.uint8)
 
 
-def _quantize_pack_kernel(bits, diff_ref, R_ref, packed_ref, delta_ref):
+def _pack_block(q, bits):
+    if bits == 8:
+        return q
+    cpb = 8 // bits                          # codes per byte (2 or 4)
+    qs = q.reshape(-1, cpb)
+    acc = qs[:, 0]
+    for j in range(1, cpb):
+        acc = acc | (qs[:, j] << (bits * j))
+    return acc.astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: blockwise |grad - qhat| max reduction (no materialized diff).
+# ---------------------------------------------------------------------------
+
+def _absmax_kernel(g_ref, qh_ref, out_ref):
+    d = g_ref[...] - qh_ref[...]
+    out_ref[0] = jnp.max(jnp.abs(d))
+
+
+def absmax_pallas(grad, qhat, *, interpret: bool = True):
+    """grad, qhat: flat f32 [n] (n % BLOCK == 0).
+
+    Returns per-block partial maxima f32 [n // BLOCK]; the final (tiny)
+    reduction over blocks happens in the caller.  Zero-padding is safe: the
+    pad diff is 0 and abs-max is >= 0.
+    """
+    n = grad.shape[0]
+    assert n % BLOCK == 0, n
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // BLOCK,), jnp.float32),
+        interpret=interpret,
+    )(grad, qhat)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: quantize + pack + dequantized delta + q_new, with per-block moment
+# side-outputs (the skip-criterion inputs).
+# ---------------------------------------------------------------------------
+
+def _quantize_pack_kernel(bits, n_valid, g_ref, qh_ref, R_ref, packed_ref,
+                          delta_ref, qnew_ref, err_ref, inn_ref):
     R = R_ref[0]
-    d = diff_ref[...]
+    g = g_ref[...]
+    qh = qh_ref[...]
+    d = g - qh
     q = _quant_codes(d, R, bits)
     t = 1.0 / (2.0 ** bits - 1.0)
     delta = 2.0 * t * R * q.astype(jnp.float32) - R
-    delta_ref[...] = jnp.where(R > 0, delta, jnp.zeros_like(delta))
-    if bits == 8:
-        packed_ref[...] = q
-    else:
-        cpb = 8 // bits                      # codes per byte (2 or 4)
-        qs = q.reshape(-1, cpb)
-        acc = qs[:, 0]
-        for j in range(1, cpb):
-            acc = acc | (qs[:, j] << (bits * j))
-        packed_ref[...] = acc.astype(jnp.uint8)
+    delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
+    delta_ref[...] = delta
+    # same association as the reference: q_new = qhat + delta, err = g - q_new
+    qn = qh + delta
+    qnew_ref[...] = qn
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (BLOCK, 1), 0).reshape(-1)
+           + pl.program_id(0) * BLOCK)
+    valid = (idx < n_valid).astype(jnp.float32)
+    err = (g - qn) * valid
+    err_ref[0] = jnp.sum(err * err)
+    dv = delta * valid
+    inn_ref[0] = jnp.sum(dv * dv)
+    packed_ref[...] = _pack_block(q, bits)
 
 
-def quantize_pack_pallas(diff, R, bits: int, *, interpret: bool = True):
-    """diff: flat f32 [n] (n % BLOCK == 0), R: scalar f32 [1].
+def quantize_pack_pallas(grad, qhat, R, bits: int, n_valid: int, *,
+                         interpret: bool = True):
+    """grad, qhat: flat f32 [n] (n % BLOCK == 0), R: scalar f32 [1],
+    n_valid: static count of real (non-pad) elements.
 
-    Returns (packed uint8 [n*bits/8], delta f32 [n]).
+    Returns ``(packed uint8 [n*bits/8], delta f32 [n], q_new f32 [n],
+    err_part f32 [n//BLOCK], inn_part f32 [n//BLOCK])`` — the partial sums
+    are masked to the first ``n_valid`` elements; their block-order sum gives
+    ||grad - q_new||^2 and ||delta||^2.
     """
-    n = diff.shape[0]
+    n = grad.shape[0]
     assert n % BLOCK == 0, n
     assert bits in (2, 4, 8), bits
     out_block = BLOCK * bits // 8
     grid = (n // BLOCK,)
     return pl.pallas_call(
-        functools.partial(_quantize_pack_kernel, bits),
+        functools.partial(_quantize_pack_kernel, bits, n_valid),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((out_block,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n * bits // 8,), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n // BLOCK,), jnp.float32),
+            jax.ShapeDtypeStruct((n // BLOCK,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(grad, qhat, R)
+
+
+def _quantize_pack_payload_kernel(bits, g_ref, qh_ref, R_ref, packed_ref,
+                                  delta_ref):
+    R = R_ref[0]
+    d = g_ref[...] - qh_ref[...]
+    q = _quant_codes(d, R, bits)
+    t = 1.0 / (2.0 ** bits - 1.0)
+    delta = 2.0 * t * R * q.astype(jnp.float32) - R
+    delta_ref[...] = jnp.where(R > 0, delta, jnp.zeros_like(delta))
+    packed_ref[...] = _pack_block(q, bits)
+
+
+def quantize_pack_payload_pallas(grad, qhat, R, bits: int, *,
+                                 interpret: bool = True):
+    """Payload-only variant of the pass-2 kernel: packed codes + delta, no
+    q_new/moment outputs — for callers that only ship the wire payload and
+    should not pay the extra VMEM writes (benchmarks, the roundtrip tests).
+    """
+    n = grad.shape[0]
+    assert n % BLOCK == 0, n
+    assert bits in (2, 4, 8), bits
+    out_block = BLOCK * bits // 8
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_quantize_pack_payload_kernel, bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
             pl.BlockSpec((BLOCK,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
@@ -80,12 +211,22 @@ def quantize_pack_pallas(diff, R, bits: int, *, interpret: bool = True):
             jax.ShapeDtypeStruct((n,), jnp.float32),
         ],
         interpret=interpret,
-    )(diff, R)
+    )(grad, qhat, R)
 
 
-def _dequant_acc_kernel(bits, W, packed_ref, R_ref, keep_ref, out_ref):
+# ---------------------------------------------------------------------------
+# Receive side: unpack + dequant + W-accumulate (+ optional server-aggregate
+# fold-in).
+# ---------------------------------------------------------------------------
+
+def _dequant_acc_kernel(bits, W, has_acc, *refs):
+    if has_acc:
+        packed_ref, R_ref, keep_ref, acc_ref, out_ref = refs
+        acc = acc_ref[...].astype(jnp.float32)
+    else:
+        packed_ref, R_ref, keep_ref, out_ref = refs
+        acc = jnp.zeros(out_ref.shape, jnp.float32)
     t = 1.0 / (2.0 ** bits - 1.0)
-    acc = jnp.zeros(out_ref.shape, jnp.float32)
     for w in range(W):                       # W is static & small (workers/pods)
         pk = packed_ref[w, :]
         if bits == 8:
@@ -102,23 +243,32 @@ def _dequant_acc_kernel(bits, W, packed_ref, R_ref, keep_ref, out_ref):
     out_ref[...] = acc
 
 
-def dequant_acc_pallas(packed, R, keep, bits: int, n: int, *,
+def dequant_acc_pallas(packed, R, keep, bits: int, n: int, acc=None, *,
                        interpret: bool = True):
-    """packed: [W, n*bits/8] uint8; R, keep: [W] f32 -> f32 [n] (summed)."""
+    """packed: [W, n*bits/8] uint8; R, keep: [W] f32 -> f32 [n] (summed).
+
+    ``acc`` (optional f32 [n], e.g. the server aggregate) is folded into the
+    same pass: out = acc + sum_w delta_w.
+    """
     assert bits in (2, 4, 8), bits
     W, nbytes = packed.shape
     in_block = BLOCK * bits // 8
     assert nbytes % in_block == 0, (nbytes, in_block)
     grid = (nbytes // in_block,)
+    in_specs = [
+        pl.BlockSpec((W, in_block), lambda i: (0, i)),
+        pl.BlockSpec((W,), lambda i: (0,)),
+        pl.BlockSpec((W,), lambda i: (0,)),
+    ]
+    args = [packed, R, keep]
+    if acc is not None:
+        in_specs.append(pl.BlockSpec((BLOCK,), lambda i: (i,)))
+        args.append(acc)
     return pl.pallas_call(
-        functools.partial(_dequant_acc_kernel, bits, W),
+        functools.partial(_dequant_acc_kernel, bits, W, acc is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((W, in_block), lambda i: (0, i)),
-            pl.BlockSpec((W,), lambda i: (0,)),
-            pl.BlockSpec((W,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
         interpret=interpret,
-    )(packed, R, keep)
+    )(*args)

@@ -1,16 +1,23 @@
 """Pure-jnp oracles for the LAQ wire kernels (the source of truth in tests).
 
 Semantics mirror core/quantize.py exactly, specialized to flat float32
-vectors with a precomputed radius (the kernels operate post-flattening, one
-leaf at a time; the radius reduction itself is a cheap jnp.max upstream).
+vectors (the kernels operate post-flattening, one leaf at a time).  Covers
+both kernel passes: the absmax radius reduction and the fused
+quantize+pack+moments sweep, plus the accumulating receive side.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
+def absmax_ref(grad: jnp.ndarray, qhat: jnp.ndarray) -> jnp.ndarray:
+    """R = ||grad - qhat||_inf, f32 scalar (pass-1 oracle)."""
+    d = grad.astype(jnp.float32) - qhat.astype(jnp.float32)
+    return jnp.max(jnp.abs(d)).astype(jnp.float32)
+
+
 def quantize_pack_ref(diff: jnp.ndarray, R: jnp.ndarray, bits: int):
-    """diff = grad - qhat, flat f32 [n] (n even for bits=4).
+    """diff = grad - qhat, flat f32 [n] (n a multiple of 8/bits).
 
     Returns (packed uint8 [n*bits/8], q_new_delta f32 [n]) where
     q_new_delta = dequantize(codes) (the innovation actually applied).
@@ -34,9 +41,33 @@ def quantize_pack_ref(diff: jnp.ndarray, R: jnp.ndarray, bits: int):
     return packed, delta
 
 
+def quantize_pack_fused_ref(grad: jnp.ndarray, qhat: jnp.ndarray,
+                            R: jnp.ndarray, bits: int):
+    """Oracle for the fused pass-2 kernel on *unpadded* inputs.
+
+    Returns ``(packed, delta, q_new, err_sq, innovation_sq)`` with the same
+    association order as the kernel: q_new = qhat + delta, err = grad - q_new.
+    """
+    g = grad.astype(jnp.float32)
+    qh = qhat.astype(jnp.float32)
+    n = g.shape[0]
+    pad = (-n) % (8 // bits)          # packing needs whole bytes; the pad
+    d = g - qh                        # codes are sliced off by the caller
+    if pad:
+        d = jnp.concatenate([d, jnp.zeros((pad,), jnp.float32)])
+    packed, delta = quantize_pack_ref(d, R, bits)
+    delta = delta[:n]
+    q_new = qh + delta
+    err = g - q_new
+    return packed, delta, q_new, jnp.sum(err * err), jnp.sum(delta * delta)
+
+
 def dequant_acc_ref(packed: jnp.ndarray, R: jnp.ndarray, keep: jnp.ndarray,
-                    bits: int, n: int):
-    """packed [W, n*bits/8] uint8, R [W], keep [W] -> sum_w delta_w, f32 [n]."""
+                    bits: int, n: int, acc: jnp.ndarray = None):
+    """packed [W, n*bits/8] uint8, R [W], keep [W] -> sum_w delta_w, f32 [n].
+
+    ``acc`` (optional f32 [n]) is the server aggregate folded into the sum.
+    """
     assert bits in (2, 4, 8)
     t = 1.0 / (2.0 ** bits - 1.0)
     if bits < 8:
@@ -49,4 +80,5 @@ def dequant_acc_ref(packed: jnp.ndarray, R: jnp.ndarray, keep: jnp.ndarray,
     Rw = R[:, None]
     delta = 2.0 * t * Rw * codes - Rw
     delta = jnp.where(Rw > 0, delta, 0.0) * keep[:, None]
-    return jnp.sum(delta, axis=0)
+    out = jnp.sum(delta, axis=0)
+    return out if acc is None else acc.astype(jnp.float32) + out

@@ -62,6 +62,7 @@ from repro.core.adaptive import (dequantize_dynamic, quantize_dynamic,
 from repro.core.quantize import (dequantize_innovation, innovation,
                                  quantize_innovation, tree_sq_norm)
 from repro.core.strategy import CommState, StrategyConfig, worker_update
+from repro.core.wire import pack_codes_along_axis, unpack_codes_along_axis
 from repro.core.criterion import push_history
 from repro.models import lm_loss, param_pspecs
 from repro.models.config import ModelConfig
@@ -129,7 +130,6 @@ def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
         bits = strategy.effective_bits
         qints, R_tree = quantize_innovation(grads, qhat, bits, per_leaf)
         provision = bits
-    cpb = 8 // provision                     # codes per payload byte
     keep = jnp.logical_not(skip_mask).astype(jnp.float32)
     n_workers = _axis_size_static(worker_axes)
     use_gather = (compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES and n_workers != 2)
@@ -149,27 +149,16 @@ def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
         if adaptive:
             t_peer = jax.lax.ppermute(t_self, worker_axes, _perm2)
 
-    def _packable(q):
-        return cpb > 1 and q.ndim >= 1 and q.shape[-1] % cpb == 0
-
+    # the axis-packed payload codec lives in core/wire.py (one wire format
+    # shared with the backend interface): pack 8/b codes per byte ALONG THE
+    # LAST DIM (no flatten: a flatten of a model-sharded leaf forces GSPMD
+    # to regather it, and at large meshes trips an XLA spmd_partitioner
+    # assertion); indivisible last dims and provision 8 ship raw codes
     def leaf_payload(q):
-        # pack 8/b codes per byte ALONG THE LAST DIM (no flatten: a flatten
-        # of a model-sharded leaf forces GSPMD to regather it, and at large
-        # meshes trips an XLA spmd_partitioner assertion)
-        if _packable(q):
-            parts = q.reshape(q.shape[:-1] + (q.shape[-1] // cpb, cpb))
-            acc = parts[..., 0]
-            for j in range(1, cpb):
-                acc = acc | (parts[..., j] << (provision * j))
-            return acc.astype(jnp.uint8)
-        return q              # indivisible last dim or provision 8: raw codes
+        return pack_codes_along_axis(q, provision)
 
     def leaf_unpack(payload, orig):
-        if _packable(orig):
-            mask = (1 << provision) - 1
-            parts = [(payload >> (provision * j)) & mask for j in range(cpb)]
-            return jnp.stack(parts, axis=-1).reshape(orig.shape)
-        return payload
+        return unpack_codes_along_axis(payload, provision, orig)
 
     def gather_dequant_sum(q, R, orig, spec):
         pl = leaf_payload(q)
@@ -266,6 +255,16 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
     W = n_workers_of(mesh, worker_axes)
     wa = worker_axes if len(worker_axes) > 1 else worker_axes[0]
     assert wire in ("float", "packed")
+    if strategy.wire_backend != "reference":
+        # Inside partial-auto shard_map the gradient leaves keep their
+        # global shapes with the model axis auto-sharded: the fused
+        # backend's flat per-leaf kernels would force GSPMD to regather
+        # them, and Pallas does not lower under the 0.4.x partial-auto
+        # partitioner.  Wire content is bit-identical across backends by
+        # the core/wire.py contract, so the sharded step pins the
+        # reference pipeline; the fused kernels cover the flat local hot
+        # path (simulated runner, TPU wire microbench).
+        strategy = strategy._replace(wire_backend="reference")
     grad_pspecs = None
     if wire == "packed":
         assert strategy.quantized, "packed wire requires a quantized strategy"

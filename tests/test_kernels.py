@@ -1,5 +1,7 @@
 """Pallas kernel validation: interpret-mode vs the pure-jnp ref oracle,
-swept over shapes / bits / dtypes, plus hypothesis property coverage."""
+swept over shapes / bits / dtypes (incl. the fused-pipeline edge cases:
+R == 0 blocks, non-BLOCK-multiple lengths through ops.py padding, and
+single-worker dequant_acc), plus hypothesis property coverage."""
 import hypothesis
 import hypothesis.strategies as st
 import jax
@@ -7,9 +9,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import dequant_acc, quantize_pack
+from repro.kernels import (absmax, dequant_acc, quantize_pack,
+                           quantize_pack_fused)
 from repro.kernels.quant_pack import BLOCK
-from repro.kernels.ref import dequant_acc_ref, quantize_pack_ref
+from repro.kernels.ref import (absmax_ref, dequant_acc_ref,
+                               quantize_pack_fused_ref, quantize_pack_ref)
+
+# non-BLOCK-multiple lengths exercise the ops.py pad + in-kernel moment
+# masking; 1 and 3 exercise a single nearly-empty block
+EDGE_SHAPES = [1, 3, 128, 5000, BLOCK, BLOCK + 1, 3 * BLOCK + 17]
 
 
 @pytest.mark.parametrize("bits", [2, 4, 8])
@@ -61,6 +69,96 @@ def test_roundtrip_wire_identity():
                       jnp.ones((W,)), bits, n)
     np.testing.assert_allclose(np.asarray(acc),
                                np.asarray(sum(deltas)), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused-pipeline kernels: pass-1 absmax, pass-2 moment side-outputs, and the
+# accumulating receive side.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", EDGE_SHAPES)
+def test_absmax_matches_ref(n):
+    key = jax.random.PRNGKey(n)
+    g = jax.random.normal(key, (n,)) * 7
+    qh = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    assert float(absmax(g, qh)) == float(absmax_ref(g, qh))
+
+
+def test_absmax_zero_innovation():
+    g = jnp.full((2 * BLOCK + 5,), 3.25)
+    assert float(absmax(g, g)) == 0.0
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("n", EDGE_SHAPES)
+def test_quantize_pack_fused_matches_ref(bits, n):
+    """Moment side-outputs must cover exactly the n real elements — the pad
+    tail dequantizes to a nonzero midpoint delta, so an unmasked kernel sum
+    would be wrong for every non-BLOCK-multiple length here."""
+    key = jax.random.PRNGKey(n * bits + 1)
+    g = jax.random.normal(key, (n,)) * 4
+    qh = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    R = absmax(g, qh)
+    packed, delta, q_new, err_sq, inn_sq = quantize_pack_fused(g, qh, R, bits)
+    packed_r, delta_r, qn_r, err_r, inn_r = quantize_pack_fused_ref(g, qh, R,
+                                                                    bits)
+    cpb = 8 // bits
+    np.testing.assert_array_equal(np.asarray(packed[:n // cpb]),
+                                  np.asarray(packed_r[:n // cpb]))
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(delta_r),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(q_new), np.asarray(qn_r), atol=1e-5)
+    np.testing.assert_allclose(float(err_sq), float(err_r), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(inn_sq), float(inn_r), rtol=1e-4,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantize_pack_fused_zero_radius_block(bits):
+    """R == 0 (zero innovation): midpoint codes, exactly zero delta and
+    moments — the q_new recursion must be a no-op."""
+    n = BLOCK + 9
+    g = jnp.linspace(-1.0, 1.0, n)
+    packed, delta, q_new, err_sq, inn_sq = quantize_pack_fused(
+        g, g, jnp.zeros(()), bits)
+    assert int(jnp.max(jnp.abs(delta) > 0)) == 0
+    np.testing.assert_array_equal(np.asarray(q_new), np.asarray(g))
+    assert float(err_sq) == 0.0 and float(inn_sq) == 0.0
+    codes = np.asarray(packed[: n // (8 // bits)])
+    mid = (2 ** bits) // 2
+    expect = sum(mid << (bits * j) for j in range(8 // bits))
+    assert (codes == expect).all()
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("W", [1, 3])
+@pytest.mark.parametrize("n", [5000, 2 * BLOCK])
+def test_dequant_acc_with_accumulator(bits, W, n):
+    """Optional server-aggregate fold-in (one pass) == separate add; W=1
+    covers the single-worker (per-pod) wire."""
+    key = jax.random.PRNGKey(W * bits + n)
+    npad = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    packed = jax.random.randint(key, (W, npad * bits // 8), 0, 256).astype(jnp.uint8)
+    R = jax.random.uniform(jax.random.fold_in(key, 1), (W,)) * 2
+    keep = (jax.random.uniform(jax.random.fold_in(key, 2), (W,)) > 0.3).astype(jnp.float32)
+    acc = jax.random.normal(jax.random.fold_in(key, 3), (n,))
+    fused = dequant_acc(packed, R, keep, bits, n, acc)
+    ref = dequant_acc_ref(packed, R, keep, bits, n, acc)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), atol=1e-4)
+    two_pass = acc + dequant_acc(packed, R, keep, bits, n)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two_pass),
+                               atol=1e-4)
+
+
+def test_dequant_acc_single_worker_zero_radius():
+    """W=1 with R == 0: the worker's payload decodes to exactly zero, so
+    the accumulator passes through untouched."""
+    n = BLOCK
+    packed = jnp.full((1, n // 2), 0x77, jnp.uint8)
+    acc = jnp.arange(n, dtype=jnp.float32)
+    out = dequant_acc(packed, jnp.zeros((1,)), jnp.ones((1,)), 4, n, acc)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(acc))
 
 
 @hypothesis.given(scale=st.floats(1e-3, 1e3), bits=st.sampled_from([2, 4, 8]))
