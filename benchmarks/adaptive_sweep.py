@@ -10,6 +10,12 @@ Headline claim checked: the radius-decay schedule reaches the fixed-4-bit
 final loss with fewer cumulative wire bits; the budgeted controller respects
 its pro-rata allowance while staying near that frontier.
 
+Both adaptive schedules run with **scale-free** thresholds
+(``threshold_mode="rel"``, core/adaptive.py): the fractions below are of the
+bootstrap-round anchor radius, not of this problem's absolute radius scale —
+the same tuple works unchanged on any workload (the earlier absolute tuple
+had to be re-derived from each problem's R trajectory).
+
     PYTHONPATH=src python -m benchmarks.adaptive_sweep
 """
 from __future__ import annotations
@@ -65,11 +71,14 @@ def run(out_rows, results):
                                   steps=STEPS, alpha=ALPHA)
 
     fixed = {b: laq(bits=b) for b in (2, 4, 8)}
-    radius = laq(BitSchedule(kind="radius", grid=(2, 4, 8),
-                             thresholds=(0.005, 0.05)))
+    # fractions of the bootstrap anchor — no per-workload radii.  This
+    # radius trajectory collapses to ~0.1 R_0 within ten rounds, so the
+    # cheap profile fits: 4-bit bootstrap (th1 >= 1 keeps 8-bit
+    # unreachable), 2-bit refinements once R < R_0 / 2.
+    rel = dict(threshold_mode="rel", thresholds=(0.5, 2.0))
+    radius = laq(BitSchedule(kind="radius", grid=(2, 4, 8), **rel))
     budget_total = 2.0 * p * STEPS           # per-worker: ~2 bits/coord/round
-    budget = laq(BitSchedule(kind="budget", grid=(2, 4, 8),
-                             thresholds=(0.005, 0.05),
+    budget = laq(BitSchedule(kind="budget", grid=(2, 4, 8), **rel,
                              total_bits=budget_total, horizon=STEPS))
 
     target = float(fixed[4].loss[-1]) + 1e-7

@@ -1,0 +1,132 @@
+"""Stochastic lazy-aggregation frontier: SGD / QSGD / SLAQ-7a / SLAQ-WK /
+SLAQ-PS bits-and-rounds-to-loss (the workload class of the paper's Table 3,
+ruled by the LASG criteria of core/lazy_rules.py).
+
+Substrate: the paper's logistic-regression mixture with a deliberately small
+minibatch (high gradient variance) — the regime where the deterministic
+eq.-7a criterion degenerates: its quantization-error slack inherits the
+noise floor, workers skip on noise, the reused stale gradients re-send a
+frozen noise realization every round, and the loss plateaus high.  The
+headline claims checked:
+
+* SLAQ-WK reaches the dense-baseline loss level in **fewer uploaded bits
+  than QSGD** (lazy + innovation quantization beats unbiased per-round
+  quantization) ...
+* ... and in **fewer communication rounds than SLAQ-7a** at the same batch
+  size (7a-on-noise either plateaus above the target or crawls to it);
+* SLAQ-PS reaches it in **fewer bits than dense SGD** while skipping most
+  rounds (its trigger is noise-free server state).
+
+    PYTHONPATH=src python -m benchmarks.lasg_frontier
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import StrategyConfig, run_stochastic
+
+from .common import (PAPER_CRITERION, logreg_init, logreg_loss, make_dataset)
+
+STEPS = 300
+BATCH = 10            # of 60 local examples: high minibatch variance
+BITS = 3              # paper's stochastic setting
+ALPHA = 0.5
+SEED = 1
+METHODS = ("sgd", "qsgd", "slaq", "slaq_wk", "slaq_ps")
+LABELS = {"slaq": "slaq_7a"}    # 7a = LAQ criterion replayed on noise
+
+
+def first_reach(result, target: float):
+    """(rounds, bits) at the first *sustained* crossing: the earliest k with
+    ``loss[j] <= target`` for all j >= k.  A plain first-touch would credit
+    7a-on-noise for transient noise dips below the target that it
+    immediately loses again — exactly the artifact this benchmark measures.
+    """
+    loss = np.asarray(result.loss)
+    trailing_max = np.maximum.accumulate(loss[::-1])[::-1]
+    reached = trailing_max <= target
+    if not reached.any():
+        return None
+    k = int(np.argmax(reached))
+    return int(result.cum_uploads[k]), float(result.cum_bits[k])
+
+
+def run(out_rows, results):
+    workers, full = make_dataset()
+    loss_fn = logreg_loss(full[0].shape[0])
+    laq_cfg = StrategyConfig(kind="laq", bits=BITS, criterion=PAPER_CRITERION)
+
+    runs = {}
+    for kind in METHODS:
+        r = run_stochastic(loss_fn, logreg_init(), workers, kind,
+                           steps=STEPS, alpha=ALPHA, batch=BATCH, bits=BITS,
+                           seed=SEED, laq_cfg=laq_cfg)
+        runs[LABELS.get(kind, kind)] = r
+
+    # target: within 20% of the dense-SGD floor (reachable by every method
+    # whose skip decisions track innovation rather than noise)
+    target = 1.2 * float(runs["sgd"].loss[-1])
+
+    frontier = {}
+    for name, r in runs.items():
+        at = first_reach(r, target)
+        frontier[name] = dict(
+            final_loss=float(r.loss[-1]),
+            total_rounds=int(r.cum_uploads[-1]),
+            total_bits=float(r.cum_bits[-1]),
+            rounds_to_target=None if at is None else at[0],
+            bits_to_target=None if at is None else at[1])
+        out_rows.append((f"lasg_frontier_{name}", float(r.cum_bits[-1]),
+                         f"loss={frontier[name]['final_loss']:.4f};"
+                         f"to_target={at}"))
+    results["lasg_frontier"] = dict(target_loss=target, **frontier)
+
+    def to_target(name, field):
+        v = frontier[name][field]
+        return np.inf if v is None else v
+
+    checks = {
+        "bits-to-target: SLAQ-WK < QSGD":
+            to_target("slaq_wk", "bits_to_target")
+            < to_target("qsgd", "bits_to_target"),
+        "rounds-to-target: SLAQ-WK < SLAQ-7a (7a skips on noise)":
+            to_target("slaq_wk", "rounds_to_target")
+            < to_target("slaq_7a", "rounds_to_target"),
+        "bits-to-target: SLAQ-PS < SGD":
+            to_target("slaq_ps", "bits_to_target")
+            < to_target("sgd", "bits_to_target"),
+        "SLAQ-PS skips most rounds":
+            frontier["slaq_ps"]["total_rounds"]
+            < 0.5 * frontier["sgd"]["total_rounds"],
+        "SLAQ-WK final loss beats 7a-on-noise":
+            frontier["slaq_wk"]["final_loss"]
+            < frontier["slaq_7a"]["final_loss"],
+    }
+    results["lasg_frontier/claims"] = checks
+    return checks
+
+
+def main():
+    out_rows, results = [], {}
+    checks = run(out_rows, results)
+    f = results["lasg_frontier"]
+    print(f"target loss = {f['target_loss']:.4f} "
+          f"(1.2x dense-SGD floor, batch={BATCH}, b={BITS})")
+    print(f"{'method':9s} {'final loss':>11s} {'rounds':>7s} {'bits':>11s} "
+          f"{'rounds@tgt':>11s} {'bits@tgt':>11s}")
+    for name in ("sgd", "qsgd", "slaq_7a", "slaq_wk", "slaq_ps"):
+        row = f[name]
+        rt, bt = row["rounds_to_target"], row["bits_to_target"]
+        print(f"{name:9s} {row['final_loss']:11.5f} {row['total_rounds']:7d} "
+              f"{row['total_bits']:11.3e} "
+              f"{(str(rt) if rt is not None else 'never'):>11s} "
+              f"{(f'{bt:.3e}' if bt is not None else 'never'):>11s}")
+    ok = True
+    for k, v in checks.items():
+        print(f"[{'PASS' if v else 'FAIL'}] {k}")
+        ok &= bool(v)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -47,7 +47,10 @@ def main():
                          int(r.cum_uploads[i]), float(r.cum_bits[i])))
         print(f"[gradient]   {kind:5s} loss={float(r.loss[-1]):.6f} "
               f"rounds={int(r.cum_uploads[-1]):6d} bits={float(r.cum_bits[-1]):.3e}")
-    for kind in ("sgd", "qsgd", "ssgd", "slaq"):
+    # stochastic family: the slaq_* kinds differ only in the lazy rule
+    # (core/lazy_rules.py) — eq. 7a replayed on noise vs the variance-aware
+    # LASG-WK / LASG-PS criteria
+    for kind in ("sgd", "qsgd", "ssgd", "slaq", "slaq_wk", "slaq_ps"):
         r = run_stochastic(loss_fn, p0, workers, kind, steps=args.steps,
                            alpha=0.5, batch=30, bits=3, density=0.1,
                            laq_cfg=StrategyConfig(kind="laq", bits=3,
@@ -55,7 +58,7 @@ def main():
         for i in range(0, args.steps, 5):
             rows.append(("stochastic", kind, i, float(r.loss[i]),
                          int(r.cum_uploads[i]), float(r.cum_bits[i])))
-        print(f"[stochastic] {kind:5s} loss={float(r.loss[-1]):.6f} "
+        print(f"[stochastic] {kind:8s} loss={float(r.loss[-1]):.6f} "
               f"rounds={int(r.cum_uploads[-1]):6d} bits={float(r.cum_bits[-1]):.3e}")
 
     with open(args.out, "w", newline="") as f:

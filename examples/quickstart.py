@@ -34,11 +34,12 @@ def main():
     params0 = {"w": jnp.zeros((10, 784))}
     crit = CriterionConfig(D=10, xi=0.8 / 10, t_bar=100)
 
-    # a-laq: per-worker per-round width from the innovation-radius decay
-    # (thresholds sit on this problem's R trajectory: ~5e-3 at the dense
-    # bootstrap round, ~1e-6 at convergence)
+    # a-laq: per-worker per-round width from the innovation-radius decay.
+    # Scale-free thresholds: fractions of the bootstrap-round radius
+    # (core/adaptive.py "rel" mode), so the same tuple works on any
+    # workload — no absolute radii to tune per problem.
     alaq_schedule = BitSchedule(kind="radius", grid=(2, 4, 8),
-                                thresholds=(3e-4, 3e-3))
+                                threshold_mode="rel", thresholds=(0.05, 0.5))
     configs = [(kind, StrategyConfig(kind=kind, bits=4, criterion=crit))
                for kind in ("gd", "qgd", "lag", "laq")]
     configs.append(("a-laq", StrategyConfig(kind="laq", criterion=crit,

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docs gate (CI `docs` job): keeps README and docs/ from rotting.
+
+1. Extracts every ```python fenced block from README.md and executes it
+   (repo root cwd, PYTHONPATH=src) — the quickstart snippet must keep
+   running against the current API.
+2. Checks intra-repo markdown links in README.md and docs/*.md: every
+   relative `[text](path)` target must exist (http(s)/mailto links are
+   skipped, pure `#anchor` links too).
+
+Exit code 0 iff both pass.
+
+    python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.S)
+# [text](target) — excluding images is unnecessary (targets must exist
+# either way); inline code spans don't match because of the bracket.
+LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+
+
+def run_readme_snippets() -> list[str]:
+    errors = []
+    blocks = FENCE_RE.findall((ROOT / "README.md").read_text())
+    if not blocks:
+        return ["README.md has no ```python quickstart block to execute"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for i, block in enumerate(blocks):
+        with tempfile.NamedTemporaryFile("w", suffix=f"_readme_{i}.py",
+                                         delete=False) as f:
+            f.write(block)
+            path = f.name
+        try:
+            proc = subprocess.run([sys.executable, path], cwd=ROOT, env=env,
+                                  capture_output=True, text=True, timeout=600)
+            if proc.returncode != 0:
+                errors.append(
+                    f"README.md python block #{i + 1} failed "
+                    f"(exit {proc.returncode}):\n{proc.stdout}{proc.stderr}")
+            else:
+                sys.stderr.write(f"# README block #{i + 1} ok:\n"
+                                 + proc.stdout)
+        finally:
+            os.unlink(path)
+    return errors
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in DOC_FILES:
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not (md.parent / rel).resolve().exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> None:
+    errors = check_links()
+    errors += run_readme_snippets()
+    for e in errors:
+        print(f"[FAIL] {e}")
+    n_links = sum(len(LINK_RE.findall(p.read_text())) for p in DOC_FILES)
+    print(f"# checked {len(DOC_FILES)} doc files, {n_links} links; "
+          f"{len(errors)} problem(s)")
+    raise SystemExit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()

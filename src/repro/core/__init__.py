@@ -6,20 +6,32 @@ Public API:
                                          -- the LAQ state machine
     quantize_innovation / dequantize_innovation / quantize_roundtrip
                                          -- paper eq. (5)-(6)
-    BitSchedule / select_bits            -- adaptive bit-width (A-LAQ)
+    LasgConfig / LazyState / should_skip_rule
+                                         -- variance-aware lazy rules
+                                            (LASG-WK / LASG-PS; selected via
+                                            StrategyConfig.lazy_rule)
+    BitSchedule / select_bits            -- adaptive bit-width (A-LAQ;
+                                            "rel" mode = scale-free
+                                            bootstrap-anchored thresholds)
     WireBackend / get_backend            -- pluggable quantize pipeline
                                             (reference jnp vs fused 2-pass)
     run_gradient_based / run_stochastic  -- simulated M-worker cluster
+                                            (stochastic kinds: sgd/qsgd/ssgd/
+                                            slaq/slaq_wk/slaq_ps)
 """
 from .adaptive import (BitSchedule, adaptive_roundtrip, grid_costs,
                        select_bits)
-from .criterion import CriterionConfig, rhs_threshold, should_skip, push_history
+from .criterion import (CriterionConfig, history_threshold, push_history,
+                        rhs_threshold, should_skip)
+from .lazy_rules import (LAZY_RULES, LasgConfig, LazyState, init_lazy_state,
+                         should_skip_rule, smoothness_sq, variance_update)
 from .quantize import (dense_bits, dequantize_innovation, pack_codes,
                        pack_nibbles, quantize_innovation, quantize_roundtrip,
                        tau, tree_inf_norm, tree_size, tree_sq_norm,
                        unpack_codes, unpack_nibbles, upload_bits)
 from .strategy import (KINDS, CommState, RoundMetrics, StrategyConfig,
-                       aggregate, finalize_step, init_comm_state, worker_update)
+                       WorkerOut, aggregate, finalize_step, init_comm_state,
+                       worker_update)
 from .wire import (FusedWire, ReferenceWire, WireBackend, WireRoundtrip,
                    get_backend)
 from .compressors import qsgd_compress, ssgd_compress

@@ -8,6 +8,36 @@ per-worker, per-round width ``b_m^k`` from a small grid (default {2, 4, 8}):
 * ``kind="radius"`` — radius-decay schedule: thresholds on the current
   innovation radius; large R (early training / high innovation) buys more
   bits, small R fewer.  Stateless given R.
+
+Thresholds come in two flavors (``threshold_mode``):
+
+* ``"abs"`` — thresholds are absolute radii.  Simple, but per-workload: the
+  radius scale of a logistic-regression gradient and of an LM gradient
+  differ by orders of magnitude, so every problem needs its own tuple.
+* ``"rel"`` — **scale-free**: thresholds are *fractions of an anchor
+  radius* tracked per worker in ``CommState.R_anchor``.  The anchor is a
+  decaying peak envelope ``A^k = max(R_m^k, anchor_decay * A^{k-1})`` with
+  ``A^0 = 0``: at the dense bootstrap round it snaps to that round's radius,
+  and as the innovation radius decays (paper Fig. 3) ``R/A`` falls through
+  the fractions and the width steps down — the same trajectory the absolute
+  thresholds had to be hand-tuned to produce, with no per-workload
+  constants.  Because ``R <= A`` by construction, the single comparison
+  ``R > th * A`` gives fractions a two-sided meaning with no special cases:
+
+  - fractions < 1 partition the post-bootstrap decay as usual;
+  - fractions >= 1 mark grid levels *unreachable after the bootstrap*, and
+    thereby choose the bootstrap width itself: at the bootstrap round
+    ``R == A``, so exactly the fractions < 1 are exceeded and the selected
+    level is ``grid[#{th < 1}]``.  E.g. on ``grid=(2, 4, 8)``,
+    ``(0.05, 0.5)`` bootstraps at 8 bits and uses all three levels, while
+    ``(0.5, 2.0)`` bootstraps at 4 bits and never buys 8 — a cheap
+    schedule for radius trajectories that collapse within a few rounds.
+
+  ``anchor_decay = 1.0`` keeps the running max (a pure bootstrap-round
+  anchor under monotone decay); ``anchor_decay < 1`` makes the envelope
+  track the radius *decay rate*, so after a collapse-then-plateau the
+  anchor closes back onto the plateau and the width re-opens — the knob
+  for non-stationary radius trajectories.
 * ``kind="budget"`` — A-LAQ-style budgeted controller: a cumulative
   per-worker wire-bit budget ``total_bits`` spread over ``horizon`` rounds;
   each round the worker takes the radius-preferred width, then steps down the
@@ -44,6 +74,11 @@ class BitSchedule(NamedTuple):
     # radius schedule: len(grid)-1 ascending thresholds on R_m^k;
     # R <= thresholds[0] -> grid[0], ..., R > thresholds[-1] -> grid[-1]
     thresholds: tuple = (0.05, 0.5)
+    # "abs": thresholds are absolute radii (per-workload tuning);
+    # "rel": thresholds are fractions of the per-worker anchor radius
+    # (bootstrap-round peak envelope; see module docstring) — scale-free
+    threshold_mode: str = "abs"
+    anchor_decay: float = 1.0       # rel only: peak-envelope decay per round
     # budget controller: total per-worker wire bits spread over horizon rounds
     total_bits: float = 0.0
     horizon: int = 0
@@ -56,8 +91,14 @@ class BitSchedule(NamedTuple):
         assert self.kind in ("constant", "radius", "budget"), self.kind
         assert tuple(sorted(self.grid)) == tuple(self.grid), self.grid
         assert all(b in (2, 4, 8) for b in self.grid), self.grid
+        assert self.threshold_mode in ("abs", "rel"), self.threshold_mode
         if self.adaptive:
             assert len(self.thresholds) == len(self.grid) - 1, self
+            assert tuple(sorted(self.thresholds)) == tuple(self.thresholds), self
+        if self.threshold_mode == "rel":
+            assert all(t > 0.0 for t in self.thresholds), \
+                f"rel thresholds are fractions of the anchor radius: {self}"
+            assert 0.0 < self.anchor_decay <= 1.0, self.anchor_decay
         if self.kind == "budget":
             assert self.total_bits > 0 and self.horizon > 0, self
         return self
@@ -70,14 +111,16 @@ def grid_costs(schedule: BitSchedule, p: int, n_radii: int = 1) -> jnp.ndarray:
 
 
 def select_bits(schedule: BitSchedule, R, bits_spent, step, p: int,
-                n_radii: int = 1):
+                n_radii: int = 1, R_anchor=None):
     """Pick this worker's width for the round.
 
     Args: ``R`` — current innovation radius (scalar); ``bits_spent`` — this
     worker's cumulative wire bits; ``step`` — round index; ``p`` — gradient
-    dimension.  Returns ``(b_sel, onehot)`` where ``b_sel`` is the chosen
-    width as a traced f32 scalar and ``onehot`` is its indicator over the
-    grid.
+    dimension; ``R_anchor`` — the worker's anchor radius (``"rel"``
+    threshold mode; ``None``/0 means unanchored yet).  Returns ``(b_sel,
+    onehot, anchor_new)`` where ``b_sel`` is the chosen width as a traced
+    f32 scalar, ``onehot`` its indicator over the grid, and ``anchor_new``
+    the updated anchor (pass-through in ``"abs"`` mode).
 
     Budget invariant (property-tested): whenever the burst-extended allowance
     covers at least the smallest width, the chosen upload fits it; otherwise
@@ -91,6 +134,16 @@ def select_bits(schedule: BitSchedule, R, bits_spent, step, p: int,
     # silently corrupt training; validate() turns that into a trace-time error
     G = len(schedule.grid)
     th = jnp.asarray(schedule.thresholds, jnp.float32)
+    anchor_prev = (jnp.zeros((), jnp.float32) if R_anchor is None
+                   else jnp.asarray(R_anchor, jnp.float32))
+    if schedule.threshold_mode == "rel":
+        # decaying peak envelope; at the bootstrap round (anchor 0) it snaps
+        # to R itself, so R exceeds every fractional threshold -> max width
+        anchor_new = jnp.maximum(jnp.asarray(R, jnp.float32),
+                                 schedule.anchor_decay * anchor_prev)
+        th = th * anchor_new
+    else:
+        anchor_new = anchor_prev
     idx = jnp.sum((R > th).astype(jnp.int32))           # radius preference
     if schedule.kind == "budget":
         costs = grid_costs(schedule, p, n_radii)
@@ -102,7 +155,7 @@ def select_bits(schedule: BitSchedule, R, bits_spent, step, p: int,
         idx = jnp.minimum(idx, idx_budget)
     onehot = jax.nn.one_hot(idx, G, dtype=jnp.float32)
     b_sel = jnp.sum(onehot * jnp.asarray(schedule.grid, jnp.float32))
-    return b_sel, onehot
+    return b_sel, onehot, anchor_new
 
 
 # ---------------------------------------------------------------------------

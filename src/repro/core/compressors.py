@@ -6,8 +6,11 @@
   random sparsification: coordinate i kept with prob p_i ~ |v_i|, rescaled by
   1/p_i; expected density is ``density``.
 
-Both are applied per-worker on the stochastic gradient, all workers upload
-every round (no laziness).
+Both are applied per-worker on the stochastic gradient and upload every
+round by construction — they are the *dense-communication* baselines.  The
+lazy stochastic methods (SLAQ with the eq.-7a, LASG-WK or LASG-PS skip rule;
+see :mod:`repro.core.lazy_rules` and ``StrategyConfig.lazy_rule``) are the
+counterpoint: quantized innovations plus skipped rounds.
 """
 from __future__ import annotations
 

@@ -10,6 +10,12 @@ Worker m skips its upload at iteration k iff
 where the theta-difference history is maintained by the server (here: by the
 replicated SPMD state), eps_m^k is the current quantization error and
 eps_hat_m^{k-1} the error stored at the worker's last upload.
+
+The right-hand side (the xi-weighted history term plus the quantization-error
+slack) is shared threshold machinery: the variance-aware stochastic rules in
+:mod:`repro.core.lazy_rules` (LASG-WK / LASG-PS) reuse
+:func:`rhs_threshold` verbatim and swap only the left-hand side.  Symbol
+mapping to the paper: ``docs/paper-map.md``.
 """
 from __future__ import annotations
 
@@ -25,11 +31,19 @@ class CriterionConfig(NamedTuple):
     include_quant_error: bool = True  # the 3(eps^2 + eps_hat^2) slack term
 
 
+def history_threshold(theta_diff_hist: jnp.ndarray, alpha, M: int,
+                      cfg: CriterionConfig):
+    """The xi-weighted parameter-motion term of (7a):
+    ``1/(alpha^2 M^2) * sum_d xi_d ||theta^{k+1-d} - theta^{k-d}||^2`` with
+    ``theta_diff_hist[d-1] = ||theta^{k+1-d}-theta^{k-d}||^2``."""
+    xi = jnp.full((cfg.D,), cfg.xi, dtype=jnp.float32)
+    return jnp.dot(xi, theta_diff_hist) / (alpha**2 * M**2)
+
+
 def rhs_threshold(theta_diff_hist: jnp.ndarray, alpha, M: int,
                   eps_sq, eps_hat_sq, cfg: CriterionConfig):
-    """Right-hand side of (7a). ``theta_diff_hist[d-1] = ||theta^{k+1-d}-theta^{k-d}||^2``."""
-    xi = jnp.full((cfg.D,), cfg.xi, dtype=jnp.float32)
-    hist_term = jnp.dot(xi, theta_diff_hist) / (alpha**2 * M**2)
+    """Right-hand side of (7a): history term + quantization-error slack."""
+    hist_term = history_threshold(theta_diff_hist, alpha, M, cfg)
     err_term = 3.0 * (eps_sq + eps_hat_sq) if cfg.include_quant_error else 0.0
     return hist_term + err_term
 

@@ -1,0 +1,295 @@
+"""Variance-aware lazy-aggregation skip rules (LASG; Chen et al., 2020).
+
+The paper's criterion (7a) measures the *stale-gradient difference*
+``||Q_m(theta^k) - Q_m(theta_hat_m)||^2`` and skips when it is dominated by
+the recent parameter motion.  With full gradients that difference vanishes as
+training converges, so skipping is driven by real innovation.  With
+*minibatch* gradients it does not vanish: the two gradients are evaluated on
+independent samples, so
+
+    E ||g_m^k - g_hat_m||^2  ~=  ||true drift||^2 + sigma_m^2 + sigma_hat_m^2
+
+carries a variance floor, and — because the quantization radius ``R`` (hence
+the eq.-7a slack ``3(eps^2 + eps_hat^2)``) inherits the same floor — the
+eq.-7a decision degenerates into a noise coin-flip: workers skip (and upload)
+on noise, not on innovation.  LASG's fix is to make the variance an explicit
+term of the rule.  This module implements both LASG-style rule families on
+top of the shared eq.-7 threshold machinery in :mod:`repro.core.criterion`:
+
+``lasg_wk`` — worker-side, variance-corrected stale-gradient difference
+    (LASG-WK1 style).  Each worker maintains an EMA estimate of its own
+    minibatch-gradient variance (second moments around an EMA first moment,
+    both debiased) and skips iff
+
+        ||deltaQ_m^k||^2 + c_var (sigma_m^2 + sigma_hat_m^2)
+            <= hist_term + quant_slack,                 and  t_m < t_bar
+
+    i.e. the *expected* error of reusing the stale gradient — true drift
+    plus the noise energy baked into both gradients — must be covered by the
+    skip dividend.  ``sigma_hat_m^2`` is the variance estimate frozen at the
+    worker's last upload (the noise carried by ``qhat``).  Relative to 7a the
+    rule only shrinks the skip region (by exactly the variance correction),
+    so at high minibatch variance SLAQ-WK uploads strictly more often than
+    7a-on-noise — and converges in fewer rounds *to a target loss*, because
+    uploaded noise averages out across rounds while noise frozen into a
+    skipped worker's stale gradient is re-sent as bias every round
+    (benchmarks/lasg_frontier.py measures both effects).
+
+``lasg_ps`` — server-side, parameter-difference trigger (LASG-PS style).
+    The server knows ``theta^k`` and each worker's iterate at its last upload
+    ``theta_hat_m`` without any worker computation, and by smoothness
+    ``||grad f_m(theta^k) - grad f_m(theta_hat_m)||^2 <= L_m^2 ||theta^k -
+    theta_hat_m||^2``, so parameter drift is a noise-FREE proxy for gradient
+    innovation.  Skip iff
+
+        c_ps * Lhat_m^2 * ||theta^k - theta_hat_m||^2
+            <= hist_term + quant_slack,                 and  t_m < t_bar
+
+    The smoothness constant the LAG/LASG analyses carry as ``L_m`` is not a
+    tunable here: ``Lhat_m^2`` is estimated online as a debiased EMA of the
+    realized ratios ``||deltaQ_m||^2 / ||theta^k - theta_hat_m||^2`` observed
+    at upload rounds, so the rule is scale-free — no per-workload constant
+    (the same anchoring idea as the relative bit-width thresholds in
+    :mod:`repro.core.adaptive`).  Until the first ratio is observed the rule
+    forces uploads (infinite LHS), which the dense bootstrap round satisfies.
+
+``laq7a`` — the paper's criterion, unchanged (:mod:`repro.core.criterion`);
+    the deterministic default and the stochastic strawman.
+
+Selection is via ``StrategyConfig.lazy_rule``; constants live in
+:class:`LasgConfig`; per-worker estimator state lives in :class:`LazyState`
+(a ``CommState`` field, leading worker axis in simulated mode, one slice per
+shard in sharded mode).  Symbol-to-paper mapping: ``docs/paper-map.md``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .criterion import CriterionConfig, rhs_threshold
+from .quantize import tree_sq_norm
+
+Pytree = object
+
+LAZY_RULES = ("laq7a", "lasg_wk", "lasg_ps")
+
+
+class LasgConfig(NamedTuple):
+    """Constants of the LASG rules (paper-map: docs/paper-map.md).
+
+    ``c_var`` — weight on the WK variance correction ``sigma^2 +
+    sigma_hat^2`` (the LASG analysis carries a larger constant; 1.0 applies
+    the de-biased noise energy exactly once).  ``c_ps`` — safety factor on
+    the PS drift trigger (multiplies the online ``Lhat^2``).  ``var_decay``
+    — EMA decay for both the variance estimator (WK) and the smoothness-
+    ratio estimator (PS).
+    """
+    c_var: float = 1.0
+    c_ps: float = 1.0
+    var_decay: float = 0.9
+
+
+class LazyState(NamedTuple):
+    """Per-worker estimator state for the LASG rules.
+
+    Pytree fields are ``None`` for rules that do not need them, so ``laq7a``
+    runs carry only three scalars per worker.  Always float32 (never bf16:
+    the estimators feed threshold comparisons, not the wire).
+    """
+    grad_ema: Optional[Pytree]   # WK: EMA first moment of minibatch grads
+    stat_ema: jax.Array          # WK: raw EMA of squared deviations (sigma^2)
+                                 # PS: raw EMA of innovation/drift ratios (Lhat^2)
+    stat_count: jax.Array        # debias counter for stat_ema
+    sigma_hat_sq: jax.Array      # WK: variance estimate frozen at last upload
+    theta_last: Optional[Pytree]  # PS: iterate at the worker's last upload
+
+
+def empty_lazy_state() -> LazyState:
+    """Scalar placeholder for callers that bypass ``init_comm_state``."""
+    z = jnp.zeros((), jnp.float32)
+    return LazyState(None, z, z, z, None)
+
+
+def init_lazy_state(rule: str, grad_template: Pytree, n_workers: int,
+                    *, worker_dim: bool = True) -> LazyState:
+    """Initial estimator state for ``rule``.
+
+    ``grad_template`` gives one worker's gradient (== parameter) pytree;
+    pytree fields get a leading worker dim in simulated mode.  Estimator
+    EMAs start at zero; ``theta_last`` starts at the template *values* (the
+    initial iterate — both runners and the launch path pass the actual
+    ``params0`` here), so the bootstrap round sees zero drift and the
+    ``Lhat^2`` ratio EMA never observes a ratio against a placeholder
+    iterate (with a zero-filled ``theta_last`` and nonzero ``theta_0``,
+    the first "drift" would be ``||theta_0||^2`` and poison the estimate).
+    """
+    assert rule in LAZY_RULES, rule
+    wshape = (n_workers,) if worker_dim else ()
+
+    def zeros_like_w(l):
+        shape = wshape + l.shape
+        return jnp.zeros(shape, jnp.float32)
+
+    def snapshot_w(l):
+        return jnp.broadcast_to(jnp.asarray(l, jnp.float32), wshape + l.shape)
+
+    return LazyState(
+        grad_ema=(jax.tree.map(zeros_like_w, grad_template)
+                  if rule == "lasg_wk" else None),
+        stat_ema=jnp.zeros(wshape, jnp.float32),
+        stat_count=jnp.zeros(wshape, jnp.float32),
+        sigma_hat_sq=jnp.zeros(wshape, jnp.float32),
+        theta_last=(jax.tree.map(snapshot_w, grad_template)
+                    if rule == "lasg_ps" else None),
+    )
+
+
+# ---------------------------------------------------------------------------
+# WK: per-worker minibatch-gradient variance estimator (EMA second moments).
+# ---------------------------------------------------------------------------
+
+def variance_update(lazy_m: LazyState, grad_m: Pytree, cfg: LasgConfig):
+    """One EMA step of the worker's variance estimator.
+
+    Tracks the first moment ``m`` (EMA of minibatch gradients) and the raw
+    second moment ``v`` (EMA of ``||g - m_debiased||^2``); returns the
+    debiased variance estimate ``sigma_sq`` and the updated ``(grad_ema,
+    stat_ema, stat_count)``.  With zero history the deviation is ``||g||^2``
+    — a deliberate overestimate that keeps the WK rule conservative until
+    the estimator warms up (round 1 is dense anyway); during optimization
+    the mean lags the drift, which again only overestimates sigma^2.
+    """
+    d = cfg.var_decay
+    count = lazy_m.stat_count
+    # debiased previous mean (zeros/1 at count == 0 -> deviation = ||g||^2)
+    denom = jnp.where(count > 0, 1.0 - d ** count, 1.0)
+    dev_sq = tree_sq_norm(jax.tree.map(
+        lambda g, m: g.astype(jnp.float32) - m / denom,
+        grad_m, lazy_m.grad_ema))
+    stat_new = d * lazy_m.stat_ema + (1.0 - d) * dev_sq
+    count_new = count + 1.0
+    sigma_sq = stat_new / (1.0 - d ** count_new)
+    ema_new = jax.tree.map(lambda m, g: d * m + (1.0 - d) * g.astype(jnp.float32),
+                           lazy_m.grad_ema, grad_m)
+    return sigma_sq, lazy_m._replace(grad_ema=ema_new, stat_ema=stat_new,
+                                     stat_count=count_new)
+
+
+def smoothness_sq(lazy_m: LazyState, cfg: LasgConfig):
+    """PS: debiased ``Lhat_m^2`` from the ratio EMA; +inf before the first
+    observed (innovation, drift) pair, which forces an upload."""
+    d = cfg.var_decay
+    est = lazy_m.stat_ema / jnp.maximum(1.0 - d ** lazy_m.stat_count, 1e-12)
+    return jnp.where(lazy_m.stat_count > 0, est, jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# The rules.  All share criterion.rhs_threshold (hist term + quant slack)
+# and the (7b) staleness bound; they differ only in the LHS.
+# ---------------------------------------------------------------------------
+
+def rule_lhs(rule: str, lasg: LasgConfig, *, innovation_sq=None,
+             sigma_sq=None, sigma_hat_sq=None, drift_sq=None, L_sq=None):
+    """Left-hand side of the skip comparison for ``rule`` (see module
+    docstring for the formulas)."""
+    if rule == "laq7a":
+        return innovation_sq
+    if rule == "lasg_wk":
+        return innovation_sq + lasg.c_var * (sigma_sq + sigma_hat_sq)
+    if rule == "lasg_ps":
+        # explicit guard: before the first ratio observation L_sq is +inf
+        # and drift may be 0 — force the upload rather than rely on
+        # inf * 0 = nan falling out of the <= comparison
+        return jnp.where(jnp.isfinite(L_sq), lasg.c_ps * L_sq * drift_sq,
+                         jnp.inf)
+    raise ValueError(f"unknown lazy rule {rule!r}; have {LAZY_RULES}")
+
+
+def should_skip_rule(rule: str, lasg: LasgConfig, crit: CriterionConfig, *,
+                     theta_hist, alpha, M: int, eps_sq, eps_hat_sq, clock,
+                     innovation_sq=None, sigma_sq=None, sigma_hat_sq=None,
+                     drift_sq=None, L_sq=None):
+    """Boolean skip decision for one worker under any of the three rules
+    (vmap over workers upstream, exactly like criterion.should_skip)."""
+    lhs = rule_lhs(rule, lasg, innovation_sq=innovation_sq, sigma_sq=sigma_sq,
+                   sigma_hat_sq=sigma_hat_sq, drift_sq=drift_sq, L_sq=L_sq)
+    rhs = rhs_threshold(theta_hist, alpha, M, eps_sq, eps_hat_sq, crit)
+    return jnp.logical_and(lhs <= rhs, clock < crit.t_bar)
+
+
+# ---------------------------------------------------------------------------
+# Per-worker driver used by strategy.worker_update: evaluate the rule, then
+# commit the upload-conditional state once the decision is known.
+# ---------------------------------------------------------------------------
+
+def lazy_rule_step(rule: str, lasg: LasgConfig, crit: CriterionConfig, *,
+                   grad_m, params, lazy_m: LazyState, innovation_sq, err_sq,
+                   eps_hat_sq_m, clock_m, theta_hist, alpha, n_workers: int):
+    """Evaluate ``rule`` for one worker.
+
+    Returns ``(skip, lazy_pre, stats)`` where ``lazy_pre`` holds the
+    estimator fields that update every round regardless of the decision and
+    ``stats`` the per-round scalars :func:`commit_upload` needs to refresh
+    the upload-frozen fields.
+    """
+    sigma_sq = jnp.zeros((), jnp.float32)
+    drift_sq = jnp.zeros((), jnp.float32)
+    lazy_pre = lazy_m
+    if rule == "lasg_wk":
+        if lazy_m.grad_ema is None:
+            raise ValueError("lazy_rule='lasg_wk' needs LazyState.grad_ema; "
+                             "allocate the state with init_comm_state / "
+                             "init_lazy_state for this rule")
+        sigma_sq, lazy_pre = variance_update(lazy_m, grad_m, lasg)
+    elif rule == "lasg_ps":
+        if params is None:
+            raise ValueError("lazy_rule='lasg_ps' needs the current params "
+                             "threaded into worker_update/aggregate")
+        if lazy_m.theta_last is None:
+            raise ValueError("lazy_rule='lasg_ps' needs LazyState.theta_last; "
+                             "allocate the state with init_comm_state / "
+                             "init_lazy_state for this rule")
+        drift_sq = tree_sq_norm(jax.tree.map(
+            lambda p, t: p.astype(jnp.float32) - t, params, lazy_m.theta_last))
+    skip = should_skip_rule(
+        rule, lasg, crit, theta_hist=theta_hist, alpha=alpha, M=n_workers,
+        eps_sq=err_sq, eps_hat_sq=eps_hat_sq_m, clock=clock_m,
+        innovation_sq=innovation_sq, sigma_sq=sigma_sq,
+        sigma_hat_sq=lazy_m.sigma_hat_sq, drift_sq=drift_sq,
+        L_sq=smoothness_sq(lazy_m, lasg) if rule == "lasg_ps" else None)
+    return skip, lazy_pre, {"sigma_sq": sigma_sq, "drift_sq": drift_sq}
+
+
+def commit_upload(rule: str, lasg: LasgConfig, lazy_pre: LazyState, uploaded,
+                  stats, *, params, innovation_sq) -> LazyState:
+    """Refresh the upload-frozen estimator fields.
+
+    WK freezes the current variance estimate into ``sigma_hat_sq`` (the
+    noise now baked into ``qhat``).  PS snapshots ``theta_last`` and feeds
+    the realized ``innovation/drift`` ratio into the ``Lhat^2`` EMA —
+    only when drift is nonzero, so the bootstrap round (theta unchanged)
+    cannot poison the estimator.
+    """
+    out = lazy_pre
+    if rule == "lasg_wk":
+        out = out._replace(sigma_hat_sq=jnp.where(
+            uploaded, stats["sigma_sq"], lazy_pre.sigma_hat_sq))
+    elif rule == "lasg_ps":
+        drift_sq = stats["drift_sq"]
+        observe = jnp.logical_and(uploaded, drift_sq > 1e-20)
+        ratio = innovation_sq / jnp.maximum(drift_sq, 1e-20)
+        d = lasg.var_decay
+        stat_new = jnp.where(observe,
+                             d * lazy_pre.stat_ema + (1.0 - d) * ratio,
+                             lazy_pre.stat_ema)
+        count_new = jnp.where(observe, lazy_pre.stat_count + 1.0,
+                              lazy_pre.stat_count)
+        fup = uploaded.astype(jnp.float32)
+        theta_new = jax.tree.map(
+            lambda p, t: fup * p.astype(jnp.float32) + (1.0 - fup) * t,
+            params, lazy_pre.theta_last)
+        out = out._replace(stat_ema=stat_new, stat_count=count_new,
+                           theta_last=theta_new)
+    return out

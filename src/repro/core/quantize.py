@@ -9,6 +9,10 @@ All functions operate on pytrees so the "gradient vector" of the paper maps
 directly onto a model's parameter pytree.  A single global radius ``R`` is
 used across the whole pytree, exactly as the paper uses one radius for the
 whole p-dimensional gradient.
+
+The physical byte layout (packing order, padding, sidecars, adaptive width
+announcement) is specified normatively in ``docs/wire-format.md``; the
+packing helpers below implement that spec.
 """
 from __future__ import annotations
 

@@ -56,7 +56,7 @@ def run_gradient_based(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
     def step(carry, _):
         params, cst = carry
         grads = jax.vmap(lambda d: grad_m(params, d))(worker_data)
-        agg, cst, metrics = aggregate(cst, grads, alpha, cfg)
+        agg, cst, metrics = aggregate(cst, grads, alpha, cfg, params=params)
         new_params = jax.tree.map(lambda t, g: t - alpha * g, params, agg)
         dtheta_sq = tree_sq_norm(jax.tree.map(lambda a, b: a - b, new_params, params))
         cst = finalize_step(cst, dtheta_sq)
@@ -77,8 +77,16 @@ def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
                    laq_cfg: Optional[StrategyConfig] = None) -> RunResult:
     """Minibatch methods of Table 3: SGD / QSGD / SSGD / SLAQ.
 
-    Each worker samples ``batch`` local examples per step.  For SLAQ the LAQ
-    state machine runs on the stochastic gradients.
+    Each worker samples ``batch`` local examples per step.  For the SLAQ
+    family the LAQ state machine runs on the stochastic gradients, with the
+    skip criterion picked by ``laq_cfg.lazy_rule`` (core/lazy_rules.py):
+
+    * ``kind="slaq"``    — ``laq_cfg`` as given (default rule: paper eq. 7a,
+      i.e. LAQ-on-noisy-gradients, the LASG paper's strawman);
+    * ``kind="slaq_wk"`` — forces the variance-corrected worker-side rule
+      (``lazy_rule="lasg_wk"``);
+    * ``kind="slaq_ps"`` — forces the server-side parameter-drift rule
+      (``lazy_rule="lasg_ps"``).
     """
     n_workers = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
     n_local = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
@@ -88,8 +96,11 @@ def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
     def global_loss(pp):
         return jnp.sum(jax.vmap(lambda d: loss_fn(pp, d))(worker_data))
 
-    if kind == "slaq":
+    slaq_rules = {"slaq": None, "slaq_wk": "lasg_wk", "slaq_ps": "lasg_ps"}
+    if kind in slaq_rules:
         scfg = laq_cfg or StrategyConfig(kind="laq", bits=bits)
+        if slaq_rules[kind] is not None:
+            scfg = scfg._replace(lazy_rule=slaq_rules[kind])
         state0 = init_comm_state(params0, n_workers, scfg)
     else:
         state0 = init_comm_state(params0, n_workers,
@@ -111,8 +122,9 @@ def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
         grads = jax.vmap(lambda b: jax.tree.map(lambda g: g * scale,
                                                 grad_m(params, b)))(batches)
 
-        if kind == "slaq":
-            agg, cst, metrics = aggregate(cst, grads, alpha, scfg)
+        if kind in slaq_rules:
+            agg, cst, metrics = aggregate(cst, grads, alpha, scfg,
+                                          params=params)
             qe = metrics.radius_max
             mb = metrics.mean_bits
         else:
@@ -134,7 +146,7 @@ def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
             mb = jnp.mean(bits_m) / p
 
         new_params = jax.tree.map(lambda t, g: t - alpha * g, params, agg)
-        if kind == "slaq":
+        if kind in slaq_rules:
             dsq = tree_sq_norm(jax.tree.map(lambda a, b: a - b, new_params, params))
             cst = finalize_step(cst, dsq)
         gn = tree_sq_norm(jax.grad(global_loss)(params))

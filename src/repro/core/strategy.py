@@ -11,7 +11,10 @@ LAQ    yes        yes       paper eq. (4) + criterion (7)
 
 The *server* aggregate  ``agg^k = agg^{k-1} + sum_{m in M^k} deltaQ_m^k``  is
 maintained as replicated SPMD state.  Stochastic variants (SGD/SLAQ) use the
-same machinery on minibatch gradients.
+same machinery on minibatch gradients; for those, ``StrategyConfig.lazy_rule``
+selects the skip criterion — the paper's eq. 7a, or the variance-aware
+LASG-WK / LASG-PS rules of :mod:`repro.core.lazy_rules` whose per-worker
+estimator state rides in ``CommState.lazy``.
 
 Two execution modes share the same per-worker math (``worker_update``):
 
@@ -22,7 +25,6 @@ Two execution modes share the same per-worker math (``worker_update``):
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -31,6 +33,8 @@ import jax.numpy as jnp
 from .adaptive import (BitSchedule, dequantize_dynamic, quantize_dynamic,
                        select_bits, tau_of_selection)
 from .criterion import CriterionConfig, push_history, should_skip
+from .lazy_rules import (LAZY_RULES, LasgConfig, LazyState, commit_upload,
+                         empty_lazy_state, init_lazy_state, lazy_rule_step)
 from .quantize import dense_bits, tree_size, tree_sq_norm, upload_bits
 from .wire import get_backend
 
@@ -55,6 +59,12 @@ class StrategyConfig(NamedTuple):
                                     # (core/wire.py): "reference" jnp vs
                                     # "fused" two-pass Pallas/blocked-jnp;
                                     # bit-identical wire content either way
+    lazy_rule: str = "laq7a"        # skip criterion for lazy kinds
+                                    # (core/lazy_rules.py): "laq7a" paper
+                                    # eq. 7a; "lasg_wk" variance-corrected
+                                    # worker rule; "lasg_ps" server-side
+                                    # parameter-drift rule
+    lasg: LasgConfig = LasgConfig()  # constants of the LASG rules
     # wire mode is a launch-layer concern ("float" psum vs "packed" all_gather);
     # the algorithmic state machine is identical for both.
 
@@ -97,6 +107,11 @@ class CommState(NamedTuple):
     total_bits: jax.Array   # float64-ish accumulator (float32 ok for tests)
     total_uploads: jax.Array
     step: jax.Array
+    lazy: LazyState         # per-worker LASG estimator state (variance /
+                            # smoothness EMAs; pytree fields None for laq7a)
+    R_anchor: jax.Array     # [W] anchor radius of the scale-free ("rel")
+                            # adaptive thresholds (0 until the bootstrap
+                            # round observes the first nonzero R_m)
 
 
 class RoundMetrics(NamedTuple):
@@ -118,10 +133,12 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
         shape = (n_workers,) + l.shape if worker_dim else l.shape
         return jnp.zeros(shape, sdtype)
 
+    assert cfg.lazy_rule in LAZY_RULES, cfg.lazy_rule
     wshape = (n_workers,) if worker_dim else ()
     # clocks start at t_bar when first_round_upload: criterion (7b) then
     # forces a dense first round, bootstrapping qhat / the server aggregate.
     clock0 = cfg.criterion.t_bar if (cfg.lazy and cfg.first_round_upload) else 0
+    lazy_rule = cfg.lazy_rule if cfg.lazy else "laq7a"
     return CommState(
         qhat=jax.tree.map(zeros_like_s, grad_template),
         server_agg=jax.tree.map(lambda l: jnp.zeros(l.shape, sdtype), grad_template),
@@ -132,6 +149,9 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
         total_bits=jnp.zeros((), jnp.float32),
         total_uploads=jnp.zeros((), jnp.int32),
         step=jnp.zeros((), jnp.int32),
+        lazy=init_lazy_state(lazy_rule, grad_template, n_workers,
+                             worker_dim=worker_dim),
+        R_anchor=jnp.zeros(wshape, jnp.float32),
     )
 
 
@@ -139,18 +159,44 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
 # Per-worker update: the heart of LAQ.  Pure; no collectives.
 # ---------------------------------------------------------------------------
 
+class WorkerOut(NamedTuple):
+    """Result of :func:`worker_update`.
+
+    The leading eight fields keep the historical positional order, so
+    *indexed* access (``out[0]``..``out[7]``) and ``zip``-style iteration
+    over a prefix stay valid — but the arity grew from 8, so fixed-arity
+    tuple unpacking of the old return must move to the named fields.
+    """
+    delta_masked: Pytree    # masked contribution to the server refinement
+    qhat_new: Pytree
+    eps_hat_sq_new: jax.Array
+    clock_new: jax.Array
+    uploaded: jax.Array
+    bits_m: jax.Array
+    R: jax.Array
+    width_m: jax.Array      # selected width b_m^k (static width on the
+                            # fixed path, 32 for dense uploads)
+    lazy_new: LazyState     # updated LASG estimator state
+    R_anchor_new: jax.Array  # updated scale-free threshold anchor
+
+
 def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
                   bits_spent_m, theta_hist, alpha, n_workers: int,
-                  cfg: StrategyConfig, step=None):
+                  cfg: StrategyConfig, step=None, lazy_m=None,
+                  R_anchor_m=None, params=None):
     """One worker's bit-width selection + quantize + skip decision.
 
-    Returns ``(delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-    bits_m, R_m, width_m)`` where ``delta_masked`` is this worker's
-    contribution to the server-aggregate refinement (zero if the upload is
-    skipped) and ``width_m`` the selected per-coordinate width b_m^k (the
-    static width on the fixed path, 32 for dense uploads).
+    ``lazy_m`` is this worker's :class:`~repro.core.lazy_rules.LazyState`
+    slice and ``R_anchor_m`` its scale-free threshold anchor (both optional
+    for ``lazy_rule="laq7a"`` with absolute thresholds); ``params`` is the
+    current (replicated) iterate, required by the ``lasg_ps`` rule.  Returns
+    a :class:`WorkerOut`; ``delta_masked`` is zero if the upload is skipped.
     """
     p = tree_size(grad_m)
+    if lazy_m is None:
+        lazy_m = empty_lazy_state()
+    if R_anchor_m is None:
+        R_anchor_m = jnp.zeros((), jnp.float32)
     # sidecar count is wire-backend-INDEPENDENT by construction: both
     # backends exchange one f32 radius per leaf (per-leaf mode) or one
     # global radius, so bits_m accounting is identical across backends
@@ -165,8 +211,9 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
         # fused backend computes R without materializing the diff tensor)
         diff, R_tree, R = backend.innovation(grad_m, qhat_m,
                                              cfg.per_leaf_radius)
-        width_m, onehot = select_bits(sched, R, bits_spent_m, step_, p,
-                                      n_radii=n_sidecars)
+        width_m, onehot, R_anchor_new = select_bits(
+            sched, R, bits_spent_m, step_, p, n_radii=n_sidecars,
+            R_anchor=R_anchor_m)
         codes = quantize_dynamic(diff, R_tree, sched.grid, onehot)
         delta = dequantize_dynamic(codes, R_tree,
                                    tau_of_selection(sched.grid, onehot))
@@ -196,12 +243,29 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
         bits_if_upload = float(dense_bits(p))
         width_m = jnp.full((), 32.0, jnp.float32)
 
+    if not cfg.adaptive:
+        R_anchor_new = R_anchor_m
+
+    lazy_pre, stats = lazy_m, None
     if cfg.lazy:
-        skip = should_skip(innovation_sq, theta_hist, alpha, n_workers,
-                           err_sq, eps_hat_sq_m, clock_m, cfg.criterion)
+        if cfg.lazy_rule == "laq7a":
+            skip = should_skip(innovation_sq, theta_hist, alpha, n_workers,
+                               err_sq, eps_hat_sq_m, clock_m, cfg.criterion)
+        else:
+            skip, lazy_pre, stats = lazy_rule_step(
+                cfg.lazy_rule, cfg.lasg, cfg.criterion, grad_m=grad_m,
+                params=params, lazy_m=lazy_m, innovation_sq=innovation_sq,
+                err_sq=err_sq, eps_hat_sq_m=eps_hat_sq_m, clock_m=clock_m,
+                theta_hist=theta_hist, alpha=alpha, n_workers=n_workers)
     else:
         skip = jnp.zeros((), bool)
     uploaded = jnp.logical_not(skip)
+    if stats is not None:
+        lazy_new = commit_upload(cfg.lazy_rule, cfg.lasg, lazy_pre, uploaded,
+                                 stats, params=params,
+                                 innovation_sq=innovation_sq)
+    else:
+        lazy_new = lazy_pre
 
     fup = uploaded.astype(jnp.float32)
     delta_masked = jax.tree.map(lambda d: d * fup, delta)
@@ -210,30 +274,38 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
     eps_hat_sq_new = jnp.where(uploaded, err_sq, eps_hat_sq_m)
     clock_new = jnp.where(uploaded, 0, clock_m + 1).astype(jnp.int32)
     bits_m = fup * bits_if_upload
-    return (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-            bits_m, R, width_m)
+    return WorkerOut(delta_masked, qhat_new, eps_hat_sq_new, clock_new,
+                     uploaded, bits_m, R, width_m, lazy_new, R_anchor_new)
 
 
 # ---------------------------------------------------------------------------
 # Simulated cluster mode (vmap over a leading worker axis).
 # ---------------------------------------------------------------------------
 
-def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig):
+def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig,
+              params: Pytree = None):
     """Aggregate per-worker gradients (leading dim W) into the LAQ gradient.
 
-    Returns ``(agg_grad, new_state, metrics)``.  The caller applies
-    ``theta <- theta - alpha * agg_grad`` (or feeds agg_grad to an optimizer)
-    and then calls :func:`finalize_step` with the realized parameter change.
+    ``params`` is the current (replicated) iterate — required by the
+    ``lasg_ps`` lazy rule, ignored otherwise.  Returns ``(agg_grad,
+    new_state, metrics)``.  The caller applies ``theta <- theta - alpha *
+    agg_grad`` (or feeds agg_grad to an optimizer) and then calls
+    :func:`finalize_step` with the realized parameter change.
     """
     n_workers = state.clocks.shape[0]
 
-    upd = functools.partial(worker_update, theta_hist=state.theta_hist,
-                            alpha=alpha, n_workers=n_workers, cfg=cfg,
-                            step=state.step)
+    def upd(grad_m, qhat_m, eps_m, clock_m, spent_m, lazy_m, anchor_m):
+        # theta_hist / params are replicated across workers: closed over,
+        # not vmapped
+        return worker_update(grad_m, qhat_m, eps_m, clock_m, spent_m,
+                             state.theta_hist, alpha, n_workers, cfg,
+                             step=state.step, lazy_m=lazy_m,
+                             R_anchor_m=anchor_m, params=params)
+
     (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-     bits_m, R_m, width_m) = jax.vmap(upd)(grads, state.qhat,
-                                           state.eps_hat_sq, state.clocks,
-                                           state.bits_spent)
+     bits_m, R_m, width_m, lazy_new, anchor_new) = jax.vmap(upd)(
+         grads, state.qhat, state.eps_hat_sq, state.clocks,
+         state.bits_spent, state.lazy, state.R_anchor)
 
     # Server recursion: agg^k = agg^{k-1} + sum_m deltaQ_m.
     agg = jax.tree.map(lambda a, d: a + jnp.sum(d, axis=0),
@@ -254,6 +326,7 @@ def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig):
         total_bits=state.total_bits + bits,
         total_uploads=state.total_uploads + uploads,
         step=state.step + 1,
+        lazy=lazy_new, R_anchor=anchor_new,
     )
     return agg, new_state, metrics
 

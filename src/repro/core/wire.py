@@ -32,6 +32,9 @@ but XLA may re-derive a fused producer inside a reduce with a different
 mul-add contraction, and the Pallas lowering emits blockwise partial sums —
 so moments are only guaranteed to float32 reduction accuracy (~1e-7
 relative), which the skip criterion's O(1) threshold margins tolerate.
+
+The byte-level wire layout both backends emit is specified normatively in
+``docs/wire-format.md``.
 """
 from __future__ import annotations
 

@@ -42,9 +42,19 @@ Packed wire format (per worker, per round):
   delta: bit-identical results, analytic bit accounting, no physical byte
   saving on that jax.
 
+The skip criterion is pluggable (``StrategyConfig.lazy_rule``): the paper's
+eq. 7a, or the variance-aware LASG rules (core/lazy_rules.py) whose
+per-worker estimator state (``CommState.lazy``: variance / smoothness EMAs,
+plus the stale-iterate snapshot for ``lasg_ps``) and the scale-free adaptive
+threshold anchor (``CommState.R_anchor``) ride through the sharded step like
+``qhat`` — one slice per worker shard, reference wire path.
+
 Tensor parallelism (``model`` axis) stays under GSPMD: inside the manual
 region, model-sharded arrays keep their global shapes and einsum/norm
 reductions over them lower to the usual collectives.
+
+The packed wire byte layout this module exchanges is specified normatively
+in ``docs/wire-format.md``.
 """
 from __future__ import annotations
 
@@ -283,6 +293,8 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         eps_hat_sq = jnp.squeeze(comm.eps_hat_sq, 0)
         clock = jnp.squeeze(comm.clocks, 0)
         bits_spent = jnp.squeeze(comm.bits_spent, 0)
+        lazy = _squeeze0(comm.lazy)        # LASG estimator state (this shard)
+        R_anchor = jnp.squeeze(comm.R_anchor, 0)
 
         def loss_fn(p, b):
             return lm_loss(p, b, cfg) / W          # sum_m loss_m == global mean
@@ -313,10 +325,12 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
                     carry, _ = acc_body(carry, jax.tree.map(lambda x: x[i], mb))
                 loss, grads = carry
 
+        wu = worker_update(grads, qhat, eps_hat_sq, clock, bits_spent,
+                           comm.theta_hist, lr, W, strategy, step=comm.step,
+                           lazy_m=lazy, R_anchor_m=R_anchor, params=params)
         (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-         bits_m, R, width_m) = worker_update(grads, qhat, eps_hat_sq, clock,
-                                             bits_spent, comm.theta_hist, lr,
-                                             W, strategy, step=comm.step)
+         bits_m, width_m) = (wu.delta_masked, wu.qhat_new, wu.eps_hat_sq_new,
+                             wu.clock_new, wu.uploaded, wu.bits_m, wu.width_m)
 
         if wire == "float":
             agg_delta = jax.tree.map(
@@ -347,6 +361,8 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             total_uploads=comm.total_uploads
             + jax.lax.psum(uploaded.astype(jnp.int32), wa),
             step=comm.step + 1,
+            lazy=_unsqueeze0(wu.lazy_new),
+            R_anchor=wu.R_anchor_new[None],
         )
         metrics = StepMetrics(
             loss=jax.lax.psum(loss, wa),
@@ -366,6 +382,8 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             server_agg=jax.tree.map(lambda _: P(), comm.server_agg),
             eps_hat_sq=P(wa), clocks=P(wa), bits_spent=P(wa), theta_hist=P(),
             total_bits=P(), total_uploads=P(), step=P(),
+            lazy=jax.tree.map(lambda _: P(wa), comm.lazy),
+            R_anchor=P(wa),
         )
         sm = compat.shard_map(
             sharded_step, mesh=mesh,
@@ -418,7 +436,10 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
     # optimizer state mirrors params (AdamState carries extra scalars)
     def opt_spec(leaf_path, leaf):
         return _match_param_spec(leaf, params_abs, pspecs)
-    comm_abs = jax.eval_shape(lambda: init_comm_state(params_abs, W, strategy))
+    # params passed as a real argument (not closed over) so init_comm_state
+    # sees tracers: the lasg_ps theta_last snapshot reads template *values*
+    comm_abs = jax.eval_shape(lambda p: init_comm_state(p, W, strategy),
+                              params_abs)
 
     def shard(abs_leaf, spec):
         return jax.ShapeDtypeStruct(abs_leaf.shape, abs_leaf.dtype,
@@ -439,6 +460,19 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
     def comm_leaf_spec(qh_leaf, pspec):
         return shard(qh_leaf, P(*((wa,) + tuple(pspec))))
 
+    def lazy_specs(lz):
+        # pytree fields mirror the param pytree with a leading worker dim
+        # (like qhat); scalar estimator fields shard over the worker axis
+        def tree_specs(t):
+            return None if t is None else jax.tree.map(comm_leaf_spec, t, pspecs)
+        return lz._replace(
+            grad_ema=tree_specs(lz.grad_ema),
+            stat_ema=shard(lz.stat_ema, P(wa)),
+            stat_count=shard(lz.stat_count, P(wa)),
+            sigma_hat_sq=shard(lz.sigma_hat_sq, P(wa)),
+            theta_last=tree_specs(lz.theta_last),
+        )
+
     comm_s = CommState(
         qhat=jax.tree.map(comm_leaf_spec, comm_abs.qhat, pspecs),
         server_agg=jax.tree.map(lambda l, sp: shard(l, sp),
@@ -450,6 +484,8 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         total_bits=shard(comm_abs.total_bits, P()),
         total_uploads=shard(comm_abs.total_uploads, P()),
         step=shard(comm_abs.step, P()),
+        lazy=lazy_specs(comm_abs.lazy),
+        R_anchor=shard(comm_abs.R_anchor, P(wa)),
     )
     step_s = shard(jax.ShapeDtypeStruct((), jnp.int32), P())
     return TrainState(params_s, opt_s, comm_s, step_s)

@@ -84,8 +84,8 @@ def test_property_budget_controller_respects_budget(spent, step, R):
     p = 1000
     sched = BitSchedule(kind="budget", grid=GRID, thresholds=(0.05, 0.5),
                         total_bits=4.0 * p * 200, horizon=200).validate()
-    b, onehot = select_bits(sched, jnp.float32(R), jnp.float32(spent),
-                            jnp.int32(step), p)
+    b, onehot, _ = select_bits(sched, jnp.float32(R), jnp.float32(spent),
+                               jnp.int32(step), p)
     b = float(b)
     assert b in GRID
     assert float(jnp.sum(onehot)) == 1.0
@@ -104,9 +104,9 @@ def test_property_budget_controller_respects_budget(spent, step, R):
 def test_property_radius_schedule_monotone(R):
     """More innovation radius never buys fewer bits."""
     sched = BitSchedule(kind="radius", grid=GRID, thresholds=(0.05, 0.5)).validate()
-    b_lo, _ = select_bits(sched, jnp.float32(R), jnp.float32(0), jnp.int32(0), 100)
-    b_hi, _ = select_bits(sched, jnp.float32(R * 2 + 1e-3), jnp.float32(0),
-                          jnp.int32(0), 100)
+    b_lo, _, _ = select_bits(sched, jnp.float32(R), jnp.float32(0), jnp.int32(0), 100)
+    b_hi, _, _ = select_bits(sched, jnp.float32(R * 2 + 1e-3), jnp.float32(0),
+                             jnp.int32(0), 100)
     assert float(b_hi) >= float(b_lo)
     assert float(b_lo) in GRID
 
@@ -127,6 +127,82 @@ def test_budget_run_tracks_rate():
     ks = np.arange(1, steps + 1)
     assert np.all(cum <= rate * ks + per_round_cap + 1e-3)
     assert np.isfinite(float(r.loss[-1]))
+
+
+# ---------------------------------------------------------------------------
+# Scale-free ("rel") thresholds: fractions of the bootstrap-anchored radius.
+# ---------------------------------------------------------------------------
+
+def test_rel_mode_bootstrap_selects_max_width():
+    """With no anchor yet, the anchor snaps to R itself, so any positive R
+    exceeds every fractional threshold -> the dense bootstrap quantizes at
+    the top of the grid, whatever the problem's radius scale."""
+    sched = BitSchedule(kind="radius", grid=GRID, threshold_mode="rel",
+                        thresholds=(0.01, 0.1))
+    for R in (1e-6, 1.0, 1e6):
+        b, _, anchor = select_bits(sched, jnp.float32(R), jnp.float32(0),
+                                   jnp.int32(0), 100)
+        assert float(b) == max(GRID)
+        assert float(anchor) == np.float32(R)
+
+
+def test_rel_mode_width_steps_down_with_decaying_radius():
+    """Against a frozen anchor, the width follows R/anchor through the
+    fractions; the running-max anchor never decreases (anchor_decay=1)."""
+    sched = BitSchedule(kind="radius", grid=GRID, threshold_mode="rel",
+                        thresholds=(0.01, 0.1))
+    anchor = jnp.float32(0.0)
+    widths = []
+    for R in (8.0, 2.0, 0.5, 0.05, 0.05e-1):
+        b, _, anchor = select_bits(sched, jnp.float32(R), jnp.float32(0),
+                                   jnp.int32(0), 100, R_anchor=anchor)
+        widths.append(float(b))
+    assert float(anchor) == 8.0          # running max = bootstrap radius
+    assert widths[0] == max(GRID)
+    assert widths == sorted(widths, reverse=True)
+    assert widths[-1] == min(GRID)
+
+
+def test_rel_mode_fraction_above_one_picks_bootstrap_width():
+    """Fractions >= 1 mark levels unreachable after the bootstrap, and at
+    the bootstrap round (R == anchor) exactly the fractions < 1 are
+    exceeded: (0.5, 2.0) bootstraps at the middle of the grid and never
+    buys the top."""
+    sched = BitSchedule(kind="radius", grid=GRID, threshold_mode="rel",
+                        thresholds=(0.5, 2.0))
+    b, _, anchor = select_bits(sched, jnp.float32(3.0), jnp.float32(0),
+                               jnp.int32(0), 100)          # bootstrap
+    assert float(b) == 4
+    for R in (2.9, 1.51, 1.0, 0.1):                        # post-bootstrap
+        b, _, anchor = select_bits(sched, jnp.float32(R), jnp.float32(0),
+                                   jnp.int32(0), 100, R_anchor=anchor)
+        assert float(b) == (4 if R > 1.5 else 2)
+
+
+def test_rel_mode_validate_rejects_bad_schedules():
+    with pytest.raises(AssertionError):
+        BitSchedule(kind="radius", grid=GRID, threshold_mode="rel",
+                    thresholds=(0.5, 0.1)).validate()      # not ascending
+    with pytest.raises(AssertionError):
+        BitSchedule(kind="radius", grid=GRID, threshold_mode="rel",
+                    thresholds=(0.01, 0.1), anchor_decay=1.5).validate()
+    with pytest.raises(AssertionError):
+        BitSchedule(kind="radius", grid=GRID, threshold_mode="oops",
+                    thresholds=(0.01, 0.1)).validate()
+
+
+def test_rel_mode_beats_fixed_bits_to_loss_without_tuning():
+    """The headline scale-free claim: generic fractions (no per-problem
+    radii) reach the fixed-4-bit loss with fewer cumulative wire bits."""
+    fixed = _run(StrategyConfig(kind="laq", bits=4, criterion=CRIT))
+    sched = BitSchedule(kind="radius", grid=GRID, threshold_mode="rel",
+                        thresholds=(0.01, 0.1))
+    ad = _run(StrategyConfig(kind="laq", criterion=CRIT, bit_schedule=sched))
+    target = float(fixed.loss[-1]) + 1e-4
+    reached = np.asarray(ad.loss) <= target
+    assert reached.any(), (float(ad.loss[-1]), target)
+    k = int(np.argmax(reached))
+    assert float(ad.cum_bits[k]) < float(fixed.cum_bits[-1])
 
 
 # ---------------------------------------------------------------------------

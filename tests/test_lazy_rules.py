@@ -1,0 +1,279 @@
+"""Variance-aware lazy rules (core/lazy_rules.py) + shared criterion edge
+cases.
+
+Covers the LASG-WK / LASG-PS estimators and skip decisions, the regression
+contract that SLAQ-WK uploads strictly more than 7a-on-noise at high
+minibatch variance (the LASG paper's central failure mode of the naive
+rule), and the eq.-7 edge cases every rule shares: t_bar forcing uploads,
+``include_quant_error=False``, and a history ring shorter than the run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CriterionConfig, LasgConfig, LazyState,
+                        StrategyConfig, init_lazy_state, rhs_threshold,
+                        run_gradient_based, run_stochastic, should_skip_rule,
+                        smoothness_sq, variance_update)
+from repro.core.lazy_rules import commit_upload, lazy_rule_step
+from repro.data import classification_dataset, split_workers
+
+RULES = ("laq7a", "lasg_wk", "lasg_ps")
+M = 10
+
+
+# ---------------------------------------------------------------------------
+# Substrates.
+# ---------------------------------------------------------------------------
+
+def logistic_setup(n_per_class=30, seed=0):
+    X, Y = classification_dataset(jax.random.PRNGKey(seed),
+                                  n_per_class=n_per_class)
+    workers = split_workers(X, Y, M)
+    N = X.shape[0]
+
+    def loss_fn(params, data):
+        x, y = data
+        logits = x @ params["w"].T
+        ce = -jnp.sum(y * jax.nn.log_softmax(logits, -1))
+        return (ce + 0.5 * 0.01 * jnp.sum(params["w"] ** 2)) / N
+
+    return loss_fn, {"w": jnp.zeros((10, 784))}, workers
+
+
+def quadratic_problem(p=20, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kc, ka = jax.random.split(key)
+    centers = jax.random.normal(kc, (M, p))
+    scales = 0.5 + jax.random.uniform(ka, (M, p))
+
+    def loss_fn(params, data):
+        c, a = data
+        return 0.5 * jnp.sum(a * jnp.square(params["x"] - c)) / M
+    return loss_fn, {"x": jnp.zeros((p,))}, (centers, scales)
+
+
+def run_slaq(kind, *, steps=120, batch=5, bits=3, alpha=0.5,
+             crit=None, seed=1):
+    loss_fn, p0, workers = logistic_setup()
+    crit = crit or CriterionConfig(D=10, xi=0.8 / 10, t_bar=100)
+    return run_stochastic(loss_fn, p0, workers, kind, steps=steps,
+                          alpha=alpha, batch=batch, bits=bits, seed=seed,
+                          laq_cfg=StrategyConfig(kind="laq", bits=bits,
+                                                 criterion=crit))
+
+
+# ---------------------------------------------------------------------------
+# The regression contract: at high minibatch variance, eq. 7a skips on noise
+# (the quant-error slack inherits the variance floor) while the WK
+# correction shrinks the skip region — strictly more uploads, better loss.
+# ---------------------------------------------------------------------------
+
+def test_wk_skips_strictly_less_than_7a_at_high_variance():
+    r7a = run_slaq("slaq")
+    rwk = run_slaq("slaq_wk")
+    up7a, upwk = int(r7a.cum_uploads[-1]), int(rwk.cum_uploads[-1])
+    # 7a-on-noise over-skips by an order of magnitude; WK must upload
+    # strictly more (= skip strictly less)
+    assert upwk > up7a, (upwk, up7a)
+    # ... and converts those uploads into a strictly better final loss
+    assert float(rwk.loss[-1]) < float(r7a.loss[-1])
+
+
+def test_wk_lhs_never_below_7a_lhs():
+    """Pointwise guarantee behind the regression: the WK correction only
+    shrinks the skip region, for any nonneg variance estimates."""
+    key = jax.random.PRNGKey(0)
+    hist = jax.random.uniform(key, (10,))
+    crit = CriterionConfig(D=10, xi=0.08, t_bar=100)
+    lasg = LasgConfig()
+    for i in range(20):
+        k = jax.random.fold_in(key, i)
+        inn, s1, s2, eps = jax.random.uniform(k, (4,)) * 3.0
+        skip_wk = should_skip_rule(
+            "lasg_wk", lasg, crit, theta_hist=hist, alpha=0.3, M=M,
+            eps_sq=eps, eps_hat_sq=eps, clock=jnp.int32(0),
+            innovation_sq=inn, sigma_sq=s1, sigma_hat_sq=s2)
+        skip_7a = should_skip_rule(
+            "laq7a", lasg, crit, theta_hist=hist, alpha=0.3, M=M,
+            eps_sq=eps, eps_hat_sq=eps, clock=jnp.int32(0),
+            innovation_sq=inn)
+        assert (not bool(skip_wk)) or bool(skip_7a)
+
+
+def test_ps_skips_and_matches_sgd_loss():
+    """PS saves an order of magnitude of rounds vs dense SGD while landing
+    at the same loss level (its trigger is noise-free server state)."""
+    rps = run_slaq("slaq_ps", steps=150)
+    rsgd = run_slaq("sgd", steps=150)
+    dense_uploads = 150 * M
+    assert int(rps.cum_uploads[-1]) < 0.5 * dense_uploads
+    assert float(rps.loss[-1]) < 1.5 * float(rsgd.loss[-1])
+
+
+# ---------------------------------------------------------------------------
+# Estimators.
+# ---------------------------------------------------------------------------
+
+def test_variance_estimator_converges_to_true_variance():
+    key = jax.random.PRNGKey(0)
+    p, sigma = 50, 0.7
+    true_var = p * sigma ** 2          # E||g - mean||^2 for iid coords
+    lz = init_lazy_state("lasg_wk", {"x": jnp.zeros((p,))}, 1,
+                         worker_dim=False)
+    cfg = LasgConfig(var_decay=0.9)
+    for i in range(300):
+        g = {"x": 1.5 + sigma * jax.random.normal(jax.random.fold_in(key, i),
+                                                  (p,))}
+        sigma_sq, lz = variance_update(lz, g, cfg)
+    assert 0.7 * true_var < float(sigma_sq) < 1.4 * true_var
+
+
+def test_smoothness_estimator_forces_upload_until_observed():
+    lz = init_lazy_state("lasg_ps", {"x": jnp.zeros((4,))}, 1,
+                         worker_dim=False)
+    cfg = LasgConfig()
+    assert not np.isfinite(float(smoothness_sq(lz, cfg)))   # -> upload
+    # an upload with nonzero drift feeds the ratio EMA
+    params = {"x": jnp.ones((4,))}
+    lz2 = commit_upload("lasg_ps", cfg, lz, jnp.asarray(True),
+                        {"drift_sq": jnp.float32(4.0),
+                         "sigma_sq": jnp.float32(0.0)},
+                        params=params, innovation_sq=jnp.float32(8.0))
+    est = float(smoothness_sq(lz2, cfg))
+    assert np.isclose(est, 2.0)        # ratio 8/4, debiased single sample
+    np.testing.assert_array_equal(np.asarray(lz2.theta_last["x"]),
+                                  np.ones((4,)))
+    # a skipped round must freeze theta_last and the EMA
+    lz3 = commit_upload("lasg_ps", cfg, lz2, jnp.asarray(False),
+                        {"drift_sq": jnp.float32(9.0),
+                         "sigma_sq": jnp.float32(0.0)},
+                        params={"x": jnp.full((4,), 5.0)},
+                        innovation_sq=jnp.float32(1.0))
+    assert float(smoothness_sq(lz3, cfg)) == est
+    np.testing.assert_array_equal(np.asarray(lz3.theta_last["x"]),
+                                  np.ones((4,)))
+
+
+def test_ps_estimator_not_poisoned_by_nonzero_init_params():
+    """Regression: theta_last initializes to the *initial iterate*, not
+    zeros — otherwise the first 'drift' observation would be
+    ||theta_0||^2 and a nonzero-init run (the LM launch path) would record
+    a garbage Lhat^2 ratio at the bootstrap round."""
+    loss_fn, p0, data = quadratic_problem()
+    theta0 = {"x": jnp.full((20,), 3.0)}          # far from zero
+    cfg = StrategyConfig(kind="laq", bits=6, lazy_rule="lasg_ps",
+                         criterion=CriterionConfig(D=10, xi=0.08, t_bar=100))
+    from repro.core import init_comm_state, aggregate, finalize_step
+
+    state = init_comm_state(theta0, M, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(state.lazy.theta_last["x"][0]), np.asarray(theta0["x"]))
+    grad_m = jax.grad(loss_fn)
+    grads = jax.vmap(lambda d: grad_m(theta0, d))(data)
+    _, state, _ = aggregate(state, grads, 0.3, cfg, params=theta0)
+    # bootstrap round: everyone uploads (no Lhat yet), drift is exactly 0,
+    # so NO ratio is observed — the estimator stays unbiased-virgin
+    assert float(jnp.max(state.lazy.stat_count)) == 0.0
+    assert float(jnp.max(state.lazy.stat_ema)) == 0.0
+    # and a full run from the same nonzero init converges under PS
+    r = run_gradient_based(loss_fn, theta0, data, cfg, steps=300, alpha=0.3)
+    assert float(r.grad_norm_sq[-1]) < 1e-3
+    # skipping actually happens (the estimator recovers real ratios)
+    assert int(r.cum_uploads[-1]) < 0.8 * 300 * M
+
+
+def test_ps_requires_params():
+    lz = init_lazy_state("lasg_ps", {"x": jnp.zeros((4,))}, 1,
+                         worker_dim=False)
+    with pytest.raises(ValueError, match="params"):
+        lazy_rule_step("lasg_ps", LasgConfig(), CriterionConfig(),
+                       grad_m={"x": jnp.zeros((4,))}, params=None,
+                       lazy_m=lz, innovation_sq=jnp.float32(0),
+                       err_sq=jnp.float32(0), eps_hat_sq_m=jnp.float32(0),
+                       clock_m=jnp.int32(0), theta_hist=jnp.zeros((10,)),
+                       alpha=0.3, n_workers=M)
+
+
+# ---------------------------------------------------------------------------
+# Criterion edge cases shared by all three rules.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", RULES)
+def test_t_bar_forces_upload_under_every_rule(rule):
+    """(7b) is rule-independent: with t_bar = 5 every worker uploads at
+    least once every 6 rounds even when the rule's (7a)-side always skips
+    (huge xi makes the threshold astronomically large)."""
+    loss_fn, p0, data = quadratic_problem()
+    crit = CriterionConfig(D=5, xi=1e6, t_bar=5)
+    cfg = StrategyConfig(kind="laq", bits=6, criterion=crit, lazy_rule=rule)
+    r = run_gradient_based(loss_fn, p0, data, cfg, steps=60, alpha=0.3)
+    ups = np.asarray(r.cum_uploads)
+    assert int(ups[-1]) >= M * (60 // 6)
+    # and between forced refreshes everyone skips: no more than the forced
+    # cadence plus the dense bootstrap round
+    assert int(ups[-1]) <= M * (60 // 6 + 1)
+
+
+def test_include_quant_error_false_tightens_rhs_and_uploads_more():
+    eps = jnp.float32(0.5)
+    hist = jnp.ones((10,), jnp.float32)
+    with_slack = rhs_threshold(hist, 0.3, M, eps, eps,
+                               CriterionConfig(include_quant_error=True))
+    without = rhs_threshold(hist, 0.3, M, eps, eps,
+                            CriterionConfig(include_quant_error=False))
+    assert np.isclose(float(without), float(with_slack) - 3.0 * float(eps + eps),
+                      rtol=1e-5, atol=1e-6)
+
+    loss_fn, p0, data = quadratic_problem()
+
+    def run(include):
+        crit = CriterionConfig(D=10, xi=0.08, t_bar=100,
+                               include_quant_error=include)
+        cfg = StrategyConfig(kind="laq", bits=3, criterion=crit)
+        return run_gradient_based(loss_fn, p0, data, cfg, steps=200,
+                                  alpha=0.3)
+
+    r_with, r_without = run(True), run(False)
+    # dropping the slack can only shrink the skip region
+    assert int(r_without.cum_uploads[-1]) >= int(r_with.cum_uploads[-1])
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_history_shorter_than_run(rule):
+    """D = 3 against a 150-step run: the ring wraps ~50 times and the run
+    still converges under every rule."""
+    loss_fn, p0, data = quadratic_problem()
+    crit = CriterionConfig(D=3, xi=0.8 / 3, t_bar=50)
+    cfg = StrategyConfig(kind="laq", bits=6, criterion=crit, lazy_rule=rule)
+    r = run_gradient_based(loss_fn, p0, data, cfg, steps=150, alpha=0.3)
+    assert float(r.grad_norm_sq[-1]) < 1e-3
+    assert np.isfinite(float(r.loss[-1]))
+
+
+# ---------------------------------------------------------------------------
+# State plumbing.
+# ---------------------------------------------------------------------------
+
+def test_lazy_state_allocation_matches_rule():
+    tmpl = {"x": jnp.zeros((7,))}
+    s7 = init_lazy_state("laq7a", tmpl, 4)
+    assert s7.grad_ema is None and s7.theta_last is None
+    swk = init_lazy_state("lasg_wk", tmpl, 4)
+    assert swk.grad_ema["x"].shape == (4, 7) and swk.theta_last is None
+    sps = init_lazy_state("lasg_ps", tmpl, 4)
+    assert sps.theta_last["x"].shape == (4, 7) and sps.grad_ema is None
+    assert isinstance(s7, LazyState)
+
+
+@pytest.mark.parametrize("rule", ("lasg_wk", "lasg_ps"))
+def test_rules_run_deterministically_too(rule):
+    """The rules are not stochastic-only plumbing: a full-gradient run
+    converges (WK's variance estimate then only measures drift, which makes
+    it conservative, never wrong)."""
+    loss_fn, p0, data = quadratic_problem()
+    cfg = StrategyConfig(kind="laq", bits=6, lazy_rule=rule,
+                         criterion=CriterionConfig(D=10, xi=0.08, t_bar=100))
+    r = run_gradient_based(loss_fn, p0, data, cfg, steps=300, alpha=0.3)
+    assert float(r.grad_norm_sq[-1]) < 1e-4

@@ -145,6 +145,35 @@ for _ in range(3):
     c2, _ = jcp(c2, batch)
 out["const_packed_max_diff"] = max_param_diff(s2, c2)
 
+# variance-aware lazy rules (core/lazy_rules.py) + scale-free rel-mode
+# adaptive anchor: the new CommState fields (lazy estimator state, R_anchor)
+# thread through the sharded step on both wires
+wk = strategy._replace(lazy_rule="lasg_wk")
+ps = strategy._replace(
+    lazy_rule="lasg_ps",
+    bit_schedule=BitSchedule(kind="radius", grid=(2, 4, 8),
+                             threshold_mode="rel", thresholds=(0.05, 0.5)))
+w1 = fresh(wk)
+jwk = jax.jit(make_train_step(cfg, mesh, wk, opt, lr=1e-2,
+                              worker_axes=wa, wire="float"))
+wl = []
+for _ in range(4):
+    w1, m = jwk(w1, batch)
+    wl.append(float(m.loss))
+out["wk_losses"] = wl
+out["wk_sigma_hat_max"] = float(jnp.max(w1.comm.lazy.sigma_hat_sq))
+p1 = fresh(ps)
+jps = jax.jit(make_train_step(cfg, mesh, ps, opt, lr=1e-2,
+                              worker_axes=wa, wire="packed"))
+pl = []
+for _ in range(4):
+    p1, m = jps(p1, batch)
+    pl.append(float(m.loss))
+out["ps_losses"] = pl
+out["ps_anchor_min"] = float(jnp.min(p1.comm.R_anchor))
+out["ps_theta_last_set"] = float(max(jax.tree.leaves(jax.tree.map(
+    lambda l: float(jnp.max(jnp.abs(l))), p1.comm.lazy.theta_last))))
+
 params_s, cache_s, tokens_s = serve_specs(cfg, mesh, batch=8, seq_len=128)
 c = jax.jit(make_decode_step(cfg)).lower(params_s, cache_s, tokens_s).compile()
 ca = c.cost_analysis()
@@ -184,6 +213,15 @@ def test_sharded_integration_subprocess():
     assert out["packed_max_diff"] == 0.0, out
     assert out["adaptive_packed_max_diff"] == 0.0, out
     assert out["const_packed_max_diff"] == 0.0, out
+    # LASG rules on the mesh: runs stay finite and learn; the WK variance
+    # estimate was frozen at an upload; the PS stale-iterate snapshot and
+    # the rel-mode anchor were populated by the bootstrap round
+    assert np.all(np.isfinite(out["wk_losses"])), out["wk_losses"]
+    assert out["wk_losses"][-1] < out["wk_losses"][0], out["wk_losses"]
+    assert out["wk_sigma_hat_max"] > 0.0, out
+    assert np.all(np.isfinite(out["ps_losses"])), out["ps_losses"]
+    assert out["ps_anchor_min"] > 0.0, out
+    assert out["ps_theta_last_set"] > 0.0, out
     assert out["decode_flops"] > 0
     assert out["pod_losses"][-1] < out["pod_losses"][0], out["pod_losses"]
     assert 0 <= out["pod_uploads"] <= 2
