@@ -49,16 +49,23 @@ def main():
               f"rounds={int(r.cum_uploads[-1]):6d} bits={float(r.cum_bits[-1]):.3e}")
     # stochastic family: the slaq_* kinds differ only in the lazy rule
     # (core/lazy_rules.py) — eq. 7a replayed on noise vs the variance-aware
-    # LASG-WK / LASG-PS criteria
-    for kind in ("sgd", "qsgd", "ssgd", "slaq", "slaq_wk", "slaq_ps"):
+    # LASG-WK / same-sample LASG-WK2 / LASG-PS criteria; slaq_vr keeps the
+    # 7a rule but feeds it svrg-corrected gradients (grad_mode="svrg"),
+    # which removes the variance floor instead of skipping around it
+    scfg = StrategyConfig(kind="laq", bits=3, criterion=crit)
+    stochastic = [(k, k, scfg) for k in
+                  ("sgd", "qsgd", "ssgd", "slaq", "slaq_wk", "slaq_wk2",
+                   "slaq_ps")]
+    stochastic.append(("slaq_vr", "slaq",
+                       scfg._replace(grad_mode="svrg", svrg_period=10)))
+    for label, kind, cfg in stochastic:
         r = run_stochastic(loss_fn, p0, workers, kind, steps=args.steps,
                            alpha=0.5, batch=30, bits=3, density=0.1,
-                           laq_cfg=StrategyConfig(kind="laq", bits=3,
-                                                  criterion=crit))
+                           laq_cfg=cfg)
         for i in range(0, args.steps, 5):
-            rows.append(("stochastic", kind, i, float(r.loss[i]),
+            rows.append(("stochastic", label, i, float(r.loss[i]),
                          int(r.cum_uploads[i]), float(r.cum_bits[i])))
-        print(f"[stochastic] {kind:8s} loss={float(r.loss[-1]):.6f} "
+        print(f"[stochastic] {label:8s} loss={float(r.loss[-1]):.6f} "
               f"rounds={int(r.cum_uploads[-1]):6d} bits={float(r.cum_bits[-1]):.3e}")
 
     with open(args.out, "w", newline="") as f:

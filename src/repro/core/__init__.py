@@ -8,19 +8,24 @@ Public API:
                                          -- paper eq. (5)-(6)
     LasgConfig / LazyState / should_skip_rule
                                          -- variance-aware lazy rules
-                                            (LASG-WK / LASG-PS; selected via
+                                            (LASG-WK / LASG-WK2 / LASG-PS;
+                                            selected via
                                             StrategyConfig.lazy_rule)
+    SvrgState                            -- variance-reduced local gradients
+                                            (StrategyConfig.grad_mode="svrg")
     BitSchedule / select_bits            -- adaptive bit-width (A-LAQ;
                                             "rel" mode = scale-free
                                             bootstrap-anchored thresholds)
+    EtaSchedule / eta_at                 -- per-round stepsize schedules
+                                            (constant / inv_t / halving)
     WireBackend / get_backend            -- pluggable quantize pipeline
                                             (reference jnp vs fused 2-pass)
     run_gradient_based / run_stochastic  -- simulated M-worker cluster
                                             (stochastic kinds: sgd/qsgd/ssgd/
-                                            slaq/slaq_wk/slaq_ps)
+                                            slaq/slaq_wk/slaq_wk2/slaq_ps)
 """
-from .adaptive import (BitSchedule, adaptive_roundtrip, grid_costs,
-                       select_bits)
+from .adaptive import (BitSchedule, EtaSchedule, adaptive_roundtrip, eta_at,
+                       grid_costs, select_bits)
 from .criterion import (CriterionConfig, history_threshold, push_history,
                         rhs_threshold, should_skip)
 from .lazy_rules import (LAZY_RULES, LasgConfig, LazyState, init_lazy_state,
@@ -30,8 +35,8 @@ from .quantize import (dense_bits, dequantize_innovation, pack_codes,
                        tau, tree_inf_norm, tree_size, tree_sq_norm,
                        unpack_codes, unpack_nibbles, upload_bits)
 from .strategy import (KINDS, CommState, RoundMetrics, StrategyConfig,
-                       WorkerOut, aggregate, finalize_step, init_comm_state,
-                       worker_update)
+                       SvrgState, WorkerOut, aggregate, finalize_step,
+                       init_comm_state, init_svrg_state, worker_update)
 from .wire import (FusedWire, ReferenceWire, WireBackend, WireRoundtrip,
                    get_backend)
 from .compressors import qsgd_compress, ssgd_compress

@@ -104,6 +104,59 @@ class BitSchedule(NamedTuple):
         return self
 
 
+class EtaSchedule(NamedTuple):
+    """Stepsize schedule ``alpha_k = eta_at(schedule, alpha0, k)``.
+
+    The stochastic lazy methods plateau at a variance floor proportional to
+    ``alpha * sigma^2``; a decreasing stepsize drives that floor to zero
+    (LASG Thm. 4 carries the standard Robbins-Monro conditions).  Three
+    kinds:
+
+    * ``"constant"`` — ``alpha_k = alpha0`` (the default; bit-exact with
+      the historical fixed-stepsize paths).
+    * ``"inv_t"``    — ``alpha_k = alpha0 * t0 / (t0 + k)``: the classic
+      1/t decay; ``t0`` delays the decay so early rounds keep a useful
+      stepsize (``t0 = 100`` halves alpha at k = 100).
+    * ``"halving"``  — stagewise: ``alpha_k = alpha0 * 0.5^(k // halve_every)``
+      — the constant-within-stage schedule the variance-reduced analyses
+      favor (each stage converges to its floor, then the floor is halved).
+
+    The schedule feeds BOTH the parameter update and the skip criterion:
+    eq. 7a's history term carries ``1/(alpha^2 M^2)``, so the per-round
+    alpha must be the one the server actually applies or the threshold is
+    inconsistent with the realized parameter motion.
+    """
+    kind: str = "constant"          # constant | inv_t | halving
+    t0: float = 100.0               # inv_t: decay timescale in rounds
+    halve_every: int = 100          # halving: stage length in rounds
+
+    @property
+    def scheduled(self) -> bool:
+        return self.kind != "constant"
+
+    def validate(self):
+        assert self.kind in ("constant", "inv_t", "halving"), self.kind
+        if self.kind == "inv_t":
+            assert self.t0 > 0, self
+        if self.kind == "halving":
+            assert self.halve_every >= 1, self
+        return self
+
+
+def eta_at(schedule: EtaSchedule, alpha0, step):
+    """Traced per-round stepsize (``step`` is the round index, 0-based)."""
+    schedule.validate()
+    if schedule.kind == "constant":
+        # NOT jnp.asarray(alpha0): the constant path must stay a python
+        # float so downstream `alpha**2` arithmetic is bit-identical with
+        # pre-schedule code (regression-locked by the wire-backend tests)
+        return alpha0
+    k = jnp.asarray(step, jnp.float32)
+    if schedule.kind == "inv_t":
+        return alpha0 * schedule.t0 / (schedule.t0 + k)
+    return alpha0 * 0.5 ** jnp.floor(k / schedule.halve_every)
+
+
 def grid_costs(schedule: BitSchedule, p: int, n_radii: int = 1) -> jnp.ndarray:
     """Per-upload wire cost of each grid width (codes + R/b sidecars)."""
     return jnp.asarray([upload_bits(p, b, n_radii=n_radii, bit_sidecar=True)

@@ -35,6 +35,29 @@ top of the shared eq.-7 threshold machinery in :mod:`repro.core.criterion`:
     skipped worker's stale gradient is re-sent as bias every round
     (benchmarks/lasg_frontier.py measures both effects).
 
+``lasg_wk2`` — worker-side, *same-sample* stale-gradient difference
+    (LASG-WK2 style).  Instead of correcting for noise, the worker removes
+    it: it re-evaluates the **current** minibatch at the iterate of its last
+    upload ``theta_hat_m = theta^{t - tau_m}`` (a second backprop) and skips
+    iff
+
+        c_wk2 ||g(theta^k; xi^k) - g(theta_hat_m; xi^k)||^2
+            <= hist_term + quant_slack,              and  t_m < t_bar
+
+    Both gradients see the *same* sample ``xi^k``, so the minibatch noise
+    cancels in the difference and — by smoothness — what remains is bounded
+    by ``L^2 ||theta^k - theta_hat_m||^2``: a noise-free innovation proxy,
+    exactly the deterministic rule's behaviour recovered at the price of 2x
+    worker compute.  No variance estimator, no EMA: the only state is the
+    stale-iterate snapshot ``theta_last`` (shared with ``lasg_ps``).  The
+    second backprop ``g(theta_hat_m; xi^k)`` cannot be computed here (it
+    needs the loss closure and the live minibatch), so the runner threads it
+    in as ``grad_stale_m`` (``run_stochastic`` / the sharded step both do).
+    Relative to ``lasg_wk`` the criterion is *sharper*: the WK correction
+    over-estimates the reuse error by the (conservative, EMA-lagged)
+    variance term, so at matched thresholds WK2 skips at least as often —
+    property- and contract-tested in tests/test_convergence_contracts.py.
+
 ``lasg_ps`` — server-side, parameter-difference trigger (LASG-PS style).
     The server knows ``theta^k`` and each worker's iterate at its last upload
     ``theta_hat_m`` without any worker computation, and by smoothness
@@ -73,7 +96,10 @@ from .quantize import tree_sq_norm
 
 Pytree = object
 
-LAZY_RULES = ("laq7a", "lasg_wk", "lasg_ps")
+LAZY_RULES = ("laq7a", "lasg_wk", "lasg_wk2", "lasg_ps")
+
+# rules whose LazyState carries the stale-iterate snapshot ``theta_last``
+_THETA_LAST_RULES = ("lasg_wk2", "lasg_ps")
 
 
 class LasgConfig(NamedTuple):
@@ -81,12 +107,15 @@ class LasgConfig(NamedTuple):
 
     ``c_var`` — weight on the WK variance correction ``sigma^2 +
     sigma_hat^2`` (the LASG analysis carries a larger constant; 1.0 applies
-    the de-biased noise energy exactly once).  ``c_ps`` — safety factor on
-    the PS drift trigger (multiplies the online ``Lhat^2``).  ``var_decay``
-    — EMA decay for both the variance estimator (WK) and the smoothness-
-    ratio estimator (PS).
+    the de-biased noise energy exactly once).  ``c_wk2`` — weight on the
+    WK2 same-sample difference (1.0 compares the noise-free reuse error to
+    the plain eq.-7 dividend).  ``c_ps`` — safety factor on the PS drift
+    trigger (multiplies the online ``Lhat^2``).  ``var_decay`` — EMA decay
+    for both the variance estimator (WK) and the smoothness-ratio estimator
+    (PS).
     """
     c_var: float = 1.0
+    c_wk2: float = 1.0
     c_ps: float = 1.0
     var_decay: float = 0.9
 
@@ -101,9 +130,10 @@ class LazyState(NamedTuple):
     grad_ema: Optional[Pytree]   # WK: EMA first moment of minibatch grads
     stat_ema: jax.Array          # WK: raw EMA of squared deviations (sigma^2)
                                  # PS: raw EMA of innovation/drift ratios (Lhat^2)
-    stat_count: jax.Array        # debias counter for stat_ema
+    stat_count: jax.Array        # debias counter for stat_ema; WK2: upload
+                                 # counter (bootstrap guard: 0 forces upload)
     sigma_hat_sq: jax.Array      # WK: variance estimate frozen at last upload
-    theta_last: Optional[Pytree]  # PS: iterate at the worker's last upload
+    theta_last: Optional[Pytree]  # PS/WK2: iterate at the worker's last upload
 
 
 def empty_lazy_state() -> LazyState:
@@ -142,7 +172,7 @@ def init_lazy_state(rule: str, grad_template: Pytree, n_workers: int,
         stat_count=jnp.zeros(wshape, jnp.float32),
         sigma_hat_sq=jnp.zeros(wshape, jnp.float32),
         theta_last=(jax.tree.map(snapshot_w, grad_template)
-                    if rule == "lasg_ps" else None),
+                    if rule in _THETA_LAST_RULES else None),
     )
 
 
@@ -191,13 +221,16 @@ def smoothness_sq(lazy_m: LazyState, cfg: LasgConfig):
 # ---------------------------------------------------------------------------
 
 def rule_lhs(rule: str, lasg: LasgConfig, *, innovation_sq=None,
-             sigma_sq=None, sigma_hat_sq=None, drift_sq=None, L_sq=None):
+             sigma_sq=None, sigma_hat_sq=None, drift_sq=None, L_sq=None,
+             same_diff_sq=None):
     """Left-hand side of the skip comparison for ``rule`` (see module
     docstring for the formulas)."""
     if rule == "laq7a":
         return innovation_sq
     if rule == "lasg_wk":
         return innovation_sq + lasg.c_var * (sigma_sq + sigma_hat_sq)
+    if rule == "lasg_wk2":
+        return lasg.c_wk2 * same_diff_sq
     if rule == "lasg_ps":
         # explicit guard: before the first ratio observation L_sq is +inf
         # and drift may be 0 — force the upload rather than rely on
@@ -210,11 +243,12 @@ def rule_lhs(rule: str, lasg: LasgConfig, *, innovation_sq=None,
 def should_skip_rule(rule: str, lasg: LasgConfig, crit: CriterionConfig, *,
                      theta_hist, alpha, M: int, eps_sq, eps_hat_sq, clock,
                      innovation_sq=None, sigma_sq=None, sigma_hat_sq=None,
-                     drift_sq=None, L_sq=None):
-    """Boolean skip decision for one worker under any of the three rules
+                     drift_sq=None, L_sq=None, same_diff_sq=None):
+    """Boolean skip decision for one worker under any of the four rules
     (vmap over workers upstream, exactly like criterion.should_skip)."""
     lhs = rule_lhs(rule, lasg, innovation_sq=innovation_sq, sigma_sq=sigma_sq,
-                   sigma_hat_sq=sigma_hat_sq, drift_sq=drift_sq, L_sq=L_sq)
+                   sigma_hat_sq=sigma_hat_sq, drift_sq=drift_sq, L_sq=L_sq,
+                   same_diff_sq=same_diff_sq)
     rhs = rhs_threshold(theta_hist, alpha, M, eps_sq, eps_hat_sq, crit)
     return jnp.logical_and(lhs <= rhs, clock < crit.t_bar)
 
@@ -226,8 +260,13 @@ def should_skip_rule(rule: str, lasg: LasgConfig, crit: CriterionConfig, *,
 
 def lazy_rule_step(rule: str, lasg: LasgConfig, crit: CriterionConfig, *,
                    grad_m, params, lazy_m: LazyState, innovation_sq, err_sq,
-                   eps_hat_sq_m, clock_m, theta_hist, alpha, n_workers: int):
+                   eps_hat_sq_m, clock_m, theta_hist, alpha, n_workers: int,
+                   grad_stale_m=None):
     """Evaluate ``rule`` for one worker.
+
+    ``grad_stale_m`` is the WK2 second backprop — the *current* minibatch
+    re-evaluated at this worker's stale iterate ``theta_last`` (computed by
+    the runner, which owns the loss closure and the live batch).
 
     Returns ``(skip, lazy_pre, stats)`` where ``lazy_pre`` holds the
     estimator fields that update every round regardless of the decision and
@@ -236,6 +275,7 @@ def lazy_rule_step(rule: str, lasg: LasgConfig, crit: CriterionConfig, *,
     """
     sigma_sq = jnp.zeros((), jnp.float32)
     drift_sq = jnp.zeros((), jnp.float32)
+    same_diff_sq = jnp.zeros((), jnp.float32)
     lazy_pre = lazy_m
     if rule == "lasg_wk":
         if lazy_m.grad_ema is None:
@@ -243,6 +283,34 @@ def lazy_rule_step(rule: str, lasg: LasgConfig, crit: CriterionConfig, *,
                              "allocate the state with init_comm_state / "
                              "init_lazy_state for this rule")
         sigma_sq, lazy_pre = variance_update(lazy_m, grad_m, lasg)
+    elif rule == "lasg_wk2":
+        if params is None:
+            raise ValueError("lazy_rule='lasg_wk2' needs the current params "
+                             "threaded into worker_update/aggregate (the "
+                             "upload commit snapshots theta_last from them)")
+        if grad_stale_m is None:
+            raise ValueError("lazy_rule='lasg_wk2' needs grad_stale_m — the "
+                             "current minibatch's gradient at the stale "
+                             "iterate (the runner computes this second "
+                             "backprop and threads it through aggregate / "
+                             "worker_update as grads_stale)")
+        if lazy_m.theta_last is None:
+            raise ValueError("lazy_rule='lasg_wk2' needs LazyState.theta_last; "
+                             "allocate the state with init_comm_state / "
+                             "init_lazy_state for this rule")
+        same_diff_sq = tree_sq_norm(jax.tree.map(
+            lambda g, gs: g.astype(jnp.float32) - gs.astype(jnp.float32),
+            grad_m, grad_stale_m))
+        # bootstrap guard (mirrors lasg_ps): until this worker's first
+        # upload, theta_last is the init-time snapshot of the CURRENT
+        # iterate, so the same-sample difference is identically zero and
+        # every worker would skip; with first_round_upload=False that
+        # freeze self-sustains (params never move -> the difference stays
+        # zero) until (7b) breaks it t_bar rounds later.  Force the upload
+        # until the first commit (stat_count doubles as the upload counter
+        # for this rule).
+        same_diff_sq = jnp.where(lazy_m.stat_count > 0, same_diff_sq,
+                                 jnp.inf)
     elif rule == "lasg_ps":
         if params is None:
             raise ValueError("lazy_rule='lasg_ps' needs the current params "
@@ -258,7 +326,8 @@ def lazy_rule_step(rule: str, lasg: LasgConfig, crit: CriterionConfig, *,
         eps_sq=err_sq, eps_hat_sq=eps_hat_sq_m, clock=clock_m,
         innovation_sq=innovation_sq, sigma_sq=sigma_sq,
         sigma_hat_sq=lazy_m.sigma_hat_sq, drift_sq=drift_sq,
-        L_sq=smoothness_sq(lazy_m, lasg) if rule == "lasg_ps" else None)
+        L_sq=smoothness_sq(lazy_m, lasg) if rule == "lasg_ps" else None,
+        same_diff_sq=same_diff_sq)
     return skip, lazy_pre, {"sigma_sq": sigma_sq, "drift_sq": drift_sq}
 
 
@@ -267,15 +336,25 @@ def commit_upload(rule: str, lasg: LasgConfig, lazy_pre: LazyState, uploaded,
     """Refresh the upload-frozen estimator fields.
 
     WK freezes the current variance estimate into ``sigma_hat_sq`` (the
-    noise now baked into ``qhat``).  PS snapshots ``theta_last`` and feeds
-    the realized ``innovation/drift`` ratio into the ``Lhat^2`` EMA —
-    only when drift is nonzero, so the bootstrap round (theta unchanged)
-    cannot poison the estimator.
+    noise now baked into ``qhat``).  WK2 snapshots ``theta_last`` — the
+    iterate the next rounds' second backprops re-evaluate.  PS snapshots
+    ``theta_last`` and feeds the realized ``innovation/drift`` ratio into
+    the ``Lhat^2`` EMA — only when drift is nonzero, so the bootstrap round
+    (theta unchanged) cannot poison the estimator.
     """
     out = lazy_pre
     if rule == "lasg_wk":
         out = out._replace(sigma_hat_sq=jnp.where(
             uploaded, stats["sigma_sq"], lazy_pre.sigma_hat_sq))
+    elif rule == "lasg_wk2":
+        fup = uploaded.astype(jnp.float32)
+        out = out._replace(
+            theta_last=jax.tree.map(
+                lambda p, t: fup * p.astype(jnp.float32) + (1.0 - fup) * t,
+                params, lazy_pre.theta_last),
+            # upload counter: the rule's bootstrap guard forces uploads
+            # while this is zero (see lazy_rule_step)
+            stat_count=lazy_pre.stat_count + fup)
     elif rule == "lasg_ps":
         drift_sq = stats["drift_sq"]
         observe = jnp.logical_and(uploaded, drift_sq > 1e-20)

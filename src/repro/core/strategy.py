@@ -30,8 +30,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .adaptive import (BitSchedule, dequantize_dynamic, quantize_dynamic,
-                       select_bits, tau_of_selection)
+from .adaptive import (BitSchedule, EtaSchedule, dequantize_dynamic,
+                       quantize_dynamic, select_bits, tau_of_selection)
 from .criterion import CriterionConfig, push_history, should_skip
 from .lazy_rules import (LAZY_RULES, LasgConfig, LazyState, commit_upload,
                          empty_lazy_state, init_lazy_state, lazy_rule_step)
@@ -62,15 +62,33 @@ class StrategyConfig(NamedTuple):
     lazy_rule: str = "laq7a"        # skip criterion for lazy kinds
                                     # (core/lazy_rules.py): "laq7a" paper
                                     # eq. 7a; "lasg_wk" variance-corrected
-                                    # worker rule; "lasg_ps" server-side
-                                    # parameter-drift rule
+                                    # worker rule; "lasg_wk2" same-sample
+                                    # noise-free rule (2nd backprop);
+                                    # "lasg_ps" server-side parameter-drift
+                                    # rule
     lasg: LasgConfig = LasgConfig()  # constants of the LASG rules
+    grad_mode: str = "sgd"          # stochastic local-gradient estimator:
+                                    # "sgd" plain minibatch; "svrg"
+                                    # variance-reduced (periodic per-worker
+                                    # full-gradient anchor in CommState.svrg,
+                                    # corrected minibatch gradients fed to
+                                    # the lazy rules AND the quantizer).
+                                    # Deterministic runs ignore it.
+    svrg_period: int = 20           # rounds between svrg anchor refreshes
+    eta_schedule: EtaSchedule = EtaSchedule()  # per-round stepsize alpha_k
+                                    # (core/adaptive.py): constant / inv_t /
+                                    # halving; feeds both the update and the
+                                    # criterion's 1/(alpha^2 M^2) term
     # wire mode is a launch-layer concern ("float" psum vs "packed" all_gather);
     # the algorithmic state machine is identical for both.
 
     @property
     def quantized(self) -> bool:
         return self.kind in ("qgd", "laq")
+
+    @property
+    def variance_reduced(self) -> bool:
+        return self.grad_mode == "svrg"
 
     @property
     def lazy(self) -> bool:
@@ -88,6 +106,47 @@ class StrategyConfig(NamedTuple):
         if self.bit_schedule is not None and not self.bit_schedule.adaptive:
             return self.bit_schedule.bits
         return self.bits
+
+
+class SvrgState(NamedTuple):
+    """Per-worker SVRG anchor (``StrategyConfig.grad_mode="svrg"``).
+
+    ``theta_anchor`` is the iterate at the worker's last anchor refresh and
+    ``mu_anchor`` its full *local* gradient there; between refreshes the
+    runner feeds the corrected minibatch gradient
+
+        g_vr = (n/B) (g(theta; xi) - g(theta_anchor; xi)) + mu_anchor
+
+    to the lazy rules and the quantizer.  Both fields are ``None`` unless
+    the strategy is variance-reduced (pytree discipline mirrors
+    :class:`~repro.core.lazy_rules.LazyState`: rule-gated fields simply
+    vanish from the flattened state).  Leading worker dim in simulated
+    mode, one slice per shard in sharded mode — exactly like ``qhat``.
+    The refresh itself lives in the runners (it needs the loss closure and,
+    in simulated mode, the worker's full local data); see
+    ``core/simulated.py`` and the streaming variant in ``launch/train.py``.
+    """
+    theta_anchor: Optional[Pytree]
+    mu_anchor: Optional[Pytree]
+
+
+def init_svrg_state(grad_mode: str, grad_template: Pytree, n_workers: int,
+                    *, worker_dim: bool = True) -> SvrgState:
+    """Anchor snapshot of the template values (the initial iterate) and a
+    zero ``mu``; the runner's round-0 refresh overwrites both."""
+    assert grad_mode in ("sgd", "svrg"), grad_mode
+    if grad_mode != "svrg":
+        return SvrgState(None, None)
+    wshape = (n_workers,) if worker_dim else ()
+
+    def snapshot_w(l):
+        return jnp.broadcast_to(jnp.asarray(l, jnp.float32), wshape + l.shape)
+
+    return SvrgState(
+        theta_anchor=jax.tree.map(snapshot_w, grad_template),
+        mu_anchor=jax.tree.map(
+            lambda l: jnp.zeros(wshape + l.shape, jnp.float32),
+            grad_template))
 
 
 class CommState(NamedTuple):
@@ -112,6 +171,8 @@ class CommState(NamedTuple):
     R_anchor: jax.Array     # [W] anchor radius of the scale-free ("rel")
                             # adaptive thresholds (0 until the bootstrap
                             # round observes the first nonzero R_m)
+    svrg: SvrgState         # per-worker SVRG anchor (theta_anchor /
+                            # mu_anchor; fields None unless grad_mode="svrg")
 
 
 class RoundMetrics(NamedTuple):
@@ -152,6 +213,8 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
         lazy=init_lazy_state(lazy_rule, grad_template, n_workers,
                              worker_dim=worker_dim),
         R_anchor=jnp.zeros(wshape, jnp.float32),
+        svrg=init_svrg_state(cfg.grad_mode, grad_template, n_workers,
+                             worker_dim=worker_dim),
     )
 
 
@@ -183,14 +246,17 @@ class WorkerOut(NamedTuple):
 def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
                   bits_spent_m, theta_hist, alpha, n_workers: int,
                   cfg: StrategyConfig, step=None, lazy_m=None,
-                  R_anchor_m=None, params=None):
+                  R_anchor_m=None, params=None, grad_stale_m=None):
     """One worker's bit-width selection + quantize + skip decision.
 
     ``lazy_m`` is this worker's :class:`~repro.core.lazy_rules.LazyState`
     slice and ``R_anchor_m`` its scale-free threshold anchor (both optional
     for ``lazy_rule="laq7a"`` with absolute thresholds); ``params`` is the
-    current (replicated) iterate, required by the ``lasg_ps`` rule.  Returns
-    a :class:`WorkerOut`; ``delta_masked`` is zero if the upload is skipped.
+    current (replicated) iterate, required by the ``lasg_wk2`` / ``lasg_ps``
+    rules; ``grad_stale_m`` is the WK2 same-sample second backprop (the
+    current minibatch at the worker's stale iterate), required by that rule
+    only.  Returns a :class:`WorkerOut`; ``delta_masked`` is zero if the
+    upload is skipped.
     """
     p = tree_size(grad_m)
     if lazy_m is None:
@@ -256,7 +322,8 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
                 cfg.lazy_rule, cfg.lasg, cfg.criterion, grad_m=grad_m,
                 params=params, lazy_m=lazy_m, innovation_sq=innovation_sq,
                 err_sq=err_sq, eps_hat_sq_m=eps_hat_sq_m, clock_m=clock_m,
-                theta_hist=theta_hist, alpha=alpha, n_workers=n_workers)
+                theta_hist=theta_hist, alpha=alpha, n_workers=n_workers,
+                grad_stale_m=grad_stale_m)
     else:
         skip = jnp.zeros((), bool)
     uploaded = jnp.logical_not(skip)
@@ -283,29 +350,35 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
 # ---------------------------------------------------------------------------
 
 def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig,
-              params: Pytree = None):
+              params: Pytree = None, grads_stale: Pytree = None):
     """Aggregate per-worker gradients (leading dim W) into the LAQ gradient.
 
     ``params`` is the current (replicated) iterate — required by the
-    ``lasg_ps`` lazy rule, ignored otherwise.  Returns ``(agg_grad,
-    new_state, metrics)``.  The caller applies ``theta <- theta - alpha *
-    agg_grad`` (or feeds agg_grad to an optimizer) and then calls
-    :func:`finalize_step` with the realized parameter change.
+    ``lasg_wk2`` / ``lasg_ps`` lazy rules, ignored otherwise;
+    ``grads_stale`` (leading dim W, same structure as ``grads``) is the WK2
+    same-sample second backprop.  Returns ``(agg_grad, new_state,
+    metrics)``.  The caller applies ``theta <- theta - alpha * agg_grad``
+    (or feeds agg_grad to an optimizer) and then calls :func:`finalize_step`
+    with the realized parameter change.
     """
     n_workers = state.clocks.shape[0]
 
-    def upd(grad_m, qhat_m, eps_m, clock_m, spent_m, lazy_m, anchor_m):
+    def upd(grad_m, qhat_m, eps_m, clock_m, spent_m, lazy_m, anchor_m,
+            grad_stale_m=None):
         # theta_hist / params are replicated across workers: closed over,
         # not vmapped
         return worker_update(grad_m, qhat_m, eps_m, clock_m, spent_m,
                              state.theta_hist, alpha, n_workers, cfg,
                              step=state.step, lazy_m=lazy_m,
-                             R_anchor_m=anchor_m, params=params)
+                             R_anchor_m=anchor_m, params=params,
+                             grad_stale_m=grad_stale_m)
 
+    wargs = (grads, state.qhat, state.eps_hat_sq, state.clocks,
+             state.bits_spent, state.lazy, state.R_anchor)
+    if grads_stale is not None:
+        wargs = wargs + (grads_stale,)   # vmap cannot map a None arg
     (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-     bits_m, R_m, width_m, lazy_new, anchor_new) = jax.vmap(upd)(
-         grads, state.qhat, state.eps_hat_sq, state.clocks,
-         state.bits_spent, state.lazy, state.R_anchor)
+     bits_m, R_m, width_m, lazy_new, anchor_new) = jax.vmap(upd)(*wargs)
 
     # Server recursion: agg^k = agg^{k-1} + sum_m deltaQ_m.
     agg = jax.tree.map(lambda a, d: a + jnp.sum(d, axis=0),

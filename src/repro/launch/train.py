@@ -45,9 +45,27 @@ Packed wire format (per worker, per round):
 The skip criterion is pluggable (``StrategyConfig.lazy_rule``): the paper's
 eq. 7a, or the variance-aware LASG rules (core/lazy_rules.py) whose
 per-worker estimator state (``CommState.lazy``: variance / smoothness EMAs,
-plus the stale-iterate snapshot for ``lasg_ps``) and the scale-free adaptive
-threshold anchor (``CommState.R_anchor``) ride through the sharded step like
-``qhat`` — one slice per worker shard, reference wire path.
+plus the stale-iterate snapshot for ``lasg_wk2`` / ``lasg_ps``) and the
+scale-free adaptive threshold anchor (``CommState.R_anchor``) ride through
+the sharded step like ``qhat`` — one slice per worker shard, reference wire
+path.  The ``lasg_wk2`` rule pays a second backprop per step: the *current*
+batch re-evaluated at this worker's stale iterate (same microbatching), so
+its skip decision is noise-free.
+
+Two stochastic levers from the simulated runners also apply here:
+
+* ``StrategyConfig.eta_schedule`` — the per-round stepsize ``alpha_k``
+  (computed from the replicated ``comm.step``) feeds both the optimizer
+  step and the criterion's ``1/(alpha^2 M^2)`` term;
+* ``StrategyConfig.grad_mode="svrg"`` — **streaming-anchor** variance
+  reduction: every ``svrg_period`` steps the anchor snaps to the current
+  iterate and ``mu`` to the current *batch* gradient (the launch path
+  streams data, so the simulated runner's exact full-local-data anchor is
+  approximated by a one-batch anchor; the anchor noise is frozen for the
+  period rather than eliminated — a documented degradation).  Corrected
+  gradients feed the lazy rule and the quantizer exactly as in
+  ``core/simulated.py``; the anchor state (``CommState.svrg``) rides per
+  worker shard like ``qhat``.
 
 Tensor parallelism (``model`` axis) stays under GSPMD: inside the manual
 region, model-sharded arrays keep their global shapes and einsum/norm
@@ -67,11 +85,12 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.adaptive import (dequantize_dynamic, quantize_dynamic,
+from repro.core.adaptive import (dequantize_dynamic, eta_at, quantize_dynamic,
                                  tau_of_selection, tau_of_width)
 from repro.core.quantize import (dequantize_innovation, innovation,
                                  quantize_innovation, tree_sq_norm)
-from repro.core.strategy import CommState, StrategyConfig, worker_update
+from repro.core.strategy import (CommState, StrategyConfig, SvrgState,
+                                 worker_update)
 from repro.core.wire import pack_codes_along_axis, unpack_codes_along_axis
 from repro.core.criterion import push_history
 from repro.models import lm_loss, param_pspecs
@@ -299,35 +318,73 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         def loss_fn(p, b):
             return lm_loss(p, b, cfg) / W          # sum_m loss_m == global mean
 
-        if microbatch == 1:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        else:
+        def loss_and_grads(at_params):
+            """This worker's batch gradient at an arbitrary iterate (the
+            current params; the WK2 stale iterate; the SVRG anchor) —
+            microbatching identical for every evaluation point."""
+            if microbatch == 1:
+                return jax.value_and_grad(loss_fn)(at_params, batch)
             mb = jax.tree.map(
                 lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
                                     + x.shape[1:]), batch)
 
             def acc_body(carry, b):
                 loss_acc, g_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, b)
+                l, g = jax.value_and_grad(loss_fn)(at_params, b)
                 g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) / microbatch,
                                      g_acc, g)
                 return (loss_acc + l / microbatch, g_acc), None
 
             zero = (jnp.zeros((), jnp.float32),
-                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 at_params))
             if cfg.scan_layers and not compat.needs_loop_unrolling():
-                (loss, grads), _ = jax.lax.scan(acc_body, zero, mb)
-            else:
-                # probe mode (unrolled layers): unroll microbatches too so
-                # cost_analysis counts every pass (scan bodies count once)
-                carry = zero
-                for i in range(microbatch):
-                    carry, _ = acc_body(carry, jax.tree.map(lambda x: x[i], mb))
-                loss, grads = carry
+                return jax.lax.scan(acc_body, zero, mb)[0]
+            # probe mode (unrolled layers): unroll microbatches too so
+            # cost_analysis counts every pass (scan bodies count once)
+            carry = zero
+            for i in range(microbatch):
+                carry, _ = acc_body(carry, jax.tree.map(lambda x: x[i], mb))
+            return carry
+
+        loss, grads = loss_and_grads(params)
+        lr_k = eta_at(strategy.eta_schedule, lr, comm.step)
+
+        svrg_new = comm.svrg
+        corr = None
+        if strategy.variance_reduced:
+            # streaming anchor (see module docstring): refresh is a traced
+            # where-select so the step stays a single trace; the anchor
+            # backprop below runs every step (svrg's inherent 2x compute)
+            sv = _squeeze0(comm.svrg)
+            refresh = (comm.step % strategy.svrg_period == 0).astype(jnp.float32)
+            theta_anchor = jax.tree.map(
+                lambda p_, t: refresh * p_.astype(jnp.float32)
+                + (1.0 - refresh) * t, params, sv.theta_anchor)
+            mu = jax.tree.map(
+                lambda g, m: refresh * g.astype(jnp.float32)
+                + (1.0 - refresh) * m, grads, sv.mu_anchor)
+            _, g_anchor = loss_and_grads(theta_anchor)
+            corr = jax.tree.map(lambda m, ga: m - ga.astype(jnp.float32),
+                                mu, g_anchor)
+            grads = jax.tree.map(lambda g, c: g.astype(jnp.float32) + c,
+                                 grads, corr)
+            svrg_new = _unsqueeze0(SvrgState(theta_anchor, mu))
+
+        grads_stale = None
+        if strategy.lazy and strategy.lazy_rule == "lasg_wk2":
+            # WK2 second backprop: the SAME batch at the stale iterate; the
+            # svrg correction (if any) is applied to both sides so anchor
+            # and mu cancel in the same-sample difference
+            _, grads_stale = loss_and_grads(lazy.theta_last)
+            if corr is not None:
+                grads_stale = jax.tree.map(
+                    lambda g, c: g.astype(jnp.float32) + c, grads_stale, corr)
 
         wu = worker_update(grads, qhat, eps_hat_sq, clock, bits_spent,
-                           comm.theta_hist, lr, W, strategy, step=comm.step,
-                           lazy_m=lazy, R_anchor_m=R_anchor, params=params)
+                           comm.theta_hist, lr_k, W, strategy, step=comm.step,
+                           lazy_m=lazy, R_anchor_m=R_anchor, params=params,
+                           grad_stale_m=grads_stale)
         (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
          bits_m, width_m) = (wu.delta_masked, wu.qhat_new, wu.eps_hat_sq_new,
                              wu.clock_new, wu.uploaded, wu.bits_m, wu.width_m)
@@ -345,7 +402,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
                            comm.server_agg, agg_delta)
         agg_store = jax.tree.map(lambda a, s: a.astype(s.dtype), agg,
                                  comm.server_agg)
-        new_params, new_opt = optimizer.update(agg, opt_state, params, lr)
+        new_params, new_opt = optimizer.update(agg, opt_state, params, lr_k)
         dtheta_sq = tree_sq_norm(jax.tree.map(
             lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
             new_params, params))
@@ -363,6 +420,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             step=comm.step + 1,
             lazy=_unsqueeze0(wu.lazy_new),
             R_anchor=wu.R_anchor_new[None],
+            svrg=svrg_new,
         )
         metrics = StepMetrics(
             loss=jax.lax.psum(loss, wa),
@@ -384,6 +442,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             total_bits=P(), total_uploads=P(), step=P(),
             lazy=jax.tree.map(lambda _: P(wa), comm.lazy),
             R_anchor=P(wa),
+            svrg=jax.tree.map(lambda _: P(wa), comm.svrg),
         )
         sm = compat.shard_map(
             sharded_step, mesh=mesh,
@@ -473,6 +532,13 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             theta_last=tree_specs(lz.theta_last),
         )
 
+    def svrg_specs(sv):
+        # both fields mirror the param pytree with a leading worker dim
+        def tree_specs(t):
+            return None if t is None else jax.tree.map(comm_leaf_spec, t, pspecs)
+        return SvrgState(theta_anchor=tree_specs(sv.theta_anchor),
+                         mu_anchor=tree_specs(sv.mu_anchor))
+
     comm_s = CommState(
         qhat=jax.tree.map(comm_leaf_spec, comm_abs.qhat, pspecs),
         server_agg=jax.tree.map(lambda l, sp: shard(l, sp),
@@ -486,6 +552,7 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         step=shard(comm_abs.step, P()),
         lazy=lazy_specs(comm_abs.lazy),
         R_anchor=shard(comm_abs.R_anchor, P(wa)),
+        svrg=svrg_specs(comm_abs.svrg),
     )
     step_s = shard(jax.ShapeDtypeStruct((), jnp.int32), P())
     return TrainState(params_s, opt_s, comm_s, step_s)

@@ -19,7 +19,7 @@ from repro.core import (CriterionConfig, LasgConfig, LazyState,
 from repro.core.lazy_rules import commit_upload, lazy_rule_step
 from repro.data import classification_dataset, split_workers
 
-RULES = ("laq7a", "lasg_wk", "lasg_ps")
+RULES = ("laq7a", "lasg_wk", "lasg_wk2", "lasg_ps")
 M = 10
 
 
@@ -184,6 +184,90 @@ def test_ps_estimator_not_poisoned_by_nonzero_init_params():
     assert int(r.cum_uploads[-1]) < 0.8 * 300 * M
 
 
+def test_wk2_same_sample_difference_is_noise_free():
+    """Unit contract behind WK2: the LHS is exactly the squared distance of
+    the two same-sample gradients — shared noise cancels by construction.
+    Feeding g and g + drift (the same noise realization on both sides)
+    yields LHS = ||drift||^2 regardless of the noise magnitude."""
+    key = jax.random.PRNGKey(7)
+    noise = 100.0 * jax.random.normal(key, (32,))      # huge shared noise
+    drift = jnp.full((32,), 0.01)
+    g_now = {"x": noise + drift}
+    g_stale = {"x": noise}
+    lz = init_lazy_state("lasg_wk2", {"x": jnp.zeros((32,))}, 1,
+                         worker_dim=False)
+    # mark the worker as past its bootstrap upload (a virgin state forces
+    # an upload regardless of the LHS — tested separately below)
+    lz = lz._replace(stat_count=jnp.float32(1.0))
+    skip, _, _ = lazy_rule_step(
+        "lasg_wk2", LasgConfig(), CriterionConfig(D=10, xi=0.08, t_bar=100),
+        grad_m=g_now, params={"x": jnp.zeros((32,))}, lazy_m=lz,
+        innovation_sq=jnp.float32(1e6),   # noisy innovation is NOT the LHS
+        err_sq=jnp.float32(0.0), eps_hat_sq_m=jnp.float32(0.0),
+        clock_m=jnp.int32(0),
+        theta_hist=jnp.full((10,), 10.0, jnp.float32), alpha=0.3,
+        n_workers=M, grad_stale_m=g_stale)
+    # ||drift||^2 = 32 * 1e-4 = 3.2e-3 << threshold -> skip, even though
+    # the (noise-dominated) innovation would have forced an upload under 7a
+    assert bool(skip)
+
+
+def test_wk2_requires_stale_gradient_and_state():
+    lz = init_lazy_state("lasg_wk2", {"x": jnp.zeros((4,))}, 1,
+                         worker_dim=False)
+    kw = dict(grad_m={"x": jnp.zeros((4,))}, params={"x": jnp.zeros((4,))},
+              innovation_sq=jnp.float32(0), err_sq=jnp.float32(0),
+              eps_hat_sq_m=jnp.float32(0), clock_m=jnp.int32(0),
+              theta_hist=jnp.zeros((10,)), alpha=0.3, n_workers=M)
+    with pytest.raises(ValueError, match="grad_stale_m"):
+        lazy_rule_step("lasg_wk2", LasgConfig(), CriterionConfig(),
+                       lazy_m=lz, **kw)
+    with pytest.raises(ValueError, match="params"):
+        lazy_rule_step("lasg_wk2", LasgConfig(), CriterionConfig(),
+                       lazy_m=lz, **{**kw, "params": None},
+                       grad_stale_m={"x": jnp.zeros((4,))})
+    from repro.core.lazy_rules import empty_lazy_state
+    with pytest.raises(ValueError, match="theta_last"):
+        lazy_rule_step("lasg_wk2", LasgConfig(), CriterionConfig(),
+                       lazy_m=empty_lazy_state(), **kw,
+                       grad_stale_m={"x": jnp.zeros((4,))})
+
+
+def test_wk2_bootstrap_guard_without_forced_first_round():
+    """Regression: with ``first_round_upload=False`` the init-time
+    ``theta_last`` equals the current iterate, so the same-sample LHS is
+    exactly zero and — without the guard — every worker would skip while
+    params never move, a self-sustaining freeze until t_bar.  The guard
+    forces each worker's first upload instead, so round 0 is dense and the
+    run converges."""
+    loss_fn, p0, data = quadratic_problem()
+    cfg = StrategyConfig(kind="laq", bits=6, lazy_rule="lasg_wk2",
+                         first_round_upload=False,
+                         criterion=CriterionConfig(D=10, xi=0.08, t_bar=100))
+    r = run_gradient_based(loss_fn, p0, data, cfg, steps=200, alpha=0.3)
+    assert int(r.cum_uploads[0]) == M        # bootstrap round is dense
+    assert float(r.grad_norm_sq[-1]) < 1e-3  # and the run converges
+    assert int(r.cum_uploads[-1]) < 0.8 * 200 * M   # skipping still happens
+
+
+def test_wk2_commit_snapshots_theta_last_on_upload_only():
+    lz = init_lazy_state("lasg_wk2", {"x": jnp.zeros((4,))}, 1,
+                         worker_dim=False)
+    cfg = LasgConfig()
+    up = commit_upload("lasg_wk2", cfg, lz, jnp.asarray(True),
+                       {"sigma_sq": jnp.float32(0), "drift_sq": jnp.float32(0)},
+                       params={"x": jnp.full((4,), 2.0)},
+                       innovation_sq=jnp.float32(0))
+    np.testing.assert_array_equal(np.asarray(up.theta_last["x"]),
+                                  np.full((4,), 2.0))
+    kept = commit_upload("lasg_wk2", cfg, up, jnp.asarray(False),
+                         {"sigma_sq": jnp.float32(0), "drift_sq": jnp.float32(0)},
+                         params={"x": jnp.full((4,), 9.0)},
+                         innovation_sq=jnp.float32(0))
+    np.testing.assert_array_equal(np.asarray(kept.theta_last["x"]),
+                                  np.full((4,), 2.0))
+
+
 def test_ps_requires_params():
     lz = init_lazy_state("lasg_ps", {"x": jnp.zeros((4,))}, 1,
                          worker_dim=False)
@@ -262,12 +346,14 @@ def test_lazy_state_allocation_matches_rule():
     assert s7.grad_ema is None and s7.theta_last is None
     swk = init_lazy_state("lasg_wk", tmpl, 4)
     assert swk.grad_ema["x"].shape == (4, 7) and swk.theta_last is None
+    swk2 = init_lazy_state("lasg_wk2", tmpl, 4)
+    assert swk2.theta_last["x"].shape == (4, 7) and swk2.grad_ema is None
     sps = init_lazy_state("lasg_ps", tmpl, 4)
     assert sps.theta_last["x"].shape == (4, 7) and sps.grad_ema is None
     assert isinstance(s7, LazyState)
 
 
-@pytest.mark.parametrize("rule", ("lasg_wk", "lasg_ps"))
+@pytest.mark.parametrize("rule", ("lasg_wk", "lasg_wk2", "lasg_ps"))
 def test_rules_run_deterministically_too(rule):
     """The rules are not stochastic-only plumbing: a full-gradient run
     converges (WK's variance estimate then only measures drift, which makes

@@ -1,0 +1,165 @@
+"""Property tests: ``LazyState`` / ``SvrgState`` / ``CommState`` pytree
+round-trips.
+
+The sharded launch path moves the whole ``CommState`` through
+``jax.tree.map`` / flatten-unflatten boundaries (shard_map in/out specs,
+``_squeeze0``/``_unsqueeze0``, device_put against spec trees).  Those
+boundaries silently *drop* anything the pytree protocol does not carry —
+exactly the failure mode rule-gated ``None`` fields invite.  These
+hypothesis properties pin the contract:
+
+* flatten → unflatten reconstructs the state bit-identically for every
+  (lazy_rule x grad_mode) combination;
+* ``None`` gating is structural: the treedef of a ``lasg_wk`` state differs
+  from a ``laq7a`` state, so a mixed ``tree.map`` fails loudly instead of
+  zipping mismatched leaves;
+* the svrg anchor initializes to the *template values* (the initial
+  iterate) and survives a worker-dim squeeze/unsqueeze round-trip — the
+  per-shard view the sharded step takes.
+
+The ``hypothesis`` import resolves to the deterministic fallback in
+``conftest.py`` when the real package is absent (offline container).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import StrategyConfig, init_comm_state
+from repro.core.lazy_rules import LAZY_RULES, LazyState, init_lazy_state
+from repro.core.strategy import SvrgState, init_svrg_state
+
+GRAD_MODES = ("sgd", "svrg")
+
+
+def template(shape_a, shape_b):
+    return {"w": jnp.arange(int(np.prod(shape_a)), dtype=jnp.float32)
+                    .reshape(shape_a) * 0.25 - 1.0,
+            "b": jnp.ones(shape_b, jnp.float32) * 3.0}
+
+
+def cfg_for(rule, grad_mode):
+    return StrategyConfig(kind="laq", bits=4, lazy_rule=rule,
+                          grad_mode=grad_mode)
+
+
+def assert_trees_bit_identical(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=20)
+@given(rule=st.sampled_from(LAZY_RULES),
+       grad_mode=st.sampled_from(GRAD_MODES),
+       n_workers=st.integers(min_value=1, max_value=8),
+       d0=st.integers(min_value=1, max_value=5),
+       d1=st.integers(min_value=1, max_value=5))
+def test_comm_state_flatten_unflatten_roundtrip(rule, grad_mode, n_workers,
+                                                d0, d1):
+    state = init_comm_state(template((d0, d1), (d1,)), n_workers,
+                            cfg_for(rule, grad_mode))
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert_trees_bit_identical(state, rebuilt)
+    # identity tree.map is the shard_map spec-attachment shape: it must
+    # preserve every leaf and every None gate
+    mapped = jax.tree.map(lambda x: x, state)
+    assert_trees_bit_identical(state, mapped)
+
+
+@settings(max_examples=15)
+@given(rule=st.sampled_from(LAZY_RULES),
+       n_workers=st.integers(min_value=1, max_value=6))
+def test_lazy_state_rule_gated_fields(rule, n_workers):
+    tmpl = template((3, 4), (4,))
+    lz = init_lazy_state(rule, tmpl, n_workers)
+    assert isinstance(lz, LazyState)
+    assert (lz.grad_ema is not None) == (rule == "lasg_wk")
+    assert (lz.theta_last is not None) == (rule in ("lasg_wk2", "lasg_ps"))
+    # scalar estimator fields always exist, shaped [W]
+    assert lz.stat_ema.shape == (n_workers,)
+    assert lz.sigma_hat_sq.shape == (n_workers,)
+    if lz.theta_last is not None:
+        # snapshot of the template VALUES (the initial iterate), per worker
+        assert lz.theta_last["w"].shape == (n_workers,) + tmpl["w"].shape
+        for m in range(n_workers):
+            np.testing.assert_array_equal(
+                np.asarray(lz.theta_last["w"][m]), np.asarray(tmpl["w"]))
+
+
+@settings(max_examples=15)
+@given(grad_mode=st.sampled_from(GRAD_MODES),
+       n_workers=st.integers(min_value=1, max_value=6))
+def test_svrg_state_anchor_gating_and_values(grad_mode, n_workers):
+    tmpl = template((2, 3), (3,))
+    sv = init_svrg_state(grad_mode, tmpl, n_workers)
+    assert isinstance(sv, SvrgState)
+    if grad_mode == "sgd":
+        assert sv.theta_anchor is None and sv.mu_anchor is None
+        # an sgd-mode state flattens to NO svrg leaves at all
+        assert jax.tree_util.tree_leaves(sv) == []
+        return
+    assert sv.theta_anchor["b"].shape == (n_workers,) + tmpl["b"].shape
+    for m in range(n_workers):
+        np.testing.assert_array_equal(np.asarray(sv.theta_anchor["w"][m]),
+                                      np.asarray(tmpl["w"]))
+    assert float(jnp.max(jnp.abs(sv.mu_anchor["w"]))) == 0.0
+
+
+@settings(max_examples=10)
+@given(rule=st.sampled_from(LAZY_RULES),
+       grad_mode=st.sampled_from(GRAD_MODES))
+def test_worker_dim_squeeze_unsqueeze_roundtrip(rule, grad_mode):
+    """The per-shard view of the sharded step: squeeze the W=1 worker dim
+    off every per-worker field, then restore it — bit-identical, None
+    gates intact (this is launch/train.py's _squeeze0/_unsqueeze0)."""
+    state = init_comm_state(template((4, 2), (2,)), 1,
+                            cfg_for(rule, grad_mode))
+    for sub in (state.lazy, state.svrg):
+        squeezed = jax.tree.map(lambda x: jnp.squeeze(x, 0)
+                                if x.ndim >= 1 else x, sub)
+        restored = jax.tree.map(
+            lambda s, o: jnp.broadcast_to(s[None] if s.ndim + 1 == o.ndim
+                                          else s, o.shape), squeezed, sub)
+        assert_trees_bit_identical(sub, restored)
+
+
+def test_mixed_rule_tree_map_fails_loudly():
+    """Structural None gating: zipping states of different rules in one
+    tree.map must raise, never silently pair mismatched leaves."""
+    tmpl = template((3, 3), (3,))
+    s_wk = init_comm_state(tmpl, 2, cfg_for("lasg_wk", "sgd"))
+    s_7a = init_comm_state(tmpl, 2, cfg_for("laq7a", "sgd"))
+    with pytest.raises(ValueError):
+        jax.tree.map(lambda a, b: a, s_wk, s_7a)
+    s_vr = init_comm_state(tmpl, 2, cfg_for("laq7a", "svrg"))
+    with pytest.raises(ValueError):
+        jax.tree.map(lambda a, b: a, s_vr, s_7a)
+
+
+def test_leaf_count_is_rule_and_mode_determined():
+    """The flattened leaf count depends only on (rule, grad_mode) — a
+    regression guard against fields accidentally becoming unhashable /
+    non-leaf and vanishing from sharded exchanges."""
+    tmpl = template((2, 2), (2,))
+    counts = {}
+    for rule in LAZY_RULES:
+        for gm in GRAD_MODES:
+            n = len(jax.tree_util.tree_leaves(
+                init_comm_state(tmpl, 3, cfg_for(rule, gm))))
+            counts[(rule, gm)] = n
+    base = counts[("laq7a", "sgd")]
+    tmpl_leaves = 2   # {"w", "b"}
+    # WK adds grad_ema (one leaf per param leaf); WK2/PS add theta_last
+    assert counts[("lasg_wk", "sgd")] == base + tmpl_leaves
+    assert counts[("lasg_wk2", "sgd")] == base + tmpl_leaves
+    assert counts[("lasg_ps", "sgd")] == base + tmpl_leaves
+    # svrg adds theta_anchor + mu_anchor regardless of rule
+    for rule in LAZY_RULES:
+        assert counts[(rule, "svrg")] == counts[(rule, "sgd")] + 2 * tmpl_leaves

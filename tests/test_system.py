@@ -174,6 +174,25 @@ out["ps_anchor_min"] = float(jnp.min(p1.comm.R_anchor))
 out["ps_theta_last_set"] = float(max(jax.tree.leaves(jax.tree.map(
     lambda l: float(jnp.max(jnp.abs(l))), p1.comm.lazy.theta_last))))
 
+# wk2 same-sample rule (second backprop at the stale iterate) + streaming
+# svrg anchor + 1/t stepsize schedule: the PR-4 CommState fields (svrg) and
+# the scheduled lr thread through the mesh on the packed wire
+from repro.core.adaptive import EtaSchedule
+vr = strategy._replace(lazy_rule="lasg_wk2", grad_mode="svrg", svrg_period=2,
+                       eta_schedule=EtaSchedule(kind="inv_t", t0=10.0))
+v1 = fresh(vr)
+jvr = jax.jit(make_train_step(cfg, mesh, vr, opt, lr=1e-2,
+                              worker_axes=wa, wire="packed"))
+vl = []
+for _ in range(4):
+    v1, m = jvr(v1, batch)
+    vl.append(float(m.loss))
+out["vr_losses"] = vl
+out["vr_theta_last_set"] = float(max(jax.tree.leaves(jax.tree.map(
+    lambda l: float(jnp.max(jnp.abs(l))), v1.comm.lazy.theta_last))))
+out["vr_mu_set"] = float(max(jax.tree.leaves(jax.tree.map(
+    lambda l: float(jnp.max(jnp.abs(l))), v1.comm.svrg.mu_anchor))))
+
 params_s, cache_s, tokens_s = serve_specs(cfg, mesh, batch=8, seq_len=128)
 c = jax.jit(make_decode_step(cfg)).lower(params_s, cache_s, tokens_s).compile()
 ca = c.cost_analysis()
@@ -222,6 +241,11 @@ def test_sharded_integration_subprocess():
     assert np.all(np.isfinite(out["ps_losses"])), out["ps_losses"]
     assert out["ps_anchor_min"] > 0.0, out
     assert out["ps_theta_last_set"] > 0.0, out
+    # WK2 + streaming svrg + 1/t schedule on the mesh: finite losses, the
+    # stale-iterate snapshot and the svrg anchor's mu were both populated
+    assert np.all(np.isfinite(out["vr_losses"])), out["vr_losses"]
+    assert out["vr_theta_last_set"] > 0.0, out
+    assert out["vr_mu_set"] > 0.0, out
     assert out["decode_flops"] > 0
     assert out["pod_losses"][-1] < out["pod_losses"][0], out["pod_losses"]
     assert 0 <= out["pod_uploads"] <= 2

@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core import (BitSchedule, CriterionConfig, StrategyConfig,
-                        run_gradient_based, worker_update)
+                        run_gradient_based, run_stochastic, worker_update)
 from repro.core.strategy import aggregate, init_comm_state
 from repro.core.wire import (FusedWire, axis_packable, get_backend,
                              pack_codes_along_axis, unpack_codes_along_axis)
@@ -121,6 +121,47 @@ def test_trajectory_bit_identical(kind, bits, per_leaf):
                                   np.asarray(rf.cum_uploads))
     np.testing.assert_array_equal(np.asarray(rr.params["x"]),
                                   np.asarray(rf.params["x"]))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("variant", ["wk2", "svrg", "wk2+svrg"])
+def test_stochastic_trajectory_bit_identical(bits, variant):
+    """The new stochastic kinds ride the same wire: a whole run_stochastic
+    trajectory under the WK2 same-sample rule and/or svrg-corrected
+    gradients (second backprops, anchor refresh cond, minibatch sampling in
+    the loop) reproduces bitwise across wire backends."""
+    key = jax.random.PRNGKey(3)
+    kx, ky = jax.random.split(key)
+    M, n_local, p = 6, 12, 8
+    X = jax.random.normal(kx, (M, n_local, p))
+    w_true = jnp.linspace(-1.0, 1.0, p)
+    Yn = X @ w_true + 0.3 * jax.random.normal(ky, (M, n_local))
+
+    def loss_fn(params, data):
+        x, y = data
+        return 0.5 * jnp.sum(jnp.square(x @ params["w"] - y)) / (M * n_local)
+
+    p0 = {"w": jnp.zeros((p,))}
+    kind = "slaq" if variant == "svrg" else "slaq_wk2"
+    grad_mode = "sgd" if variant == "wk2" else "svrg"
+
+    def run(backend):
+        cfg = StrategyConfig(kind="laq", bits=bits,
+                             criterion=CriterionConfig(D=10, xi=0.08, t_bar=20),
+                             wire_backend=backend, grad_mode=grad_mode,
+                             svrg_period=7)
+        return run_stochastic(loss_fn, p0, (X, Yn), kind, steps=50,
+                              alpha=0.3, batch=4, bits=bits, seed=2,
+                              laq_cfg=cfg)
+
+    rr, rf = run("reference"), run("fused")
+    np.testing.assert_array_equal(np.asarray(rr.loss), np.asarray(rf.loss))
+    np.testing.assert_array_equal(np.asarray(rr.cum_bits),
+                                  np.asarray(rf.cum_bits))
+    np.testing.assert_array_equal(np.asarray(rr.cum_uploads),
+                                  np.asarray(rf.cum_uploads))
+    np.testing.assert_array_equal(np.asarray(rr.params["w"]),
+                                  np.asarray(rf.params["w"]))
 
 
 @pytest.mark.parametrize("per_leaf", RADII)
