@@ -1,0 +1,162 @@
+"""Participation/staleness frontier: bits-and-uploads-to-loss under partial
+participation (client sampling p in {1.0, 0.5, 0.2}) and bounded-delay
+staleness (D in {0, 4}) — the scenarios the PR-5 round engine added
+(core/engine.py participation models; LAG's heterogeneous-worker setting).
+
+Substrate: the paper's logistic-regression mixture, deterministic full
+gradients (paper Table 2 regime), so every effect measured here is the
+participation model's, not minibatch noise.  Two LAQ criterion settings:
+
+* the paper criterion (xi = 0.8/10) — LAQ's **skip-dominated** regime
+  (~2% of upload opportunities used).  Here the skip rule *absorbs*
+  sampling: workers that were sampled out simply upload at their next
+  available round, so the upload count barely moves with p while the loss
+  target is still reached — lazy aggregation composes with availability
+  instead of stacking losses.
+* a 10x stricter criterion (xi = 0.08/10) — the **communication-rich**
+  regime where LAQ uploads often.  There sampling prunes upload
+  opportunities directly: p = 0.5 reaches the target with roughly half
+  the uploads of p = 1.0 (the acceptance headline), exactly like the
+  dense QGD reference whose uploads are p-scaled by construction.
+
+Headline claims checked:
+
+* LAQ reaches the dense-QGD loss target at every p and at D=4 (bounded
+  staleness and client sampling do not break the skip criterion);
+* at matched p, LAQ needs fewer wire bits than QGD (the skip rule keeps
+  paying under sampling);
+* dense uploads are p-scaled (QGD at p=0.5 uses ~half the uploads of
+  p=1.0), and so are communication-rich LAQ's;
+* sampling never *increases* LAQ communication;
+* D=4 staleness costs at most a modest bits-to-target factor.
+
+    PYTHONPATH=src python -m benchmarks.participation_frontier
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CriterionConfig, StrategyConfig, run_gradient_based
+
+from .common import PAPER_CRITERION, logreg_init, logreg_loss, make_dataset
+
+STEPS = 400
+BITS = 4
+ALPHA = 2.0
+P_GRID = (1.0, 0.5, 0.2)
+DELAY = 4
+TARGET_TOL = 1.05     # reach within 5% of the dense-QGD floor
+RICH_CRITERION = CriterionConfig(D=10, xi=0.08 / 10, t_bar=100)
+
+
+def first_reach(result, target: float):
+    """(uploads, bits) at the first *sustained* crossing (see
+    lasg_frontier.first_reach for why first-touch would be an artifact)."""
+    loss = np.asarray(result.loss)
+    trailing_max = np.maximum.accumulate(loss[::-1])[::-1]
+    reached = trailing_max <= target
+    if not reached.any():
+        return None
+    k = int(np.argmax(reached))
+    return int(result.cum_uploads[k]), float(result.cum_bits[k])
+
+
+def run(out_rows, results):
+    workers, full = make_dataset()
+    loss_fn = logreg_loss(full[0].shape[0])
+    laq = StrategyConfig(kind="laq", bits=BITS, criterion=PAPER_CRITERION)
+    qgd = laq._replace(kind="qgd")
+    rich = laq._replace(criterion=RICH_CRITERION)
+
+    def sampled(cfg, p):
+        if p >= 1.0:
+            return cfg
+        return cfg._replace(participation="bernoulli", participation_p=p)
+
+    cfgs = {}
+    for p in P_GRID:
+        cfgs[f"laq_p{p}"] = sampled(laq, p)
+        cfgs[f"qgd_p{p}"] = sampled(qgd, p)
+    for p in (1.0, 0.5):
+        cfgs[f"laq_rich_p{p}"] = sampled(rich, p)
+    cfgs[f"laq_d{DELAY}"] = laq._replace(participation="delay",
+                                         max_delay=DELAY)
+    runs = {name: run_gradient_based(loss_fn, logreg_init(), workers, cfg,
+                                     steps=STEPS, alpha=ALPHA)
+            for name, cfg in cfgs.items()}
+
+    target = TARGET_TOL * float(runs["qgd_p1.0"].loss[-1])
+
+    frontier = {}
+    for name, r in runs.items():
+        at = first_reach(r, target)
+        frontier[name] = dict(
+            final_loss=float(r.loss[-1]),
+            total_uploads=int(r.cum_uploads[-1]),
+            total_bits=float(r.cum_bits[-1]),
+            uploads_to_target=None if at is None else at[0],
+            bits_to_target=None if at is None else at[1])
+        out_rows.append((f"participation_{name}", float(r.cum_bits[-1]),
+                         f"loss={frontier[name]['final_loss']:.4f};"
+                         f"to_target={at}"))
+    results["participation_frontier"] = dict(target_loss=target, **frontier)
+
+    def to_target(name, field="bits_to_target"):
+        v = frontier[name][field]
+        return np.inf if v is None else v
+
+    up_ratio_qgd = (to_target("qgd_p0.5", "uploads_to_target")
+                    / to_target("qgd_p1.0", "uploads_to_target"))
+    up_ratio_rich = (to_target("laq_rich_p0.5", "uploads_to_target")
+                     / to_target("laq_rich_p1.0", "uploads_to_target"))
+    checks = {
+        "LAQ reaches the target at every p and at D=4": all(
+            frontier[n]["bits_to_target"] is not None
+            for n in ("laq_p1.0", "laq_p0.5", "laq_p0.2", f"laq_d{DELAY}",
+                      "laq_rich_p1.0", "laq_rich_p0.5")),
+        "bits-to-target: LAQ < QGD at p=1.0":
+            to_target("laq_p1.0") < to_target("qgd_p1.0"),
+        "bits-to-target: LAQ < QGD at p=0.5 (skip rule composes)":
+            to_target("laq_p0.5") < to_target("qgd_p0.5"),
+        "bits-to-target: LAQ < QGD at p=0.2":
+            to_target("laq_p0.2") < to_target("qgd_p0.2"),
+        "dense uploads are p-scaled: QGD p=0.5 uses ~half of p=1.0":
+            0.4 <= up_ratio_qgd <= 0.6,
+        "comm-rich LAQ p=0.5 reaches target with ~half the uploads":
+            0.35 <= up_ratio_rich <= 0.7,
+        "sampling never increases LAQ communication":
+            frontier["laq_p0.2"]["total_uploads"]
+            <= frontier["laq_p0.5"]["total_uploads"]
+            <= frontier["laq_p1.0"]["total_uploads"],
+        f"bounded staleness D={DELAY} costs <= 1.5x bits-to-target":
+            to_target(f"laq_d{DELAY}") <= 1.5 * to_target("laq_p1.0"),
+    }
+    results["participation_frontier/claims"] = checks
+    return checks
+
+
+def main():
+    out_rows, results = [], {}
+    checks = run(out_rows, results)
+    f = results["participation_frontier"]
+    print(f"target loss = {f['target_loss']:.4f} "
+          f"({TARGET_TOL}x dense-QGD floor, b={BITS}, alpha={ALPHA})")
+    print(f"{'run':14s} {'final loss':>11s} {'uploads':>8s} {'bits':>11s} "
+          f"{'up@tgt':>7s} {'bits@tgt':>11s}")
+    for name, row in f.items():
+        if name == "target_loss":
+            continue
+        ut, bt = row["uploads_to_target"], row["bits_to_target"]
+        print(f"{name:14s} {row['final_loss']:11.5f} "
+              f"{row['total_uploads']:8d} {row['total_bits']:11.3e} "
+              f"{(str(ut) if ut is not None else 'never'):>7s} "
+              f"{(f'{bt:.3e}' if bt is not None else 'never'):>11s}")
+    ok = True
+    for k, v in checks.items():
+        print(f"[{'PASS' if v else 'FAIL'}] {k}")
+        ok &= bool(v)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,11 +18,13 @@ def main() -> None:
     all_checks = {}
 
     from . import (adaptive_sweep, bits_sweep, convergence, lasg_frontier,
-                   table2_gradient, table3_stochastic, wire_microbench)
+                   participation_frontier, table2_gradient, table3_stochastic,
+                   wire_microbench)
     for name, mod in (("table2", table2_gradient), ("table3", table3_stochastic),
                       ("convergence", convergence), ("bits_sweep", bits_sweep),
                       ("adaptive_sweep", adaptive_sweep),
                       ("lasg_frontier", lasg_frontier),
+                      ("participation_frontier", participation_frontier),
                       ("wire_microbench", wire_microbench)):
         t = time.time()
         checks = mod.run(out_rows, results)

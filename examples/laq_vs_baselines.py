@@ -47,6 +47,27 @@ def main():
                          int(r.cum_uploads[i]), float(r.cum_bits[i])))
         print(f"[gradient]   {kind:5s} loss={float(r.loss[-1]):.6f} "
               f"rounds={int(r.cum_uploads[-1]):6d} bits={float(r.cum_bits[-1]):.3e}")
+    # participation family (PR-5 round engine, core/engine.py): the same
+    # deterministic LAQ under client sampling (each round only a Bernoulli-p
+    # cohort of workers is reachable; masked workers are accounted exactly
+    # like lazy skips) and under bounded-delay staleness (worker m computes
+    # at theta^{k - (m mod 5)})
+    base = StrategyConfig(kind="laq", bits=4, criterion=crit)
+    participation = [
+        ("laq_p0.5", base._replace(participation="bernoulli",
+                                   participation_p=0.5)),
+        ("laq_p0.2", base._replace(participation="bernoulli",
+                                   participation_p=0.2)),
+        ("laq_delay4", base._replace(participation="delay", max_delay=4)),
+    ]
+    for label, cfg in participation:
+        r = run_gradient_based(loss_fn, p0, workers, cfg,
+                               steps=args.steps, alpha=2.0)
+        for i in range(0, args.steps, 5):
+            rows.append(("participation", label, i, float(r.loss[i]),
+                         int(r.cum_uploads[i]), float(r.cum_bits[i])))
+        print(f"[particip.]  {label:10s} loss={float(r.loss[-1]):.6f} "
+              f"rounds={int(r.cum_uploads[-1]):6d} bits={float(r.cum_bits[-1]):.3e}")
     # stochastic family: the slaq_* kinds differ only in the lazy rule
     # (core/lazy_rules.py) — eq. 7a replayed on noise vs the variance-aware
     # LASG-WK / same-sample LASG-WK2 / LASG-PS criteria; slaq_vr keeps the

@@ -20,8 +20,16 @@ Public API:
                                             (constant / inv_t / halving)
     WireBackend / get_backend            -- pluggable quantize pipeline
                                             (reference jnp vs fused 2-pass)
+    RoundEngine / GradientSource stages  -- the unified round engine
+                                            (core/engine.py): FullBatchSource
+                                            / MinibatchSource gradients,
+                                            participation models (full /
+                                            bernoulli / fixed_k sampling /
+                                            bounded-delay async) via
+                                            StrategyConfig.participation
     run_gradient_based / run_stochastic  -- simulated M-worker cluster
-                                            (stochastic kinds: sgd/qsgd/ssgd/
+                                            (thin wrappers over RoundEngine;
+                                            stochastic kinds: sgd/qsgd/ssgd/
                                             slaq/slaq_wk/slaq_wk2/slaq_ps)
 """
 from .adaptive import (BitSchedule, EtaSchedule, adaptive_roundtrip, eta_at,
@@ -40,4 +48,9 @@ from .strategy import (KINDS, CommState, RoundMetrics, StrategyConfig,
 from .wire import (FusedWire, ReferenceWire, WireBackend, WireRoundtrip,
                    get_backend)
 from .compressors import qsgd_compress, ssgd_compress
-from .simulated import RunResult, run_gradient_based, run_stochastic
+from .engine import (PARTICIPATION, DelayedParticipation, FullBatchSource,
+                     FullParticipation, MinibatchSource, RoundEngine,
+                     RunResult, SampledParticipation, apply_svrg_exact,
+                     apply_svrg_streaming, broadcast_w, make_participation,
+                     participation_mask, stale_side_grads)
+from .simulated import run_gradient_based, run_stochastic

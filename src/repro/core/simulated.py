@@ -3,39 +3,32 @@
 Runs the worker/server protocol on a single device with a leading worker axis
 (vmap), which is exactly the paper's M=10 setting.  Production execution on a
 real mesh lives in ``repro/launch/train.py``; both share the per-worker math
-in ``core/strategy.py``.
+in ``core/strategy.py`` **and the round stages in ``core/engine.py``** — the
+two runners here are thin, backward-compatible wrappers over
+:class:`repro.core.engine.RoundEngine` and reproduce their pre-engine
+trajectories bitwise (tests/test_engine_parity.py).
 
 The quantize pipeline inside each round is pluggable via
-``StrategyConfig.wire_backend`` (core/wire.py): ``"reference"`` runs the
-paper-faithful jnp sweeps, ``"fused"`` the two-pass pipeline (Pallas on TPU,
-blocked jnp on CPU) whose wire content is bit-identical — so a whole
-simulated run reproduces the same trajectory on either backend.
+``StrategyConfig.wire_backend`` (core/wire.py); which workers the server
+reaches each round via ``StrategyConfig.participation`` /
+``participation_p`` / ``max_delay`` (core/engine.py participation models —
+client sampling and bounded-staleness async workers compose with every
+kind and lazy rule below).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from .adaptive import eta_at
-from .compressors import qsgd_compress, ssgd_compress
-from .quantize import dense_bits, tree_size, tree_sq_norm
-from .strategy import (CommState, RoundMetrics, StrategyConfig, SvrgState,
-                       aggregate, finalize_step, init_comm_state)
+from .engine import FullBatchSource, MinibatchSource, RoundEngine, RunResult
+from .strategy import StrategyConfig
 
 Pytree = object
 
+__all__ = ["RunResult", "run_gradient_based", "run_stochastic"]
 
-class RunResult(NamedTuple):
-    params: Pytree
-    loss: jax.Array          # [K] global loss per iteration
-    grad_norm_sq: jax.Array  # [K]
-    cum_uploads: jax.Array   # [K] cumulative communication rounds
-    cum_bits: jax.Array      # [K] cumulative wire bits
-    quant_err: jax.Array     # [K] max_m R_m (decay diagnostic, paper Fig. 3)
-    mean_bits: jax.Array = None  # [K] mean selected width over uploaders
-                                 # (adaptive-LAQ diagnostic; static otherwise)
+# kind -> forced lazy_rule for the stochastic LAQ family (None = as given)
+_SLAQ_RULES = {"slaq": None, "slaq_wk": "lasg_wk", "slaq_wk2": "lasg_wk2",
+               "slaq_ps": "lasg_ps"}
 
 
 def run_gradient_based(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
@@ -46,39 +39,8 @@ def run_gradient_based(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
     f_m; ``worker_data`` has a leading worker axis W.  Global objective is
     ``sum_m f_m`` (paper eq. 1).
     """
-    n_workers = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
-    grad_m = jax.grad(loss_fn)
-
-    def global_loss(p):
-        return jnp.sum(jax.vmap(lambda d: loss_fn(p, d))(worker_data))
-
-    state0 = init_comm_state(params0, n_workers, cfg)
-    wk2 = cfg.lazy and cfg.lazy_rule == "lasg_wk2"
-
-    def step(carry, _):
-        params, cst = carry
-        alpha_k = eta_at(cfg.eta_schedule, alpha, cst.step)
-        grads = jax.vmap(lambda d: grad_m(params, d))(worker_data)
-        grads_stale = None
-        if wk2:
-            # deterministic WK2: the full local gradient at the stale
-            # iterate (no noise to cancel — the rule degenerates to LAG's
-            # exact gradient-difference trigger, at 2x compute)
-            grads_stale = jax.vmap(lambda t, d: grad_m(t, d))(
-                cst.lazy.theta_last, worker_data)
-        agg, cst, metrics = aggregate(cst, grads, alpha_k, cfg,
-                                      params=params, grads_stale=grads_stale)
-        new_params = jax.tree.map(lambda t, g: t - alpha_k * g, params, agg)
-        dtheta_sq = tree_sq_norm(jax.tree.map(lambda a, b: a - b, new_params, params))
-        cst = finalize_step(cst, dtheta_sq)
-        gn = tree_sq_norm(jax.grad(global_loss)(params))
-        rec = (global_loss(params), gn, cst.total_uploads, cst.total_bits,
-               metrics.radius_max, metrics.mean_bits)
-        return (new_params, cst), rec
-
-    (params, _), recs = jax.lax.scan(step, (params0, state0), None, length=steps)
-    loss, gn, cu, cb, qe, mb = recs
-    return RunResult(params, loss, gn, cu, cb, qe, mb)
+    source = FullBatchSource(loss_fn, worker_data)
+    return RoundEngine(source, cfg, alpha=alpha).run(params0, steps)
 
 
 def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
@@ -97,20 +59,21 @@ def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
     * ``kind="slaq_wk"``  — forces the variance-corrected worker-side rule
       (``lazy_rule="lasg_wk"``);
     * ``kind="slaq_wk2"`` — forces the same-sample noise-free rule
-      (``lazy_rule="lasg_wk2"``; the runner pays the second backprop of the
+      (``lazy_rule="lasg_wk2"``; the engine pays the second backprop of the
       current minibatch at each worker's stale iterate);
     * ``kind="slaq_ps"``  — forces the server-side parameter-drift rule
       (``lazy_rule="lasg_ps"``).
 
-    Two further levers apply to EVERY kind (baselines inherit them from
+    Three further levers apply to EVERY kind (baselines inherit them from
     ``laq_cfg`` so frontier comparisons stay matched):
 
-    * ``laq_cfg.grad_mode="svrg"`` — variance-reduced local gradients: each
-      worker keeps a periodic full-local-gradient anchor (``CommState.svrg``,
-      refreshed every ``svrg_period`` rounds inside a ``lax.cond``) and feeds
-      the corrected minibatch gradient to the lazy rule and the quantizer;
+    * ``laq_cfg.grad_mode="svrg"`` — variance-reduced local gradients
+      (:func:`repro.core.engine.apply_svrg_exact`: per-worker periodic
+      full-local-gradient anchors in ``CommState.svrg``);
     * ``laq_cfg.eta_schedule`` — the per-round stepsize (constant / 1-over-t
-      / stagewise halving), applied to the update *and* the criterion.
+      / stagewise halving), applied to the update *and* the criterion;
+    * ``laq_cfg.participation`` / ``participation_p`` / ``max_delay`` —
+      client sampling / bounded-staleness participation (core/engine.py).
 
     RNG discipline (determinism-regression-tested): every key derives
     functionally from ``(seed, stream, round, worker)`` by ``fold_in`` — no
@@ -118,121 +81,27 @@ def run_stochastic(loss_fn: Callable, params0: Pytree, worker_data: Pytree,
     kinds (compressor kinds draw from their own stream without perturbing
     the batch stream) and each worker's stream is independent.
     """
-    n_workers = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
-    n_local = jax.tree_util.tree_leaves(worker_data)[0].shape[1]
-    grad_m = jax.grad(loss_fn)
-    p = tree_size(params0)
-
-    def global_loss(pp):
-        return jnp.sum(jax.vmap(lambda d: loss_fn(pp, d))(worker_data))
-
-    slaq_rules = {"slaq": None, "slaq_wk": "lasg_wk", "slaq_wk2": "lasg_wk2",
-                  "slaq_ps": "lasg_ps"}
-    is_slaq = kind in slaq_rules
+    is_slaq = kind in _SLAQ_RULES
     if is_slaq:
         scfg = laq_cfg or StrategyConfig(kind="laq", bits=bits)
-        if slaq_rules[kind] is not None:
-            scfg = scfg._replace(lazy_rule=slaq_rules[kind])
+        if _SLAQ_RULES[kind] is not None:
+            scfg = scfg._replace(lazy_rule=_SLAQ_RULES[kind])
+        baseline = None
     else:
         if kind not in ("sgd", "qsgd", "ssgd"):
             raise ValueError(kind)
         # bits bookkeeping only — but the stochastic levers (grad_mode,
-        # eta_schedule) carry over so baselines are variance-matched
+        # eta_schedule, participation) carry over so baselines stay matched
         src = laq_cfg or StrategyConfig()
         scfg = StrategyConfig(kind="gd", grad_mode=src.grad_mode,
                               svrg_period=src.svrg_period,
-                              eta_schedule=src.eta_schedule)
-    state0 = init_comm_state(params0, n_workers, scfg)
-    wk2 = is_slaq and scfg.lazy and scfg.lazy_rule == "lasg_wk2"
-
-    key0 = jax.random.PRNGKey(seed)
-    worker_ids = jnp.arange(n_workers)
-
-    def stream_keys(stream, step_idx):
-        ks = jax.random.fold_in(jax.random.fold_in(key0, stream), step_idx)
-        return jax.vmap(lambda m: jax.random.fold_in(ks, m))(worker_ids)
-
-    def sample(data_m, key):
-        idx = jax.random.randint(key, (batch,), 0, n_local)
-        return jax.tree.map(lambda x: x[idx], data_m)
-
-    # worker gradients scaled so that sum_m E[g_m] = grad of global loss
-    scale = n_local / batch
-
-    def grads_at(thetas, batches):
-        """Per-worker scaled minibatch gradients at per-worker iterates."""
-        return jax.vmap(lambda t, b: jax.tree.map(
-            lambda g: g.astype(jnp.float32) * scale, grad_m(t, b)))(thetas, batches)
-
-    def broadcast_w(tree):
-        return jax.tree.map(lambda l: jnp.broadcast_to(
-            l.astype(jnp.float32), (n_workers,) + l.shape), tree)
-
-    def svrg_refresh(params, svrg):
-        # anchor <- current iterate; mu <- exact full LOCAL gradient there
-        # (already on the global-loss scale: loss_fn normalizes by N)
-        mu = jax.vmap(lambda d: grad_m(params, d))(worker_data)
-        return SvrgState(
-            theta_anchor=broadcast_w(params),
-            mu_anchor=jax.tree.map(lambda g: g.astype(jnp.float32), mu))
-
-    def step(carry, _):
-        params, cst = carry
-        alpha_k = eta_at(scfg.eta_schedule, alpha, cst.step)
-        batches = jax.vmap(sample)(worker_data, stream_keys(0, cst.step))
-        grads = grads_at(broadcast_w(params), batches)
-
-        corr = None
-        if scfg.variance_reduced:
-            svrg = jax.lax.cond(cst.step % scfg.svrg_period == 0,
-                                lambda s: svrg_refresh(params, s),
-                                lambda s: s, cst.svrg)
-            cst = cst._replace(svrg=svrg)
-            # additive SVRG correction mu - (n/B) g(theta_anchor; xi): the
-            # SAME term is applied to the stale-side WK2 gradient below, so
-            # anchor and mu cancel in the same-sample difference
-            g_anchor = grads_at(svrg.theta_anchor, batches)
-            corr = jax.tree.map(lambda mu, ga: mu - ga,
-                                svrg.mu_anchor, g_anchor)
-            grads = jax.tree.map(lambda g, c: g + c, grads, corr)
-
-        if is_slaq:
-            grads_stale = None
-            if wk2:
-                # the second backprop: the SAME minibatch at the stale iterate
-                grads_stale = grads_at(cst.lazy.theta_last, batches)
-                if corr is not None:
-                    grads_stale = jax.tree.map(lambda g, c: g + c,
-                                               grads_stale, corr)
-            agg, cst, metrics = aggregate(cst, grads, alpha_k, scfg,
-                                          params=params,
-                                          grads_stale=grads_stale)
-            qe = metrics.radius_max
-            mb = metrics.mean_bits
-        else:
-            keys_cmp = stream_keys(1, cst.step)
-            if kind == "sgd":
-                cgrads = grads
-                bits_m = jnp.full((n_workers,), float(dense_bits(p)))
-            elif kind == "qsgd":
-                cgrads, bits_m = jax.vmap(lambda k, g: qsgd_compress(k, g, bits))(keys_cmp, grads)
-            else:
-                cgrads, bits_m = jax.vmap(lambda k, g: ssgd_compress(k, g, density))(keys_cmp, grads)
-            agg = jax.tree.map(lambda g: jnp.sum(g, axis=0), cgrads)
-            cst = cst._replace(total_bits=cst.total_bits + jnp.sum(bits_m),
-                               total_uploads=cst.total_uploads + n_workers,
-                               step=cst.step + 1)
-            qe = jnp.zeros(())
-            mb = jnp.mean(bits_m) / p
-
-        new_params = jax.tree.map(lambda t, g: t - alpha_k * g, params, agg)
-        if is_slaq:
-            dsq = tree_sq_norm(jax.tree.map(lambda a, b: a - b, new_params, params))
-            cst = finalize_step(cst, dsq)
-        gn = tree_sq_norm(jax.grad(global_loss)(params))
-        rec = (global_loss(params), gn, cst.total_uploads, cst.total_bits, qe, mb)
-        return (new_params, cst), rec
-
-    (params, _), recs = jax.lax.scan(step, (params0, state0), None, length=steps)
-    loss, gn, cu, cb, qe, mb = recs
-    return RunResult(params, loss, gn, cu, cb, qe, mb)
+                              eta_schedule=src.eta_schedule,
+                              participation=src.participation,
+                              participation_p=src.participation_p,
+                              max_delay=src.max_delay,
+                              participation_seed=src.participation_seed)
+        baseline = kind
+    source = MinibatchSource(loss_fn, worker_data, batch=batch, seed=seed)
+    engine = RoundEngine(source, scfg, alpha=alpha, baseline=baseline,
+                         bits=bits, density=density, track_history=is_slaq)
+    return engine.run(params0, steps)

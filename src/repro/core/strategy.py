@@ -79,6 +79,17 @@ class StrategyConfig(NamedTuple):
                                     # (core/adaptive.py): constant / inv_t /
                                     # halving; feeds both the update and the
                                     # criterion's 1/(alpha^2 M^2) term
+    participation: str = "full"     # which workers the server reaches each
+                                    # round (core/engine.py): "full" |
+                                    # "bernoulli" / "fixed_k" client sampling
+                                    # | "delay" bounded-staleness async
+                                    # (simulated engine only)
+    participation_p: float = 1.0    # bernoulli keep-probability / fixed_k
+                                    # cohort fraction (k = round(p * W))
+    max_delay: int = 0              # "delay": staleness bound D; worker m
+                                    # computes at theta^{k - (m mod (D+1))}
+    participation_seed: int = 0     # seed of the availability stream
+                                    # (independent of batch/compressor RNG)
     # wire mode is a launch-layer concern ("float" psum vs "packed" all_gather);
     # the algorithmic state machine is identical for both.
 
@@ -122,9 +133,9 @@ class SvrgState(NamedTuple):
     :class:`~repro.core.lazy_rules.LazyState`: rule-gated fields simply
     vanish from the flattened state).  Leading worker dim in simulated
     mode, one slice per shard in sharded mode — exactly like ``qhat``.
-    The refresh itself lives in the runners (it needs the loss closure and,
-    in simulated mode, the worker's full local data); see
-    ``core/simulated.py`` and the streaming variant in ``launch/train.py``.
+    The refresh itself lives in the engine stages (it needs the loss
+    closure and, in simulated mode, the worker's full local data):
+    ``apply_svrg_exact`` / ``apply_svrg_streaming`` in ``core/engine.py``.
     """
     theta_anchor: Optional[Pytree]
     mu_anchor: Optional[Pytree]
@@ -246,7 +257,8 @@ class WorkerOut(NamedTuple):
 def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
                   bits_spent_m, theta_hist, alpha, n_workers: int,
                   cfg: StrategyConfig, step=None, lazy_m=None,
-                  R_anchor_m=None, params=None, grad_stale_m=None):
+                  R_anchor_m=None, params=None, grad_stale_m=None,
+                  avail_m=None):
     """One worker's bit-width selection + quantize + skip decision.
 
     ``lazy_m`` is this worker's :class:`~repro.core.lazy_rules.LazyState`
@@ -255,8 +267,12 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
     current (replicated) iterate, required by the ``lasg_wk2`` / ``lasg_ps``
     rules; ``grad_stale_m`` is the WK2 same-sample second backprop (the
     current minibatch at the worker's stale iterate), required by that rule
-    only.  Returns a :class:`WorkerOut`; ``delta_masked`` is zero if the
-    upload is skipped.
+    only.  ``avail_m`` is this worker's participation bit (core/engine.py):
+    an unreachable worker is masked exactly like a lazy skip — no upload,
+    no wire bits, clock grows, ``qhat`` and the estimator state frozen —
+    so the ``CommState`` accounting stays correct under client sampling.
+    Returns a :class:`WorkerOut`; ``delta_masked`` is zero if the upload is
+    skipped.
     """
     p = tree_size(grad_m)
     if lazy_m is None:
@@ -327,12 +343,25 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
     else:
         skip = jnp.zeros((), bool)
     uploaded = jnp.logical_not(skip)
+    if avail_m is not None:
+        # participation mask BEFORE the state commits: an unreachable
+        # worker must not upload even when the rule (or the 7b staleness
+        # bound) demands it — its clock keeps growing and the overdue
+        # upload happens at its next available round
+        uploaded = jnp.logical_and(uploaded, avail_m)
     if stats is not None:
         lazy_new = commit_upload(cfg.lazy_rule, cfg.lasg, lazy_pre, uploaded,
                                  stats, params=params,
                                  innovation_sq=innovation_sq)
     else:
         lazy_new = lazy_pre
+    if avail_m is not None:
+        # an unreachable worker ran no local computation this round: hold
+        # its estimator state (variance/smoothness EMAs, snapshots) and its
+        # adaptive threshold anchor as well
+        lazy_new = jax.tree.map(lambda n, o: jnp.where(avail_m, n, o),
+                                lazy_new, lazy_m)
+        R_anchor_new = jnp.where(avail_m, R_anchor_new, R_anchor_m)
 
     fup = uploaded.astype(jnp.float32)
     delta_masked = jax.tree.map(lambda d: d * fup, delta)
@@ -350,33 +379,42 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
 # ---------------------------------------------------------------------------
 
 def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig,
-              params: Pytree = None, grads_stale: Pytree = None):
+              params: Pytree = None, grads_stale: Pytree = None,
+              avail: jax.Array = None):
     """Aggregate per-worker gradients (leading dim W) into the LAQ gradient.
 
     ``params`` is the current (replicated) iterate — required by the
     ``lasg_wk2`` / ``lasg_ps`` lazy rules, ignored otherwise;
     ``grads_stale`` (leading dim W, same structure as ``grads``) is the WK2
-    same-sample second backprop.  Returns ``(agg_grad, new_state,
-    metrics)``.  The caller applies ``theta <- theta - alpha * agg_grad``
-    (or feeds agg_grad to an optimizer) and then calls :func:`finalize_step`
-    with the realized parameter change.
+    same-sample second backprop; ``avail`` ([W] bool) is the round's
+    participation mask (core/engine.py) — unreachable workers are masked
+    exactly like lazy skips.  Returns ``(agg_grad, new_state, metrics)``.
+    The caller applies ``theta <- theta - alpha * agg_grad`` (or feeds
+    agg_grad to an optimizer) and then calls :func:`finalize_step` with the
+    realized parameter change.
     """
     n_workers = state.clocks.shape[0]
+    have_stale, have_avail = grads_stale is not None, avail is not None
 
-    def upd(grad_m, qhat_m, eps_m, clock_m, spent_m, lazy_m, anchor_m,
-            grad_stale_m=None):
+    def upd(*args):
         # theta_hist / params are replicated across workers: closed over,
         # not vmapped
+        (grad_m, qhat_m, eps_m, clock_m, spent_m, lazy_m, anchor_m) = args[:7]
+        rest = list(args[7:])
+        grad_stale_m = rest.pop(0) if have_stale else None
+        avail_m = rest.pop(0) if have_avail else None
         return worker_update(grad_m, qhat_m, eps_m, clock_m, spent_m,
                              state.theta_hist, alpha, n_workers, cfg,
                              step=state.step, lazy_m=lazy_m,
                              R_anchor_m=anchor_m, params=params,
-                             grad_stale_m=grad_stale_m)
+                             grad_stale_m=grad_stale_m, avail_m=avail_m)
 
     wargs = (grads, state.qhat, state.eps_hat_sq, state.clocks,
              state.bits_spent, state.lazy, state.R_anchor)
-    if grads_stale is not None:
+    if have_stale:
         wargs = wargs + (grads_stale,)   # vmap cannot map a None arg
+    if have_avail:
+        wargs = wargs + (avail,)
     (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
      bits_m, R_m, width_m, lazy_new, anchor_new) = jax.vmap(upd)(*wargs)
 

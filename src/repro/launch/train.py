@@ -52,20 +52,36 @@ path.  The ``lasg_wk2`` rule pays a second backprop per step: the *current*
 batch re-evaluated at this worker's stale iterate (same microbatching), so
 its skip decision is noise-free.
 
-Two stochastic levers from the simulated runners also apply here:
+Three stochastic levers from the simulated engine also apply here — the
+round stages themselves are SHARED with ``core/engine.py`` (this module no
+longer carries its own copy of the SVRG / WK2 round math):
 
 * ``StrategyConfig.eta_schedule`` — the per-round stepsize ``alpha_k``
   (computed from the replicated ``comm.step``) feeds both the optimizer
   step and the criterion's ``1/(alpha^2 M^2)`` term;
 * ``StrategyConfig.grad_mode="svrg"`` — **streaming-anchor** variance
-  reduction: every ``svrg_period`` steps the anchor snaps to the current
-  iterate and ``mu`` to the current *batch* gradient (the launch path
-  streams data, so the simulated runner's exact full-local-data anchor is
-  approximated by a one-batch anchor; the anchor noise is frozen for the
-  period rather than eliminated — a documented degradation).  Corrected
-  gradients feed the lazy rule and the quantizer exactly as in
-  ``core/simulated.py``; the anchor state (``CommState.svrg``) rides per
-  worker shard like ``qhat``.
+  reduction via :func:`repro.core.engine.apply_svrg_streaming`: every
+  ``svrg_period`` steps the anchor snaps to the current iterate and ``mu``
+  to the current *batch* gradient (the launch path streams data, so the
+  simulated engine's exact full-local-data anchor is approximated by a
+  one-batch anchor; the anchor noise is frozen for the period rather than
+  eliminated — a documented degradation).  Corrected gradients feed the
+  lazy rule and the quantizer exactly as in the simulated engine; the
+  anchor state (``CommState.svrg``) rides per worker shard like ``qhat``;
+* ``StrategyConfig.participation`` — partial participation
+  (core/engine.py): ``"bernoulli"`` / ``"fixed_k"`` client sampling draws
+  the round's cohort from :func:`repro.core.engine.participation_mask`
+  (deterministic in ``(participation_seed, step)``, so every shard and the
+  simulated engine agree on who is reachable); each shard indexes its slot
+  of the replicated [W] mask by a *worker-index input* sharded over the
+  worker axes — NOT ``jax.lax.axis_index``, which lowers to a PartitionId
+  instruction the 0.4.x partial-auto partitioner rejects (see
+  ``repro/compat.py``).  Unreachable workers are masked exactly like lazy
+  skips inside ``worker_update`` (no upload, no wire bits, clocks grow).
+  ``"delay"`` (bounded-staleness async) is simulated-engine-only: it needs
+  a replicated params-history ring, which at model scale would be
+  ``max_delay`` extra copies of the parameters — asserted off here, see
+  ``docs/engine.md``.
 
 Tensor parallelism (``model`` axis) stays under GSPMD: inside the manual
 region, model-sharded arrays keep their global shapes and einsum/norm
@@ -87,6 +103,8 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.adaptive import (dequantize_dynamic, eta_at, quantize_dynamic,
                                  tau_of_selection, tau_of_width)
+from repro.core.engine import (apply_svrg_streaming, participation_mask,
+                               stale_side_grads)
 from repro.core.quantize import (dequantize_innovation, innovation,
                                  quantize_innovation, tree_sq_norm)
 from repro.core.strategy import (CommState, StrategyConfig, SvrgState,
@@ -284,6 +302,11 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
     W = n_workers_of(mesh, worker_axes)
     wa = worker_axes if len(worker_axes) > 1 else worker_axes[0]
     assert wire in ("float", "packed")
+    assert strategy.participation in ("full", "bernoulli", "fixed_k"), (
+        "delay participation is simulated-engine-only: the sharded step "
+        "would need a replicated params-history ring of max_delay+1 full "
+        "parameter copies (see docs/engine.md)")
+    assert strategy.max_delay == 0, "max_delay needs participation='delay'"
     if strategy.wire_backend != "reference":
         # Inside partial-auto shard_map the gradient leaves keep their
         # global shapes with the model axis auto-sharded: the fused
@@ -307,7 +330,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         params_abs = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
         grad_pspecs = param_pspecs(cfg, params_abs, mesh.shape["model"])
 
-    def sharded_step(params, opt_state, comm, batch):
+    def sharded_step(params, opt_state, comm, batch, widx):
         qhat = _squeeze0(comm.qhat)
         eps_hat_sq = jnp.squeeze(comm.eps_hat_sq, 0)
         clock = jnp.squeeze(comm.clocks, 0)
@@ -353,38 +376,34 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         svrg_new = comm.svrg
         corr = None
         if strategy.variance_reduced:
-            # streaming anchor (see module docstring): refresh is a traced
-            # where-select so the step stays a single trace; the anchor
-            # backprop below runs every step (svrg's inherent 2x compute)
-            sv = _squeeze0(comm.svrg)
-            refresh = (comm.step % strategy.svrg_period == 0).astype(jnp.float32)
-            theta_anchor = jax.tree.map(
-                lambda p_, t: refresh * p_.astype(jnp.float32)
-                + (1.0 - refresh) * t, params, sv.theta_anchor)
-            mu = jax.tree.map(
-                lambda g, m: refresh * g.astype(jnp.float32)
-                + (1.0 - refresh) * m, grads, sv.mu_anchor)
-            _, g_anchor = loss_and_grads(theta_anchor)
-            corr = jax.tree.map(lambda m, ga: m - ga.astype(jnp.float32),
-                                mu, g_anchor)
-            grads = jax.tree.map(lambda g, c: g.astype(jnp.float32) + c,
-                                 grads, corr)
-            svrg_new = _unsqueeze0(SvrgState(theta_anchor, mu))
+            # the shared streaming-anchor stage (core/engine.py; the
+            # simulated engine uses the exact-anchor variant): the anchor
+            # backprop runs every step — svrg's inherent 2x compute
+            grads, corr, sv_new = apply_svrg_streaming(
+                _squeeze0(comm.svrg), params, grads,
+                lambda th: loss_and_grads(th)[1], comm.step, strategy)
+            svrg_new = _unsqueeze0(sv_new)
 
         grads_stale = None
         if strategy.lazy and strategy.lazy_rule == "lasg_wk2":
-            # WK2 second backprop: the SAME batch at the stale iterate; the
-            # svrg correction (if any) is applied to both sides so anchor
-            # and mu cancel in the same-sample difference
-            _, grads_stale = loss_and_grads(lazy.theta_last)
-            if corr is not None:
-                grads_stale = jax.tree.map(
-                    lambda g, c: g.astype(jnp.float32) + c, grads_stale, corr)
+            # the shared WK2 stage: the SAME batch at the stale iterate
+            # (identical microbatching via loss_and_grads), svrg correction
+            # applied to both sides so anchor and mu cancel
+            grads_stale = stale_side_grads(lambda th: loss_and_grads(th)[1],
+                                           lazy.theta_last, corr)
+
+        avail = None
+        if strategy.participation != "full":
+            # this shard's slot of the replicated [W] cohort mask — the
+            # SAME draw the simulated engine makes (see module docstring
+            # for why the slot comes from the widx input, not axis_index)
+            avail = participation_mask(strategy, comm.step,
+                                       W)[jnp.squeeze(widx, 0)]
 
         wu = worker_update(grads, qhat, eps_hat_sq, clock, bits_spent,
                            comm.theta_hist, lr_k, W, strategy, step=comm.step,
                            lazy_m=lazy, R_anchor_m=R_anchor, params=params,
-                           grad_stale_m=grads_stale)
+                           grad_stale_m=grads_stale, avail_m=avail)
         (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
          bits_m, width_m) = (wu.delta_masked, wu.qhat_new, wu.eps_hat_sq_new,
                              wu.clock_new, wu.uploaded, wu.bits_m, wu.width_m)
@@ -449,14 +468,16 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             in_specs=(jax.tree.map(lambda _: P(), state.params),
                       jax.tree.map(lambda _: P(), state.opt_state),
                       specs_comm,
-                      jax.tree.map(lambda _: P(wa), batch)),
+                      jax.tree.map(lambda _: P(wa), batch),
+                      P(wa)),
             out_specs=(jax.tree.map(lambda _: P(), state.params),
                        jax.tree.map(lambda _: P(), state.opt_state),
                        specs_comm,
                        StepMetrics(P(), P(), P(), P())),
             axis_names=worker_set, check_vma=False)
         new_params, new_opt, new_comm, metrics = sm(
-            state.params, state.opt_state, comm, batch)
+            state.params, state.opt_state, comm, batch,
+            jnp.arange(W, dtype=jnp.int32))
         return TrainState(new_params, new_opt, new_comm, state.step + 1), metrics
 
     return step

@@ -1,0 +1,172 @@
+"""Golden seeded bitwise parity for the unified round engine.
+
+The PR-5 refactor moved the per-round protocol of both simulated runners
+into ``core/engine.py`` (`RoundEngine` + pluggable `GradientSource` /
+`ParticipationModel` stages) and turned ``run_gradient_based`` /
+``run_stochastic`` into thin wrappers.  The contract pinned here: every
+pre-existing kind x lazy_rule x grad_mode x wire_backend combination
+reproduces its **pre-refactor seeded trajectory bitwise** — loss, upload
+and bit accounting, radius diagnostics and final parameters.
+
+The goldens in ``tests/data/engine_goldens.npz`` were captured by running
+this module as a script against the pre-engine runners (commit f9ddad2):
+
+    PYTHONPATH=src python tests/test_engine_parity.py   # regenerates npz
+
+with ONE amendment: the gradient-family entries carry the PR-5 perf fix
+(``grad_norm_sq`` from the summed per-worker gradients instead of a third
+``jax.grad(global_loss)`` backprop) applied as a one-line change to the
+OLD runner before capture.  The fix is mathematically a no-op (the summed
+full local gradients ARE the global gradient) but removing the extra
+backprop changes XLA fusion, which perturbs the ``lag`` trajectory at the
+last-ulp level (~1e-7) — so pinning the engine against old-runner-plus-fix
+cleanly separates "the refactor changed nothing" (bitwise, asserted here)
+from "the mandated perf fix moved fusion ulps" (captured once, upstream of
+the refactor).
+
+Regenerate ONLY when a change is *supposed* to alter trajectories (then say
+so in the PR); an unintentional diff here means the engine decomposition
+changed the round math.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CriterionConfig, StrategyConfig, run_gradient_based,
+                        run_stochastic)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "data", "engine_goldens.npz")
+
+GRAD_KINDS = ("gd", "qgd", "lag", "laq")
+STOCH_CASES = (
+    ("sgd", "sgd"), ("qsgd", "sgd"), ("ssgd", "sgd"),
+    ("slaq", "sgd"), ("slaq_wk", "sgd"), ("slaq_wk2", "sgd"),
+    ("slaq_ps", "sgd"),
+    ("slaq", "svrg"), ("slaq_wk2", "svrg"),
+)
+BACKENDS = ("reference", "fused")
+
+
+# ---------------------------------------------------------------------------
+# Fixtures: the deterministic quadratic of tests/test_strategy.py and the
+# stochastic linear regression of tests/test_wire_backend.py.
+# ---------------------------------------------------------------------------
+
+def quadratic_problem(M=10, p=20, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kc, ka = jax.random.split(key)
+    centers = jax.random.normal(kc, (M, p))
+    scales = 0.5 + jax.random.uniform(ka, (M, p))
+
+    def loss_fn(params, data):
+        c, a = data
+        return 0.5 * jnp.sum(a * jnp.square(params["x"] - c)) / M
+
+    return loss_fn, {"x": jnp.zeros((p,))}, (centers, scales)
+
+
+def regression_problem(M=6, n_local=12, p=8, seed=3):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    X = jax.random.normal(kx, (M, n_local, p))
+    w_true = jnp.linspace(-1.0, 1.0, p)
+    Yn = X @ w_true + 0.3 * jax.random.normal(ky, (M, n_local))
+
+    def loss_fn(params, data):
+        x, y = data
+        return 0.5 * jnp.sum(jnp.square(x @ params["w"] - y)) / (M * n_local)
+
+    return loss_fn, {"w": jnp.zeros((p,))}, (X, Yn)
+
+
+def run_grad_case(kind, backend):
+    loss_fn, p0, data = quadratic_problem()
+    cfg = StrategyConfig(kind=kind, bits=4, wire_backend=backend,
+                         criterion=CriterionConfig(D=10, xi=0.08, t_bar=100))
+    return run_gradient_based(loss_fn, p0, data, cfg, steps=60, alpha=0.3)
+
+
+def run_stoch_case(kind, grad_mode, backend):
+    loss_fn, p0, data = regression_problem()
+    cfg = StrategyConfig(kind="laq", bits=4, wire_backend=backend,
+                         criterion=CriterionConfig(D=10, xi=0.08, t_bar=20),
+                         grad_mode=grad_mode, svrg_period=7)
+    return run_stochastic(loss_fn, p0, data, kind, steps=50, alpha=0.3,
+                          batch=4, bits=4, seed=2, laq_cfg=cfg)
+
+
+def fingerprint(result, *, with_grad_norm):
+    """The trajectory fields under the bitwise contract (see docstring)."""
+    out = {
+        "loss": np.asarray(result.loss),
+        "cum_uploads": np.asarray(result.cum_uploads),
+        "cum_bits": np.asarray(result.cum_bits),
+        "quant_err": np.asarray(result.quant_err),
+        "mean_bits": np.asarray(result.mean_bits),
+    }
+    if with_grad_norm:
+        out["grad_norm_sq"] = np.asarray(result.grad_norm_sq)
+    for i, leaf in enumerate(jax.tree.leaves(result.params)):
+        out[f"params{i}"] = np.asarray(leaf)
+    return out
+
+
+def _goldens():
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(f"golden file missing: {GOLDEN_PATH} — regenerate with "
+                    "`PYTHONPATH=src python tests/test_engine_parity.py`")
+    return np.load(GOLDEN_PATH)
+
+
+def _assert_matches(goldens, tag, fp):
+    for field, val in fp.items():
+        key = f"{tag}/{field}"
+        assert key in goldens.files, f"golden missing {key}"
+        np.testing.assert_array_equal(
+            val, goldens[key],
+            err_msg=f"{key}: engine-backed wrapper diverged bitwise from "
+                    "the pre-refactor trajectory")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", GRAD_KINDS)
+def test_gradient_trajectory_matches_pre_refactor(kind, backend):
+    fp = fingerprint(run_grad_case(kind, backend), with_grad_norm=True)
+    _assert_matches(_goldens(), f"grad/{kind}/{backend}", fp)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind,grad_mode", STOCH_CASES)
+def test_stochastic_trajectory_matches_pre_refactor(kind, grad_mode, backend):
+    fp = fingerprint(run_stoch_case(kind, grad_mode, backend),
+                     with_grad_norm=True)
+    _assert_matches(_goldens(), f"stoch/{kind}/{grad_mode}/{backend}", fp)
+
+
+def _capture():
+    arrays = {}
+    for kind in GRAD_KINDS:
+        for backend in BACKENDS:
+            fp = fingerprint(run_grad_case(kind, backend),
+                             with_grad_norm=True)
+            arrays.update({f"grad/{kind}/{backend}/{f}": v
+                           for f, v in fp.items()})
+            print(f"captured grad/{kind}/{backend}")
+    for kind, grad_mode in STOCH_CASES:
+        for backend in BACKENDS:
+            fp = fingerprint(run_stoch_case(kind, grad_mode, backend),
+                             with_grad_norm=True)
+            arrays.update({f"stoch/{kind}/{grad_mode}/{backend}/{f}": v
+                           for f, v in fp.items()})
+            print(f"captured stoch/{kind}/{grad_mode}/{backend}")
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    np.savez_compressed(GOLDEN_PATH, **arrays)
+    print(f"wrote {len(arrays)} arrays -> {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    _capture()

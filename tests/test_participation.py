@@ -1,0 +1,238 @@
+"""Participation/staleness scenarios of the round engine (core/engine.py).
+
+Covers the mask semantics (unavailable == masked exactly like a lazy skip:
+clocks grow, no wire bits, qhat and estimator state frozen), the
+deterministic cohort draw shared by the simulated and sharded paths, the
+bounded-delay staleness ring, and the composition with the LAQ skip rule,
+the LASG rules and the dense baselines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CriterionConfig, StrategyConfig, run_gradient_based,
+                        run_stochastic)
+from repro.core.engine import (DelayedParticipation, FullParticipation,
+                               SampledParticipation, make_participation,
+                               participation_mask)
+from repro.core.strategy import aggregate, init_comm_state
+
+# the engine-parity fixtures are the reference problems for engine-level
+# tests — share them instead of growing another copy
+from test_engine_parity import quadratic_problem
+from test_engine_parity import regression_problem as stochastic_problem
+
+CRIT = CriterionConfig(D=10, xi=0.08, t_bar=100)
+LAQ = StrategyConfig(kind="laq", bits=4, criterion=CRIT)
+
+
+# ---------------------------------------------------------------------------
+# The mask function and the model factory.
+# ---------------------------------------------------------------------------
+
+def test_mask_modes_and_determinism():
+    cfg = LAQ._replace(participation="bernoulli", participation_p=0.5)
+    m1 = participation_mask(cfg, 7, 10)
+    m2 = participation_mask(cfg, 7, 10)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    assert m1.shape == (10,) and m1.dtype == jnp.bool_
+    # different rounds draw different cohorts (overwhelmingly)
+    draws = np.stack([np.asarray(participation_mask(cfg, k, 10))
+                      for k in range(50)])
+    assert 0.3 < draws.mean() < 0.7          # p=0.5 frequency sanity
+    assert len({tuple(d) for d in draws}) > 10
+
+    # full / delay never mask
+    assert participation_mask(LAQ, 0, 10) is None
+    assert participation_mask(LAQ._replace(participation="delay",
+                                           max_delay=4), 0, 10) is None
+
+
+def test_fixed_k_mask_exact_cohort_size():
+    cfg = LAQ._replace(participation="fixed_k", participation_p=0.3)
+    for k in range(20):
+        m = np.asarray(participation_mask(cfg, k, 10))
+        assert m.sum() == 3, (k, m)
+
+
+def test_mask_seed_independent_of_batch_stream():
+    a = participation_mask(LAQ._replace(participation="bernoulli",
+                                        participation_p=0.5,
+                                        participation_seed=0), 3, 10)
+    b = participation_mask(LAQ._replace(participation="bernoulli",
+                                        participation_p=0.5,
+                                        participation_seed=1), 3, 10)
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_factory_normalizes_degenerate_knobs():
+    assert isinstance(make_participation(LAQ, 10), FullParticipation)
+    # delay with no delay, sampling with p>=1 == full participation
+    assert isinstance(make_participation(
+        LAQ._replace(participation="delay", max_delay=0), 10),
+        FullParticipation)
+    assert isinstance(make_participation(
+        LAQ._replace(participation="bernoulli", participation_p=1.0), 10),
+        FullParticipation)
+    assert isinstance(make_participation(
+        LAQ._replace(participation="fixed_k", participation_p=1.0), 10),
+        FullParticipation)
+    assert isinstance(make_participation(
+        LAQ._replace(participation="bernoulli", participation_p=0.5), 10),
+        SampledParticipation)
+    assert isinstance(make_participation(
+        LAQ._replace(participation="delay", max_delay=3), 10),
+        DelayedParticipation)
+    with pytest.raises(AssertionError):
+        make_participation(LAQ._replace(participation="nope"), 10)
+
+
+def test_delay_ring_serves_correct_iterates():
+    part = DelayedParticipation(max_delay=2, n_workers=5)
+    np.testing.assert_array_equal(np.asarray(part.delays), [0, 1, 2, 0, 1])
+    hist = part.init({"x": jnp.zeros(())})
+    # push iterates 1., 2., 3.: at round k worker m must see theta^{k-d_m},
+    # clamped to theta^0 = 0 before enough history exists
+    for k, expect in [(1.0, [1.0, 0.0, 0.0, 1.0, 0.0]),
+                      (2.0, [2.0, 1.0, 0.0, 2.0, 1.0]),
+                      (3.0, [3.0, 2.0, 1.0, 3.0, 2.0])]:
+        avail, thetas, hist = part.begin_round(hist, 0, {"x": jnp.full((), k)})
+        assert avail is None
+        np.testing.assert_array_equal(np.asarray(thetas["x"]), expect)
+
+
+# ---------------------------------------------------------------------------
+# Masking semantics inside the state machine.
+# ---------------------------------------------------------------------------
+
+def test_unavailable_worker_masked_like_lazy_skip():
+    """A masked worker contributes nothing to the aggregate or the bit
+    accounting; its clock grows and its qhat / eps / anchor state freeze —
+    exactly the lazy-skip footprint."""
+    loss_fn, p0, data = quadratic_problem(M=4)
+    grads = jax.vmap(lambda d: jax.grad(loss_fn)(p0, d))(data)
+    cfg = LAQ
+    st = init_comm_state(p0, 4, cfg)
+    avail = jnp.array([True, False, True, False])
+    agg, st1, metrics = aggregate(st, grads, 0.3, cfg, avail=avail)
+    # bootstrap round: every AVAILABLE worker uploads (clocks start at
+    # t_bar), the masked ones cannot
+    assert int(metrics.uploads) == 2
+    np.testing.assert_array_equal(np.asarray(st1.clocks),
+                                  [0, CRIT.t_bar + 1, 0, CRIT.t_bar + 1])
+    assert float(jnp.sum(st1.bits_spent[jnp.array([1, 3])])) == 0.0
+    for leaf in jax.tree.leaves(st1.qhat):
+        np.testing.assert_array_equal(np.asarray(leaf[1]),
+                                      np.zeros_like(leaf[1]))
+    # the overdue workers upload at their next available round
+    agg, st2, metrics2 = aggregate(st1, grads, 0.3, cfg,
+                                   avail=jnp.array([False, True, False, True]))
+    assert int(metrics2.uploads) == 2
+    np.testing.assert_array_equal(np.asarray(st2.clocks), [1, 0, 1, 0])
+
+
+def test_full_participation_knobs_are_bitwise_noop():
+    """participation='bernoulli' with p=1 (or delay with max_delay=0) must
+    reproduce the default-config trajectory bitwise — the factory routes
+    the degenerate knobs to FullParticipation."""
+    loss_fn, p0, data = quadratic_problem()
+    base = run_gradient_based(loss_fn, p0, data, LAQ, steps=40, alpha=0.3)
+    for cfg in (LAQ._replace(participation="bernoulli", participation_p=1.0),
+                LAQ._replace(participation="delay", max_delay=0)):
+        r = run_gradient_based(loss_fn, p0, data, cfg, steps=40, alpha=0.3)
+        np.testing.assert_array_equal(np.asarray(base.loss),
+                                      np.asarray(r.loss))
+        np.testing.assert_array_equal(np.asarray(base.cum_bits),
+                                      np.asarray(r.cum_bits))
+        np.testing.assert_array_equal(np.asarray(base.params["x"]),
+                                      np.asarray(r.params["x"]))
+
+
+def test_dense_methods_upload_exactly_the_cohort():
+    """QGD never skips, so under sampling its per-round uploads equal the
+    cohort size exactly — the sharpest accounting check."""
+    loss_fn, p0, data = quadratic_problem()
+    cfg = LAQ._replace(kind="qgd", participation="bernoulli",
+                       participation_p=0.5)
+    steps = 60
+    r = run_gradient_based(loss_fn, p0, data, cfg, steps=steps, alpha=0.3)
+    per_round = np.diff(np.asarray(r.cum_uploads), prepend=0)
+    cohorts = np.array([int(participation_mask(cfg, k, 10).sum())
+                        for k in range(steps)])
+    np.testing.assert_array_equal(per_round, cohorts)
+
+
+def test_sampled_laq_converges_with_fewer_uploads():
+    loss_fn, p0, data = quadratic_problem()
+    full = run_gradient_based(loss_fn, p0, data, LAQ, steps=400, alpha=0.3)
+    half = run_gradient_based(
+        loss_fn, p0, data,
+        LAQ._replace(participation="bernoulli", participation_p=0.5),
+        steps=400, alpha=0.3)
+    assert float(half.loss[-1]) < 1.02 * float(full.loss[-1])
+    assert int(half.cum_uploads[-1]) <= int(full.cum_uploads[-1])
+    assert float(half.grad_norm_sq[-1]) < 1e-4
+
+
+def test_delayed_laq_converges():
+    loss_fn, p0, data = quadratic_problem()
+    r = run_gradient_based(
+        loss_fn, p0, data, LAQ._replace(participation="delay", max_delay=4),
+        steps=400, alpha=0.3)
+    full = run_gradient_based(loss_fn, p0, data, LAQ, steps=400, alpha=0.3)
+    assert float(r.loss[-1]) < 1.05 * float(full.loss[-1])
+    assert float(r.grad_norm_sq[-1]) < 1e-3
+    assert np.isfinite(np.asarray(r.loss)).all()
+
+
+@pytest.mark.parametrize("kind", ["slaq", "slaq_wk", "slaq_wk2", "slaq_ps"])
+def test_stochastic_rules_compose_with_sampling(kind):
+    """Every LASG rule runs under client sampling: the estimator state of
+    masked workers is held, the run stays finite and learns."""
+    loss_fn, p0, data = stochastic_problem()
+    cfg = StrategyConfig(kind="laq", bits=4,
+                         criterion=CriterionConfig(D=10, xi=0.08, t_bar=20),
+                         participation="bernoulli", participation_p=0.6)
+    r = run_stochastic(loss_fn, p0, data, kind, steps=120, alpha=0.3,
+                       batch=4, bits=4, seed=2, laq_cfg=cfg)
+    assert np.isfinite(np.asarray(r.loss)).all()
+    assert float(r.loss[-1]) < 0.6 * float(r.loss[0])
+    # sampling can only remove upload opportunities
+    dense = 120 * 6
+    assert int(r.cum_uploads[-1]) < dense
+
+
+def test_baselines_compose_with_sampling():
+    """sgd/qsgd under sampling upload exactly the cohort each round and
+    scale their bits accordingly."""
+    loss_fn, p0, data = stochastic_problem()
+    cfg = StrategyConfig(participation="bernoulli", participation_p=0.5,
+                         participation_seed=4)
+    steps = 80
+    r_full = run_stochastic(loss_fn, p0, data, "qsgd", steps=steps,
+                            alpha=0.05, batch=4, bits=4, seed=2)
+    r_half = run_stochastic(loss_fn, p0, data, "qsgd", steps=steps,
+                            alpha=0.05, batch=4, bits=4, seed=2, laq_cfg=cfg)
+    cohorts = np.array([int(participation_mask(cfg, k, 6).sum())
+                        for k in range(steps)])
+    per_round = np.diff(np.asarray(r_half.cum_uploads), prepend=0)
+    np.testing.assert_array_equal(per_round, cohorts)
+    ratio = float(r_half.cum_bits[-1]) / float(r_full.cum_bits[-1])
+    assert abs(ratio - cohorts.sum() / (steps * 6)) < 1e-6
+    assert np.isfinite(np.asarray(r_half.loss)).all()
+
+
+def test_svrg_and_delay_compose():
+    """Variance-reduced gradients under bounded staleness: the exotic
+    corner (anchor correction evaluated at stale per-worker iterates)
+    stays finite and learns."""
+    loss_fn, p0, data = stochastic_problem()
+    cfg = StrategyConfig(kind="laq", bits=4,
+                         criterion=CriterionConfig(D=10, xi=0.08, t_bar=20),
+                         grad_mode="svrg", svrg_period=7,
+                         participation="delay", max_delay=3)
+    r = run_stochastic(loss_fn, p0, data, "slaq", steps=120, alpha=0.3,
+                       batch=4, bits=4, seed=2, laq_cfg=cfg)
+    assert np.isfinite(np.asarray(r.loss)).all()
+    assert float(r.loss[-1]) < 0.6 * float(r.loss[0])

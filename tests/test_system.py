@@ -193,6 +193,22 @@ out["vr_theta_last_set"] = float(max(jax.tree.leaves(jax.tree.map(
 out["vr_mu_set"] = float(max(jax.tree.leaves(jax.tree.map(
     lambda l: float(jnp.max(jnp.abs(l))), v1.comm.svrg.mu_anchor))))
 
+# partial participation (PR-5 round engine): the replicated cohort mask is
+# indexed per shard by the worker-index input (axis_index would lower to
+# PartitionId, which the 0.4.x partial-auto partitioner rejects)
+from repro.core.engine import participation_mask
+pp = strategy._replace(participation="bernoulli", participation_p=0.5)
+p2 = fresh(pp)
+jpp = jax.jit(make_train_step(cfg, mesh, pp, opt, lr=1e-2,
+                              worker_axes=wa, wire="float"))
+pp_ups = []
+for _ in range(4):
+    p2, m = jpp(p2, batch)
+    pp_ups.append(int(m.uploads))
+out["pp_uploads"] = pp_ups
+out["pp_cohorts"] = [int(participation_mask(pp, k, 4).sum())
+                     for k in range(4)]
+
 params_s, cache_s, tokens_s = serve_specs(cfg, mesh, batch=8, seq_len=128)
 c = jax.jit(make_decode_step(cfg)).lower(params_s, cache_s, tokens_s).compile()
 ca = c.cost_analysis()
@@ -246,6 +262,11 @@ def test_sharded_integration_subprocess():
     assert np.all(np.isfinite(out["vr_losses"])), out["vr_losses"]
     assert out["vr_theta_last_set"] > 0.0, out
     assert out["vr_mu_set"] > 0.0, out
+    # participation on the mesh: the bootstrap round uploads exactly the
+    # cohort (clocks start at t_bar), later rounds at most the cohort
+    assert out["pp_uploads"][0] == out["pp_cohorts"][0], out
+    assert all(u <= c for u, c in zip(out["pp_uploads"],
+                                      out["pp_cohorts"])), out
     assert out["decode_flops"] > 0
     assert out["pod_losses"][-1] < out["pod_losses"][0], out["pod_losses"]
     assert 0 <= out["pod_uploads"] <= 2
