@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import StrategyConfig, run_gradient_based
 from repro.kernels import dequant_acc, quantize_pack

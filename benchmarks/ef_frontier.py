@@ -1,0 +1,168 @@
+"""Error-feedback frontier: EF-LAQ (top-k sparsify -> sign-magnitude
+quantize -> pack, with damped error memory) vs plain dense LAQ at matched
+bit-widths, on the paper's logistic-regression substrate.
+
+The dense LAQ grid needs b >= 4 on this problem: at b in {1, 2} the
+quantization error of a full-dimension innovation is too coarse for the
+criterion's error slack and the loss plateaus orders of magnitude above the
+dense floor (b=2) or diverges outright (b=1).  EF-LAQ spends the same bit
+budget differently — only the top ``EF_K`` fraction of innovation
+coordinates are sent, on a per-upload sign-magnitude grid fitted to the
+survivors, and the dropped tail is carried in the worker's error memory
+(damped by ``ef_damping``; see docs/compressors.md for why the textbook
+undamped carry diverges on an innovation-reference compressor).  Claims
+checked, all at matched bit-width:
+
+* **EF-topk reaches the dense-b4 loss target at b=2; plain LAQ b=2 never
+  does** (it plateaus ~100x above);
+* **the same at b=1**, where plain LAQ diverges;
+* **bits-to-target at b=2: EF-topk < plain** (finite vs never);
+* **bits-to-target: EF-topk b=2 < plain b=4** — sparsification + error
+  memory beats widening the grid as the fix for coarse quantization
+  (full horizon only; tiny runs record SKIP);
+* structurally, the EF-topk per-upload payload at b=2 is < 1/4 of the
+  dense b=2 payload (64 sidecar bits + k(b + ceil(log2 p)) vs 32 + p*b).
+
+Emits ``BENCH_ef.json`` at the repo root (CI bench-smoke runs the
+``--tiny`` variant and uploads it as an artifact).
+
+    PYTHONPATH=src python -m benchmarks.ef_frontier [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core import StrategyConfig, run_gradient_based
+from repro.core.quantize import sparse_upload_bits
+from repro.core.strategy import static_k
+
+from .common import PAPER_CRITERION, logreg_init, logreg_loss, make_dataset
+from .lasg_frontier import first_reach
+
+STEPS = 400
+TINY_STEPS = 150          # CI smoke: before the EF runs cross the 1.75x
+TINY_TARGET_MULT = 3.0    # target, so tiny gates on a looser multiplier
+ALPHA = 2.0
+EF_K = 0.025              # top-k keep fraction (2.5% of p=7840 -> k=196)
+TARGET_MULT = 1.75        # target = MULT x the dense-b4 floor
+
+ROOT_JSON = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         os.pardir, "BENCH_ef.json"))
+
+
+def _methods():
+    plain = {f"plain_b{b}":
+             StrategyConfig(kind="laq", bits=b, criterion=PAPER_CRITERION)
+             for b in (4, 2, 1)}
+    ef = {f"ef_topk_b{b}":
+          StrategyConfig(kind="laq", bits=b, criterion=PAPER_CRITERION,
+                         compressor="topk", compressor_k=EF_K,
+                         error_feedback=True)
+          for b in (2, 1)}
+    return {**plain, **ef}
+
+
+def run(out_rows, results, tiny: bool = False):
+    workers, full = make_dataset()
+    loss_fn = logreg_loss(full[0].shape[0])
+    p = full[0].shape[1] * 10
+    steps = TINY_STEPS if tiny else STEPS
+
+    runs = {}
+    for name, cfg in _methods().items():
+        runs[name] = run_gradient_based(loss_fn, logreg_init(), workers, cfg,
+                                        steps=steps, alpha=ALPHA)
+
+    # target relative to the dense fallback the EF pipeline must match: the
+    # floor plain LAQ only reaches by widening the grid to b=4
+    floor = float(runs["plain_b4"].loss[-1])
+    target = (TINY_TARGET_MULT if tiny else TARGET_MULT) * floor
+
+    frontier = {}
+    for name, r in runs.items():
+        at = first_reach(r, target)
+        frontier[name] = dict(
+            final_loss=float(r.loss[-1]),
+            total_uploads=int(r.cum_uploads[-1]),
+            total_bits=float(r.cum_bits[-1]),
+            rounds_to_target=None if at is None else at[0],
+            bits_to_target=None if at is None else at[1])
+        out_rows.append((f"ef_frontier_{name}", float(r.cum_bits[-1]),
+                         f"loss={frontier[name]['final_loss']:.4f};"
+                         f"to_target={at}"))
+
+    k = static_k(EF_K, p)
+    payload = dict(ef_b2=float(sparse_upload_bits(p, k, 2, n_radii=2)),
+                   dense_b2=float(32 + 2 * p))
+
+    def bits_to(name):
+        v = frontier[name]["bits_to_target"]
+        return np.inf if v is None else v
+
+    checks = {
+        "EF-topk b=2 reaches the dense-b4 target; plain b=2 plateaus":
+            frontier["ef_topk_b2"]["bits_to_target"] is not None
+            and frontier["plain_b2"]["bits_to_target"] is None,
+        "EF-topk b=1 reaches it; plain b=1 diverges":
+            frontier["ef_topk_b1"]["bits_to_target"] is not None
+            and frontier["plain_b1"]["bits_to_target"] is None,
+        "bits-to-target at b=2: EF-topk < plain":
+            bits_to("ef_topk_b2") < bits_to("plain_b2"),
+        # the strongest form — EF at 2 bits beats even the dense-b4
+        # fallback's bits-to-target.  The margin needs the full horizon, so
+        # tiny records None (SKIP) rather than gating on a truncated run.
+        "bits-to-target: EF-topk b=2 < plain b=4 (dense fallback)":
+            None if tiny else bits_to("ef_topk_b2") < bits_to("plain_b4"),
+        "per-upload payload: EF-topk b=2 < 1/4 dense b=2":
+            payload["ef_b2"] < 0.25 * payload["dense_b2"],
+    }
+    results["ef_frontier"] = dict(target_loss=target, dense_floor=floor,
+                                  steps=steps, ef_k=EF_K,
+                                  per_upload_bits=payload, **frontier)
+    results["ef_frontier/claims"] = checks
+
+    with open(ROOT_JSON, "w") as f:
+        json.dump({"tiny": tiny, "steps": steps, "target_loss": target,
+                   "dense_floor": floor,
+                   "rows": [dict(name=n, **row)
+                            for n, row in frontier.items()],
+                   "checks": checks}, f, indent=1)
+    return checks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer rounds, looser target")
+    args = ap.parse_args()
+    out_rows, results = [], {}
+    checks = run(out_rows, results, tiny=args.tiny)
+    f = results["ef_frontier"]
+    print(f"target loss = {f['target_loss']:.4f} "
+          f"({TINY_TARGET_MULT if args.tiny else TARGET_MULT}x dense-b4 "
+          f"floor {f['dense_floor']:.4f}, steps={f['steps']}, "
+          f"k={EF_K:.1%} of p)")
+    print(f"{'method':12s} {'final loss':>11s} {'uploads':>8s} "
+          f"{'bits':>11s} {'rounds@tgt':>11s} {'bits@tgt':>11s}")
+    for name in ("plain_b4", "plain_b2", "plain_b1", "ef_topk_b2",
+                 "ef_topk_b1"):
+        row = f[name]
+        rt, bt = row["rounds_to_target"], row["bits_to_target"]
+        print(f"{name:12s} {row['final_loss']:11.5f} "
+              f"{row['total_uploads']:8d} {row['total_bits']:11.3e} "
+              f"{(str(rt) if rt is not None else 'never'):>11s} "
+              f"{(f'{bt:.3e}' if bt is not None else 'never'):>11s}")
+    ok = True
+    for kk, v in checks.items():
+        print(f"[{'SKIP' if v is None else 'PASS' if v else 'FAIL'}] {kk}")
+        ok &= v is None or bool(v)
+    print(f"-> {ROOT_JSON}")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

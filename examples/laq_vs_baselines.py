@@ -11,7 +11,6 @@ sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (CriterionConfig, StrategyConfig, run_gradient_based,
                         run_stochastic)

@@ -19,7 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, smoke_config
 from repro.launch.serve import make_decode_step, make_prefill_step
-from repro.models import cache_pspecs, init_cache, init_params, param_pspecs
+from repro.models import cache_pspecs, init_params, param_pspecs
 
 
 def main():

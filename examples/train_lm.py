@@ -22,7 +22,6 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import save_checkpoint

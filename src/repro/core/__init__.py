@@ -20,6 +20,11 @@ Public API:
                                             (constant / inv_t / halving)
     WireBackend / get_backend            -- pluggable quantize pipeline
                                             (reference jnp vs fused 2-pass)
+    CompressorPipeline / make_compressor -- composable sparsify->quantize->
+                                            pack stages (top-k / rand-k;
+                                            StrategyConfig.compressor) with
+                                            optional error feedback
+                                            (ErrorState; EF-LAQ)
     RoundEngine / GradientSource stages  -- the unified round engine
                                             (core/engine.py): FullBatchSource
                                             / MinibatchSource gradients,
@@ -45,9 +50,14 @@ from .quantize import (dense_bits, dequantize_innovation, pack_codes,
 from .strategy import (KINDS, CommState, RoundMetrics, StrategyConfig,
                        SvrgState, WorkerOut, aggregate, finalize_step,
                        init_comm_state, init_svrg_state, worker_update)
-from .wire import (FusedWire, ReferenceWire, WireBackend, WireRoundtrip,
-                   get_backend)
-from .compressors import qsgd_compress, ssgd_compress
+from .wire import (FusedWire, ReferenceWire, SparseRoundtrip, WireBackend,
+                   WireRoundtrip, get_backend, sparse_roundtrip)
+from .compressors import (COMPRESSORS, CodePacker, Compressor,
+                          CompressorPipeline, ErrorState, RandKSparsifier,
+                          TopKSparsifier, UniformQuantizer, compressor_keys,
+                          init_error_state, make_compressor, qsgd_compress,
+                          reference_sparse_quantize, select_support,
+                          ssgd_compress, static_k)
 from .engine import (PARTICIPATION, DelayedParticipation, FullBatchSource,
                      FullParticipation, MinibatchSource, RoundEngine,
                      RunResult, SampledParticipation, apply_svrg_exact,

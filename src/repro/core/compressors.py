@@ -1,30 +1,64 @@
-"""Unbiased-compression baselines used in the paper's Table 3.
+"""Composable compressor pipeline (EF-LAQ) + unbiased dense baselines.
 
-* QSGD (Alistarh et al., 2017, paper ref [2]): random b-bit quantization
-  q(v)_i = ||v||_2 * sign(v_i) * xi_i(v, s),  s = 2^b - 1 levels, unbiased.
-* SSGD (Wangni et al., 2018, paper ref [30]): unbiased magnitude-proportional
-  random sparsification: coordinate i kept with prob p_i ~ |v_i|, rescaled by
-  1/p_i; expected density is ``density``.
+The LAQ quantizer (paper eq. 5-6) compresses the gradient *innovation*
+``g - qhat`` with a fixed b-bit uniform grid.  This module generalizes that
+single stage into a pipeline of :class:`Compressor` stages —
 
-Both are applied per-worker on the stochastic gradient and upload every
-round by construction — they are the *dense-communication* baselines.  The
-lazy stochastic methods (SLAQ with the eq.-7a, LASG-WK or LASG-PS skip rule;
-see :mod:`repro.core.lazy_rules` and ``StrategyConfig.lazy_rule``) are the
-counterpoint: quantized innovations plus skipped rounds.
+    sparsify (top-k / rand-k)  ->  quantize (b-bit grid)  ->  pack (bytes)
+
+— selected via ``StrategyConfig.compressor``, plus the **error-feedback**
+memory that makes the aggressive regimes work: the pre-compression residual
+``e_m = g_eff - Q(g_eff)`` is carried in ``CommState.error`` (an
+:class:`ErrorState`, ``None``-gated exactly like ``LazyState`` /
+``SvrgState``) and added back before the next compress,
+
+    g_eff^k = g_m^k + e_m^{k-1},        e_m^k = g_eff^k - q_new^k,
+
+committed only on upload (frozen over lazy skips / unavailable rounds, like
+``qhat``).  Error compensation provably recovers convergence for biased
+contractive compressors (Deng et al., arXiv:2112.04088) — the regime the
+``benchmarks/ef_frontier.py`` headline measures at b in {1, 2}.
+
+Stage contract (documented normatively in ``docs/compressors.md``):
+
+* ``init_state(template, n_workers)`` — per-worker carried state, or
+  ``None`` for stateless stages (all the wire stages are stateless; the
+  error memory is pipeline-level state, owned by ``CommState.error``);
+* ``compress(x, ctx)``  — forward one stage; reads/writes the shared
+  ``ctx`` dict (keys: ``p``, ``idx``, ``R``, ``key``);
+* ``decompress(y, ctx)`` — exact inverse of the *representation* (the
+  value loss happened in ``compress``).
+
+The pipeline runs under ``vmap``/``scan``/``jit``: ``k`` is static, all
+shapes fixed.  The quantize stage's elementwise math is routed through the
+wire backend (``core/wire.py``) so the reference and fused lowerings stay
+bit-identical; :func:`repro.core.wire.sparse_roundtrip` is the integration
+point ``worker_update`` uses.
+
+The unbiased dense baselines (QSGD, paper ref [2]; SSGD, paper ref [30])
+remain at the bottom — they upload every round by construction and are the
+Table-3 counterpoint to the lazy pipeline.
 """
 from __future__ import annotations
 
 import math
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .quantize import pack_codes, unpack_codes
+
 Pytree = object
+
+COMPRESSORS = ("none", "topk", "randk")
 
 
 def _flat(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    flat = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves]
+        or [jnp.zeros((0,), jnp.float32)])
     shapes = [l.shape for l in leaves]
     sizes = [l.size for l in leaves]
     return flat, (treedef, shapes, sizes)
@@ -39,8 +73,296 @@ def _unflat(flat, meta):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def static_k(k_frac: float, p: int) -> int:
+    """Static survivor count for a keep-fraction: ``round(k_frac * p)``
+    clipped to [0, p].  Static so the sparse payload has a fixed shape
+    under jit (k=0 and k=p are legal degenerate pipelines — tested)."""
+    assert 0.0 <= k_frac <= 1.0, k_frac
+    return min(p, max(0, int(round(k_frac * p))))
+
+
+def compressor_keys(seed: int, step, n_workers: int):
+    """[W] per-worker rand-k selection keys for round ``step``.
+
+    Functionally derived from ``(seed, step, worker)`` by ``fold_in`` — no
+    carried split chain — so the simulated engine and every shard of the
+    sharded step draw the SAME support (each indexes its own slot), and the
+    stream is independent of the batch / participation RNG.
+    """
+    ks = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.vmap(lambda m: jax.random.fold_in(ks, m))(
+        jnp.arange(n_workers))
+
+
+# ---------------------------------------------------------------------------
+# Stage implementations.
+# ---------------------------------------------------------------------------
+
+class Compressor:
+    """One pipeline stage: ``init_state`` / ``compress`` / ``decompress``."""
+
+    name = "?"
+
+    def init_state(self, template: Pytree, n_workers: int):
+        """Per-worker carried state ([W, ...] leaves) or None (stateless)."""
+        return None
+
+    def compress(self, x, ctx: dict):
+        raise NotImplementedError
+
+    def decompress(self, y, ctx: dict):
+        raise NotImplementedError
+
+
+class SparseSelection(NamedTuple):
+    """A sparsifier's output: ``idx`` sorted ascending (the canonical wire
+    order — both backends emit identical index payloads), ``vals`` the
+    surviving coordinates in that order."""
+    idx: jax.Array          # int32 [k]
+    vals: jax.Array         # f32 [k]
+
+
+def select_support(mode: str, flat: jax.Array, k: int, key=None):
+    """Support selection shared by both sparsifier stages and both wire
+    backends: ``topk`` keeps the k largest-|.| coordinates, ``randk`` keeps
+    k uniform-without-replacement coordinates (the k largest of p iid
+    uniform scores — ties have measure zero).  Indices are sorted ascending
+    so the wire payload is canonical regardless of top_k's internal order.
+    """
+    p = flat.shape[0]
+    if k <= 0:
+        return SparseSelection(jnp.zeros((0,), jnp.int32),
+                               jnp.zeros((0,), jnp.float32))
+    if k >= p:
+        idx = jnp.arange(p, dtype=jnp.int32)
+        return SparseSelection(idx, flat)
+    if mode == "topk":
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    elif mode == "randk":
+        assert key is not None, "randk needs a selection key"
+        _, idx = jax.lax.top_k(jax.random.uniform(key, (p,)), k)
+    else:
+        raise ValueError(f"unknown sparsifier {mode!r}; "
+                         f"have {COMPRESSORS[1:]}")
+    idx = jnp.sort(idx).astype(jnp.int32)
+    return SparseSelection(idx, flat[idx])
+
+
+def scatter_selection(sel: SparseSelection, vals, p: int):
+    """Dense flat vector with ``vals`` at ``sel.idx`` and zeros elsewhere
+    (the receiver's view of a sparse payload)."""
+    return jnp.zeros((p,), jnp.float32).at[sel.idx].set(vals)
+
+
+class TopKSparsifier(Compressor):
+    """Keep the k largest-magnitude coordinates (biased, contractive)."""
+
+    name = "topk"
+
+    def __init__(self, k: int):
+        self.k = int(k)
+
+    def compress(self, flat, ctx):
+        ctx["p"] = flat.shape[0]
+        sel = select_support(self.name, flat, self.k, ctx.get("key"))
+        ctx["idx"] = sel.idx
+        return sel
+
+    def decompress(self, sel: SparseSelection, ctx):
+        return scatter_selection(sel, sel.vals, ctx["p"])
+
+
+class RandKSparsifier(TopKSparsifier):
+    """Keep k uniformly random coordinates.  Values ship *unscaled* (the
+    1/prob rescale of unbiased rand-k would blow up the variance at small
+    k); the bias is exactly what the error memory compensates."""
+
+    name = "randk"
+
+
+class UniformQuantizer(Compressor):
+    """Sign-magnitude b-bit grid on the surviving values: one sign bit plus
+    ``b - 1`` magnitude bits uniform on ``[lo, hi] = [min |v|, max |v|]``
+    (b = 1 collapses to ``lo = hi = mean |v|`` — the L2-optimal scaled-sign
+    code).  NOT the dense wire's zero-less eq. 5-6 grid: that grid's
+    smallest representable magnitude is ``R/(2^b - 1)`` AWAY from small
+    survivors, so it injects O(R) error on them and the compressor stops
+    being contractive — exactly the property error feedback needs to
+    converge (the EF recursion amplifies non-contracted error; see
+    docs/compressors.md).  Sign-magnitude on the survivor range is
+    contractive by construction: ``sum (|v| - mean|v|)^2 < sum v^2`` at
+    b = 1, and per-coordinate error <= step/2 on [lo, hi] above.
+
+    The elementwise map is pluggable so the fused wire backend can
+    substitute its kernel lowering (``quantize_fn(vals, lo, hi, bits) ->
+    (codes, deq)``); the default is the reference jnp path.
+    """
+
+    name = "quantize"
+
+    def __init__(self, bits: int, quantize_fn=None):
+        self.bits = int(bits)
+        self.quantize_fn = quantize_fn or reference_sparse_quantize
+
+    def compress(self, sel: SparseSelection, ctx):
+        lo, hi = sparse_grid(sel.vals, self.bits)
+        codes, deq = self.quantize_fn(sel.vals, lo, hi, self.bits)
+        ctx["lo"], ctx["hi"] = lo, hi
+        ctx["deq"] = deq
+        return SparseSelection(sel.idx, codes)
+
+    def decompress(self, coded: SparseSelection, ctx):
+        d = sparse_dequantize(coded.vals, ctx["lo"], ctx["hi"], self.bits)
+        return SparseSelection(coded.idx, d)
+
+
+class CodePacker(Compressor):
+    """Physical byte layout: codes packed 8/b per byte (midpoint-padded to
+    whole bytes, like the dense wire), indices as int32 — the accounting
+    charges ``ceil(log2 p)`` bits each (``quantize.sparse_upload_bits``);
+    the normative layout is ``docs/compressors.md``."""
+
+    name = "pack"
+
+    def __init__(self, bits: int):
+        self.bits = int(bits)
+
+    def compress(self, coded: SparseSelection, ctx):
+        cpb = 8 // self.bits
+        mid = jnp.uint8((2 ** self.bits) // 2)
+        flat = coded.vals.astype(jnp.uint8)
+        pad = (-flat.shape[0]) % cpb
+        if pad:
+            flat = jnp.concatenate([flat, jnp.full((pad,), mid, jnp.uint8)])
+        return coded.idx, pack_codes(flat, self.bits)
+
+    def decompress(self, payload, ctx):
+        idx, packed = payload
+        codes = unpack_codes(packed, self.bits)[:idx.shape[0]]
+        return SparseSelection(idx, codes)
+
+
+class CompressorPipeline:
+    """Compose stages: ``compress`` runs them forward (returning the final
+    wire object plus the shared ctx), ``decompress`` runs the inverses in
+    reverse.  ``roundtrip`` is the worker-side form: what the receiver
+    reconstructs, with every intermediate exposed."""
+
+    def __init__(self, stages):
+        self.stages = list(stages)
+
+    def init_state(self, template, n_workers):
+        return [s.init_state(template, n_workers) for s in self.stages]
+
+    def compress(self, x, ctx: Optional[dict] = None, key=None):
+        ctx = {} if ctx is None else ctx
+        if key is not None:
+            ctx["key"] = key
+        for s in self.stages:
+            x = s.compress(x, ctx)
+        return x, ctx
+
+    def decompress(self, y, ctx: dict):
+        for s in reversed(self.stages):
+            y = s.decompress(y, ctx)
+        return y
+
+    def roundtrip(self, flat, key=None):
+        """(dense_reconstruction, wire, ctx) for a flat f32 vector."""
+        wire, ctx = self.compress(flat, key=key)
+        return self.decompress(wire, ctx), wire, ctx
+
+
+def make_compressor(mode: str, k: int, bits: int,
+                    quantize_fn=None) -> CompressorPipeline:
+    """The standard EF-LAQ pipeline for ``StrategyConfig.compressor``:
+    sparsify -> quantize -> pack.  ``k`` is the static survivor count
+    (:func:`static_k`); ``quantize_fn`` lets a wire backend substitute its
+    lowering of the grid math."""
+    assert mode in COMPRESSORS[1:], mode
+    sparsifier = (TopKSparsifier if mode == "topk" else RandKSparsifier)(k)
+    return CompressorPipeline([sparsifier,
+                               UniformQuantizer(bits, quantize_fn),
+                               CodePacker(bits)])
+
+
+def sparse_grid(vals, bits: int):
+    """(lo, hi) endpoints of the sign-magnitude grid (f32 scalars, the two
+    wire sidecars).  Shared by both wire backends so the sidecar bytes are
+    identical by construction; only the elementwise code map below has a
+    kernel lowering."""
+    if vals.size == 0:          # k is static, so this is a trace-time branch
+        z = jnp.zeros((), jnp.float32)
+        return z, z
+    a = jnp.abs(vals.astype(jnp.float32))
+    if bits == 1:
+        mu = jnp.mean(a)
+        return mu, mu
+    return jnp.min(a), jnp.max(a)
+
+
+def reference_sparse_quantize(vals, lo, hi, bits: int):
+    """Reference lowering of the quantize-stage code map: ``(codes, deq)``
+    with ``codes = (sign << (b-1)) | mag`` and ``mag`` the nearest of the
+    ``2^(b-1)`` uniform levels on [lo, hi] — the fused backend's kernel
+    must match it bitwise (tests/test_wire_backend.py)."""
+    L = 2 ** (bits - 1) - 1              # magnitude levels above lo
+    a = jnp.abs(vals.astype(jnp.float32))
+    neg = vals < 0
+    step = (hi - lo) / max(L, 1)
+    safe = jnp.where(step > 0, step, 1.0)
+    mag = jnp.clip(jnp.floor((a - lo) / safe + 0.5), 0, L)
+    mag = jnp.where(step > 0, mag, jnp.zeros_like(mag)).astype(jnp.uint8)
+    codes = ((neg.astype(jnp.uint8) << (bits - 1)) | mag).astype(jnp.uint8)
+    deq = jnp.where(neg, -1.0, 1.0) * (lo + mag.astype(jnp.float32) * step)
+    return codes, deq
+
+
+def sparse_dequantize(codes, lo, hi, bits: int):
+    """Receiver-side inverse of the code map (codes uint8 -> f32 values)."""
+    L = 2 ** (bits - 1) - 1
+    mag = (codes & L).astype(jnp.float32)
+    neg = (codes >> (bits - 1)).astype(jnp.float32)
+    step = (hi - lo) / max(L, 1)
+    return (1.0 - 2.0 * neg) * (lo + mag * step)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback memory (EF-LAQ).
+# ---------------------------------------------------------------------------
+
+class ErrorState(NamedTuple):
+    """Per-worker error-feedback residual ``e_m`` (``None`` unless
+    ``StrategyConfig.error_feedback`` — the pytree discipline of
+    ``LazyState`` / ``SvrgState``: the field simply vanishes from the
+    flattened state when the mode is off, so goldens and sharded exchanges
+    are untouched).  Leading worker dim in simulated mode, one slice per
+    shard in sharded mode — exactly like ``qhat``."""
+    residual: Optional[Pytree]
+
+
+def empty_error_state() -> ErrorState:
+    return ErrorState(None)
+
+
+def init_error_state(error_feedback: bool, grad_template: Pytree,
+                     n_workers: int, *, worker_dim: bool = True) -> ErrorState:
+    """Zero residual per worker (round 0 has no compression error yet)."""
+    if not error_feedback:
+        return ErrorState(None)
+    wshape = (n_workers,) if worker_dim else ()
+    return ErrorState(residual=jax.tree.map(
+        lambda l: jnp.zeros(wshape + l.shape, jnp.float32), grad_template))
+
+
+# ---------------------------------------------------------------------------
+# Unbiased dense baselines (paper Table 3).
+# ---------------------------------------------------------------------------
+
 def qsgd_compress(key, grad: Pytree, bits: int):
-    """Returns (compressed_grad, wire_bits). Unbiased: E[out] = grad."""
+    """QSGD (Alistarh et al., 2017, paper ref [2]): random b-bit
+    quantization, unbiased: E[out] = grad.  Returns
+    ``(compressed_grad, wire_bits)``."""
     v, meta = _flat(grad)
     s = 2.0**bits - 1.0
     norm = jnp.linalg.norm(v)
@@ -56,14 +378,16 @@ def qsgd_compress(key, grad: Pytree, bits: int):
 
 
 def ssgd_compress(key, grad: Pytree, density: float):
-    """Unbiased random sparsification with expected density ``density``."""
+    """SSGD (Wangni et al., 2018, paper ref [30]): unbiased magnitude-
+    proportional random sparsification with expected density ``density``."""
     v, meta = _flat(grad)
     p = v.size
     absv = jnp.abs(v)
     denom = jnp.sum(absv)
     # one-shot probabilities, clipped to [_, 1]; rescale keeps E close to k.
     k = density * p
-    probs = jnp.where(denom > 0, jnp.minimum(1.0, k * absv / denom), jnp.zeros_like(v))
+    probs = jnp.where(denom > 0, jnp.minimum(1.0, k * absv / denom),
+                      jnp.zeros_like(v))
     keep = jax.random.uniform(key, v.shape) < probs
     out = jnp.where(keep, v / jnp.maximum(probs, 1e-12), 0.0)
     nnz = jnp.sum(keep.astype(jnp.float32))

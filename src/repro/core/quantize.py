@@ -16,6 +16,8 @@ packing helpers below implement that spec.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -153,14 +155,18 @@ def quantize_roundtrip(grad: Pytree, qhat: Pytree, bits: int,
 
 
 # ---------------------------------------------------------------------------
-# Bit-packing: the physical wire format.  b=2 packs four codes per byte,
-# b=4 two per byte; b=8 is already one byte per code.  Used by the
+# Bit-packing: the physical wire format.  b=1 packs eight codes per byte,
+# b=2 four, b=4 two; b=8 is already one byte per code.  Used by the
 # packed-collective wire mode and by the Pallas kernels
 # (kernels/quant_pack.py mirrors this math).
 # ---------------------------------------------------------------------------
 
+PACKABLE_BITS = (1, 2, 4, 8)
+
+
 def pack_codes(q: jax.Array, bits: int) -> jax.Array:
-    """Pack a flat uint8 array of b-bit codes, 8/b per byte (b in {2,4,8}).
+    """Pack a flat uint8 array of b-bit codes, 8/b per byte (b in
+    {1,2,4,8}).
 
     Code i lands in byte i // (8/b) at bit offset b * (i % (8/b)) — the
     little-end-first layout shared by pack_nibbles and the Pallas kernels.
@@ -170,7 +176,7 @@ def pack_codes(q: jax.Array, bits: int) -> jax.Array:
     shift-and-OR over the (static, tiny) byte-lane axis, instead of 8/b
     strided gathers over the full code vector.
     """
-    assert bits in (2, 4, 8), bits
+    assert bits in PACKABLE_BITS, bits
     cpb = 8 // bits
     if cpb == 1:
         return q.astype(jnp.uint8)
@@ -187,7 +193,7 @@ def unpack_codes(packed: jax.Array, bits: int) -> jax.Array:
     Vectorized: one broadcast shift-and-mask to ``[nbytes, cpb]`` and a
     contiguous reshape back to the flat code vector.
     """
-    assert bits in (2, 4, 8), bits
+    assert bits in PACKABLE_BITS, bits
     cpb = 8 // bits
     if cpb == 1:
         return packed.astype(jnp.uint8)
@@ -222,3 +228,17 @@ def upload_bits(p: int, bits, *, n_radii: int = 1, bit_sidecar: bool = False):
 def dense_bits(p: int) -> int:
     """Uncompressed float32 upload cost (GD / LAG per-round cost)."""
     return 32 * p
+
+
+def index_bits(p: int) -> int:
+    """Bits to address one of ``p`` coordinates: ``ceil(log2 p)``."""
+    return max(1, int(math.ceil(math.log2(max(p, 2)))))
+
+
+def sparse_upload_bits(p: int, k: int, bits, *, n_radii: int = 1):
+    """Wire cost of one sparse upload (the EF-LAQ compressor pipeline):
+    ``32 * n_radii`` sidecar bits for the radius/radii plus, per surviving
+    coordinate, its ``ceil(log2 p)``-bit index and its b-bit code.  ``k``
+    is static configuration (``StrategyConfig.compressor_k``), so no count
+    sidecar is needed — both ends know the payload length."""
+    return 32 * n_radii + k * (bits + index_bits(p))

@@ -32,11 +32,14 @@ import jax.numpy as jnp
 
 from .adaptive import (BitSchedule, EtaSchedule, dequantize_dynamic,
                        quantize_dynamic, select_bits, tau_of_selection)
+from .compressors import (COMPRESSORS, ErrorState, compressor_keys,
+                          empty_error_state, init_error_state, static_k)
 from .criterion import CriterionConfig, push_history, should_skip
 from .lazy_rules import (LAZY_RULES, LasgConfig, LazyState, commit_upload,
                          empty_lazy_state, init_lazy_state, lazy_rule_step)
-from .quantize import dense_bits, tree_size, tree_sq_norm, upload_bits
-from .wire import get_backend
+from .quantize import (dense_bits, sparse_upload_bits, tree_size,
+                       tree_sq_norm, upload_bits)
+from .wire import get_backend, sparse_roundtrip
 
 Pytree = object
 
@@ -90,6 +93,28 @@ class StrategyConfig(NamedTuple):
                                     # computes at theta^{k - (m mod (D+1))}
     participation_seed: int = 0     # seed of the availability stream
                                     # (independent of batch/compressor RNG)
+    compressor: str = "none"        # sparsifying compressor stage
+                                    # (core/compressors.py): "none" dense
+                                    # quantization (the paper); "topk" /
+                                    # "randk" keep k of p innovation
+                                    # coordinates before the b-bit grid —
+                                    # wire cost 64 + k (b + ceil(log2 p))
+    compressor_k: float = 0.25      # kept fraction: k = round(frac * p),
+                                    # static under jit
+    error_feedback: bool = False    # EF-LAQ: carry the compression residual
+                                    # e_m in CommState.error and add it back
+                                    # before the next compress (committed on
+                                    # upload only, frozen over skips)
+    ef_damping: float = 0.5         # injection weight eta on the carried
+                                    # residual: g_eff = g + eta e.  eta = 1
+                                    # (textbook EF) double-counts the
+                                    # innovation reference's implicit error
+                                    # carry — loop gain (1 + eta) rho — and
+                                    # diverges whenever the compressor's
+                                    # contraction rho >= 1/2 (rand-k, 1-bit
+                                    # grids); see docs/compressors.md
+    compressor_seed: int = 0        # seed of the randk support stream
+                                    # (independent of batch / participation)
     # wire mode is a launch-layer concern ("float" psum vs "packed" all_gather);
     # the algorithmic state machine is identical for both.
 
@@ -109,6 +134,10 @@ class StrategyConfig(NamedTuple):
     def adaptive(self) -> bool:
         return (self.quantized and self.bit_schedule is not None
                 and self.bit_schedule.adaptive)
+
+    @property
+    def compressed(self) -> bool:
+        return self.compressor != "none"
 
     @property
     def effective_bits(self) -> int:
@@ -184,6 +213,9 @@ class CommState(NamedTuple):
                             # round observes the first nonzero R_m)
     svrg: SvrgState         # per-worker SVRG anchor (theta_anchor /
                             # mu_anchor; fields None unless grad_mode="svrg")
+    error: ErrorState = ErrorState(None)  # per-worker EF residual e_m
+                            # (core/compressors.py; None unless
+                            # error_feedback — same gating as lazy/svrg)
 
 
 class RoundMetrics(NamedTuple):
@@ -206,6 +238,11 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
         return jnp.zeros(shape, sdtype)
 
     assert cfg.lazy_rule in LAZY_RULES, cfg.lazy_rule
+    assert cfg.compressor in COMPRESSORS, cfg.compressor
+    if cfg.compressed or cfg.error_feedback:
+        assert cfg.quantized and not cfg.adaptive, (
+            "the compressor pipeline / error feedback require a fixed-bit "
+            "quantized kind (qgd / laq)")
     wshape = (n_workers,) if worker_dim else ()
     # clocks start at t_bar when first_round_upload: criterion (7b) then
     # forces a dense first round, bootstrapping qhat / the server aggregate.
@@ -226,6 +263,8 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
         R_anchor=jnp.zeros(wshape, jnp.float32),
         svrg=init_svrg_state(cfg.grad_mode, grad_template, n_workers,
                              worker_dim=worker_dim),
+        error=init_error_state(cfg.error_feedback, grad_template, n_workers,
+                               worker_dim=worker_dim),
     )
 
 
@@ -252,13 +291,15 @@ class WorkerOut(NamedTuple):
                             # fixed path, 32 for dense uploads)
     lazy_new: LazyState     # updated LASG estimator state
     R_anchor_new: jax.Array  # updated scale-free threshold anchor
+    error_new: ErrorState   # updated EF residual (None-gated pass-through
+                            # when error_feedback is off)
 
 
 def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
                   bits_spent_m, theta_hist, alpha, n_workers: int,
                   cfg: StrategyConfig, step=None, lazy_m=None,
                   R_anchor_m=None, params=None, grad_stale_m=None,
-                  avail_m=None):
+                  avail_m=None, error_m=None, ckey_m=None):
     """One worker's bit-width selection + quantize + skip decision.
 
     ``lazy_m`` is this worker's :class:`~repro.core.lazy_rules.LazyState`
@@ -271,14 +312,35 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
     an unreachable worker is masked exactly like a lazy skip — no upload,
     no wire bits, clock grows, ``qhat`` and the estimator state frozen —
     so the ``CommState`` accounting stays correct under client sampling.
-    Returns a :class:`WorkerOut`; ``delta_masked`` is zero if the upload is
-    skipped.
+    ``error_m`` is this worker's :class:`~repro.core.compressors.ErrorState`
+    slice (EF-LAQ: its residual is added back before compressing and
+    re-committed on upload) and ``ckey_m`` its rand-k support key
+    (``compressor_keys``; ignored by topk).  Returns a :class:`WorkerOut`;
+    ``delta_masked`` is zero if the upload is skipped.
     """
     p = tree_size(grad_m)
     if lazy_m is None:
         lazy_m = empty_lazy_state()
     if R_anchor_m is None:
         R_anchor_m = jnp.zeros((), jnp.float32)
+    if error_m is None:
+        error_m = empty_error_state()
+    if cfg.compressed or cfg.error_feedback:
+        assert cfg.quantized and not cfg.adaptive, (
+            "the compressor pipeline / error feedback require a fixed-bit "
+            "quantized kind (qgd / laq)")
+    if cfg.error_feedback:
+        # EF: compress the residual-corrected gradient g_eff = g + eta e.
+        # eta (cfg.ef_damping) tempers the loop gain — the innovation
+        # reference already re-injects untransmitted mass implicitly, so
+        # undamped EF counts it twice (see docs/compressors.md)
+        assert error_m.residual is not None, \
+            "error_feedback needs CommState.error (init_comm_state gates it)"
+        g_eff = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + cfg.ef_damping * e,
+            grad_m, error_m.residual)
+    else:
+        g_eff = grad_m
     # sidecar count is wire-backend-INDEPENDENT by construction: both
     # backends exchange one f32 radius per leaf (per-leaf mode) or one
     # global radius, so bits_m accounting is identical across backends
@@ -306,8 +368,20 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
         innovation_sq = tree_sq_norm(delta)
         bits_if_upload = upload_bits(p, width_m, n_radii=n_sidecars,
                                      bit_sidecar=True)
+    elif cfg.compressed:
+        # sparsify -> quantize -> pack on the (EF-corrected) innovation:
+        # core/wire.py sparse_roundtrip, stages from core/compressors.py
+        srt = sparse_roundtrip(backend, g_eff, qhat_m, cfg.effective_bits,
+                               static_k(cfg.compressor_k, p), cfg.compressor,
+                               key=ckey_m)
+        q_new, delta, R = srt.q_new, srt.delta, srt.R
+        err_sq, innovation_sq = srt.err_sq, srt.innovation_sq
+        bits_if_upload = float(sparse_upload_bits(
+            p, static_k(cfg.compressor_k, p), cfg.effective_bits,
+            n_radii=2))     # two f32 sidecars: the (lo, hi) grid endpoints
+        width_m = jnp.full((), float(cfg.effective_bits), jnp.float32)
     elif cfg.quantized:
-        rt = backend.roundtrip(grad_m, qhat_m, cfg.effective_bits,
+        rt = backend.roundtrip(g_eff, qhat_m, cfg.effective_bits,
                                cfg.per_leaf_radius)
         q_new, delta, R = rt.q_new, rt.delta, rt.R_max
         # the fused backend emits both criterion moments as in-pass partial
@@ -370,8 +444,19 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
     eps_hat_sq_new = jnp.where(uploaded, err_sq, eps_hat_sq_m)
     clock_new = jnp.where(uploaded, 0, clock_m + 1).astype(jnp.int32)
     bits_m = fup * bits_if_upload
+    if cfg.error_feedback:
+        # the residual commits only on upload (a skipped round transmits
+        # nothing, so its compression error never happened): on upload
+        # e_new = g_eff - q_new — the mass this round's compress dropped
+        error_new = ErrorState(residual=jax.tree.map(
+            lambda g, qn, e: jnp.where(uploaded,
+                                       g.astype(jnp.float32) - qn, e),
+            g_eff, q_new, error_m.residual))
+    else:
+        error_new = error_m
     return WorkerOut(delta_masked, qhat_new, eps_hat_sq_new, clock_new,
-                     uploaded, bits_m, R, width_m, lazy_new, R_anchor_new)
+                     uploaded, bits_m, R, width_m, lazy_new, R_anchor_new,
+                     error_new)
 
 
 # ---------------------------------------------------------------------------
@@ -395,28 +480,37 @@ def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig,
     """
     n_workers = state.clocks.shape[0]
     have_stale, have_avail = grads_stale is not None, avail is not None
+    have_ckey = cfg.compressor == "randk"
+    ckeys = (compressor_keys(cfg.compressor_seed, state.step, n_workers)
+             if have_ckey else None)
 
     def upd(*args):
         # theta_hist / params are replicated across workers: closed over,
         # not vmapped
-        (grad_m, qhat_m, eps_m, clock_m, spent_m, lazy_m, anchor_m) = args[:7]
-        rest = list(args[7:])
+        (grad_m, qhat_m, eps_m, clock_m, spent_m, lazy_m, anchor_m,
+         err_m) = args[:8]
+        rest = list(args[8:])
+        ckey_m = rest.pop(0) if have_ckey else None
         grad_stale_m = rest.pop(0) if have_stale else None
         avail_m = rest.pop(0) if have_avail else None
         return worker_update(grad_m, qhat_m, eps_m, clock_m, spent_m,
                              state.theta_hist, alpha, n_workers, cfg,
                              step=state.step, lazy_m=lazy_m,
                              R_anchor_m=anchor_m, params=params,
-                             grad_stale_m=grad_stale_m, avail_m=avail_m)
+                             grad_stale_m=grad_stale_m, avail_m=avail_m,
+                             error_m=err_m, ckey_m=ckey_m)
 
     wargs = (grads, state.qhat, state.eps_hat_sq, state.clocks,
-             state.bits_spent, state.lazy, state.R_anchor)
+             state.bits_spent, state.lazy, state.R_anchor, state.error)
+    if have_ckey:
+        wargs = wargs + (ckeys,)
     if have_stale:
         wargs = wargs + (grads_stale,)   # vmap cannot map a None arg
     if have_avail:
         wargs = wargs + (avail,)
     (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-     bits_m, R_m, width_m, lazy_new, anchor_new) = jax.vmap(upd)(*wargs)
+     bits_m, R_m, width_m, lazy_new, anchor_new,
+     error_new) = jax.vmap(upd)(*wargs)
 
     # Server recursion: agg^k = agg^{k-1} + sum_m deltaQ_m.
     agg = jax.tree.map(lambda a, d: a + jnp.sum(d, axis=0),
@@ -437,7 +531,7 @@ def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig,
         total_bits=state.total_bits + bits,
         total_uploads=state.total_uploads + uploads,
         step=state.step + 1,
-        lazy=lazy_new, R_anchor=anchor_new,
+        lazy=lazy_new, R_anchor=anchor_new, error=error_new,
     )
     return agg, new_state, metrics
 

@@ -43,6 +43,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from .compressors import (_flat, _unflat, reference_sparse_quantize,
+                          scatter_selection, select_support, sparse_grid)
 from .quantize import (innovation, pack_codes, roundtrip_parts, tau,
                        tree_sq_norm)
 
@@ -80,6 +82,15 @@ class WireBackend:
         """Server side: ``(acc +) sum_w keep_w * dequant(packed_w, R_w)``."""
         raise NotImplementedError
 
+    def sparse_quantize(self, vals, lo, hi, bits: int):
+        """Quantize stage of the sparse pipeline on gathered values:
+        ``(codes uint8 [k], deq f32 [k])`` via the sign-magnitude grid on
+        [lo, hi] (core/compressors.py).  Everything around it — support
+        selection, grid moments, scatter, payload packing — is shared code
+        in :func:`sparse_roundtrip`, so backends only differ in this
+        elementwise map and must match it bitwise."""
+        raise NotImplementedError
+
 
 class ReferenceWire(WireBackend):
     """The jnp path of core/quantize.py, verbatim (the tests' ground truth)."""
@@ -114,6 +125,9 @@ class ReferenceWire(WireBackend):
         from repro.kernels.ref import dequant_acc_ref
         return dequant_acc_ref(packed, R.astype(jnp.float32),
                                keep.astype(jnp.float32), bits, n, acc)
+
+    def sparse_quantize(self, vals, lo, hi, bits):
+        return reference_sparse_quantize(vals, lo, hi, bits)
 
 
 def _fused_leaf_jnp(g, qh, R, bits, with_payload):
@@ -204,7 +218,7 @@ class FusedWire(WireBackend):
         return diff, R_tree, R_max
 
     def roundtrip(self, grad, qhat, bits, per_leaf=False, with_payload=False):
-        assert bits in (2, 4, 8), \
+        assert bits in (1, 2, 4, 8), \
             f"fused wire backend covers the packed-width grid, got bits={bits}"
         g_leaves, treedef = jax.tree_util.tree_flatten(grad)
         q_leaves = jax.tree_util.tree_leaves(qhat)
@@ -253,6 +267,18 @@ class FusedWire(WireBackend):
         return dequant_acc_ref(packed, R.astype(jnp.float32),
                                keep.astype(jnp.float32), bits, n, acc)
 
+    def sparse_quantize(self, vals, lo, hi, bits):
+        if vals.size == 0:
+            return (jnp.zeros((0,), jnp.uint8), jnp.zeros((0,), jnp.float32))
+        if self._use_pallas():
+            from repro.kernels import sparse_quantize_pack
+            _, codes, deq = sparse_quantize_pack(vals, lo, hi, bits)
+            return codes, deq
+        # blocked-jnp lowering: the gathered values vector is dense and
+        # flat, so the op-for-op expressions ARE the reference's — wire
+        # content is bit-identical on CPU by construction
+        return reference_sparse_quantize(vals, lo, hi, bits)
+
 
 _BACKENDS = {
     "reference": ReferenceWire(),
@@ -270,6 +296,78 @@ def get_backend(name) -> WireBackend:
     except KeyError:
         raise ValueError(
             f"unknown wire backend {name!r}; have {sorted(_BACKENDS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Sparse wire roundtrip — the EF-LAQ compressor pipeline's integration
+# point (core/compressors.py supplies the stages; worker_update calls
+# this).  Selection, scatter, moments and payload packing are SHARED code;
+# only the quantize stage's elementwise map routes through the backend, so
+# the bit-identity contract of the dense wire extends to the sparse one.
+# ---------------------------------------------------------------------------
+
+class SparseRoundtrip(NamedTuple):
+    """One worker's sparse quantize step (mirrors :class:`WireRoundtrip`
+    plus the sparse payload halves)."""
+    q_new: Pytree           # qhat + delta (dense-shaped)
+    delta: Pytree           # sparse-valued dequantized innovation
+    lo: jax.Array           # magnitude-grid floor sidecar (f32 scalar)
+    R: jax.Array            # magnitude-grid ceiling sidecar (max |survivor|)
+    err_sq: jax.Array       # support-restricted quantization error (see below)
+    innovation_sq: jax.Array  # ||delta||^2 (criterion LHS)
+    idx: jax.Array          # int32 [k] sorted support (the index payload)
+    codes: jax.Array        # uint8 [k] b-bit codes (pre-packing)
+    payload: Optional[jax.Array]  # packed uint8 code bytes (with_payload only)
+
+
+def sparse_roundtrip(backend, grad: Pytree, qhat: Pytree, bits: int, k: int,
+                     mode: str, key=None,
+                     with_payload: bool = False) -> SparseRoundtrip:
+    """Sparsify-then-quantize roundtrip over the flattened innovation.
+
+    ``grad`` is the (EF-corrected) gradient ``g_eff``; the innovation
+    ``d = g_eff - qhat`` is flattened over the pytree, ``k`` coordinates
+    survive (``mode``: "topk" / "randk", ``key`` for randk), the survivors
+    are quantized on the sign-magnitude b-bit grid over ``[lo, hi]``
+    (core/compressors.py — contractive on the survivor range, which the
+    EF recursion requires; the dense wire's zero-less grid is not), and
+    the receiver's dense view is scattered back.  Two f32 sidecars ``(lo,
+    hi)`` — the per-leaf radius bucketing of the dense wire does not apply
+    (the support already concentrates the scale).
+
+    ``err_sq`` is the **support-restricted** quantization error
+    ``sum_{i in S} (d_i - deq_i)^2`` — the criterion's epsilon-hat moment.
+    The dropped tail is deliberately NOT counted: it is the sparsifier's
+    deferred mass (EF's residual re-injects it next round), not wire
+    noise, and folding it into epsilon-hat blows up the 7a threshold's
+    ``3(eps + eps_prev)`` term so far past the innovation that every
+    worker skips forever after its first upload.
+    """
+    backend = get_backend(backend)
+    gflat, meta = _flat(grad)
+    qflat, _ = _flat(qhat)
+    d = gflat - qflat
+    sel = select_support(mode, d, k, key)
+    lo, hi = sparse_grid(sel.vals, bits)
+    codes, deq = backend.sparse_quantize(sel.vals, lo, hi, bits)
+    delta_flat = scatter_selection(sel, deq, d.shape[0])
+    qn_flat = qflat + delta_flat
+    err = sel.vals - deq
+    err_sq = jnp.sum(err * err)
+    inn_sq = jnp.sum(delta_flat * delta_flat)
+    payload = None
+    if with_payload:
+        cpb = 8 // bits
+        mid = jnp.uint8((2 ** bits) // 2)
+        pad = (-codes.shape[0]) % cpb
+        cp = codes
+        if pad:
+            cp = jnp.concatenate([codes, jnp.full((pad,), mid, jnp.uint8)])
+        payload = pack_codes(cp, bits)
+    return SparseRoundtrip(q_new=_unflat(qn_flat, meta),
+                           delta=_unflat(delta_flat, meta),
+                           lo=lo, R=hi, err_sq=err_sq, innovation_sq=inn_sq,
+                           idx=sel.idx, codes=codes, payload=payload)
 
 
 # ---------------------------------------------------------------------------

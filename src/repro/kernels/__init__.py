@@ -1,4 +1,6 @@
 """Pallas TPU kernels for the LAQ wire hot loops (absmax radius reduction;
-fused quantize+pack with moment side-outputs; unpack+dequant+accumulate).
+fused quantize+pack with moment side-outputs; sparse-pipeline quantize+pack
+on gathered survivors; unpack+dequant+accumulate).
 ops.py: jit wrappers; ref.py: pure-jnp oracles."""
-from .ops import absmax, dequant_acc, quantize_pack, quantize_pack_fused
+from .ops import (absmax, dequant_acc, quantize_pack, quantize_pack_fused,
+                  sparse_quantize_pack)

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from .quant_pack import (BLOCK, absmax_pallas, dequant_acc_pallas,
-                         quantize_pack_pallas, quantize_pack_payload_pallas)
+                         quantize_pack_pallas, quantize_pack_payload_pallas,
+                         sparse_quant_pack_pallas)
 
 
 def _on_cpu() -> bool:
@@ -89,6 +90,27 @@ def quantize_pack(grad, qhat, R, bits: int, *, interpret: bool | None = None):
     packed, delta = quantize_pack_payload_pallas(
         g, qh, R.astype(jnp.float32).reshape(1), bits, interpret=interpret)
     return packed, delta[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def sparse_quantize_pack(vals, lo, hi, bits: int, *,
+                         interpret: bool | None = None):
+    """Sparse-pipeline quantize+pack on the gathered survivor values.
+
+    vals f32 [k] (any k, padded to the kernel block here), lo/hi the
+    sign-magnitude grid-endpoint sidecar scalars.  Returns ``(packed uint8
+    [ceil(k/blk)*blk*bits/8], codes uint8 [k], deq f32 [k])`` — codes/deq
+    sliced to the k real survivors; the packed buffer keeps the block pad
+    (the canonical payload is re-packed from the sliced codes by
+    core/wire.py's shared path).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    v, k = _pad_to_block(vals.astype(jnp.float32).reshape(-1))
+    packed, codes, deq = sparse_quant_pack_pallas(
+        v, lo.astype(jnp.float32).reshape(1),
+        hi.astype(jnp.float32).reshape(1), bits, interpret=interpret)
+    return packed, codes[:k], deq[:k]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "n", "interpret"))

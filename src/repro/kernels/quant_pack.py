@@ -62,7 +62,7 @@ def _quant_codes(diff, R, bits):
 def _pack_block(q, bits):
     if bits == 8:
         return q
-    cpb = 8 // bits                          # codes per byte (2 or 4)
+    cpb = 8 // bits                          # codes per byte (2, 4 or 8)
     qs = q.reshape(-1, cpb)
     acc = qs[:, 0]
     for j in range(1, cpb):
@@ -143,7 +143,7 @@ def quantize_pack_pallas(grad, qhat, R, bits: int, n_valid: int, *,
     """
     n = grad.shape[0]
     assert n % BLOCK == 0, n
-    assert bits in (2, 4, 8), bits
+    assert bits in (1, 2, 4, 8), bits
     out_block = BLOCK * bits // 8
     grid = (n // BLOCK,)
     return pl.pallas_call(
@@ -191,7 +191,7 @@ def quantize_pack_payload_pallas(grad, qhat, R, bits: int, *,
     """
     n = grad.shape[0]
     assert n % BLOCK == 0, n
-    assert bits in (2, 4, 8), bits
+    assert bits in (1, 2, 4, 8), bits
     out_block = BLOCK * bits // 8
     grid = (n // BLOCK,)
     return pl.pallas_call(
@@ -212,6 +212,73 @@ def quantize_pack_payload_pallas(grad, qhat, R, bits: int, *,
         ],
         interpret=interpret,
     )(grad, qhat, R)
+
+
+# ---------------------------------------------------------------------------
+# Sparse pipeline: quantize + pack the GATHERED survivor values of the
+# EF-LAQ compressor (core/compressors.py).  The selection/scatter halves
+# are gather-bound and stay in XLA; the elementwise sign-magnitude grid
+# math on the k survivors mirrors core/compressors.py's
+# reference_sparse_quantize op for op, so the sparse wire content matches
+# the reference backend bitwise (core/wire.py sparse_roundtrip contract).
+# Covers the full packed grid b in {1, 2, 4, 8} — 1-bit (pure scaled-sign)
+# is the EF frontier's headline regime.
+# ---------------------------------------------------------------------------
+
+def _sparse_quant_pack_kernel(bits, vals_ref, lo_ref, hi_ref, packed_ref,
+                              codes_ref, deq_ref):
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    v = vals_ref[...]
+    L = 2 ** (bits - 1) - 1              # magnitude levels above lo
+    a = jnp.abs(v)
+    neg = v < 0
+    step = (hi - lo) / max(L, 1)
+    safe = jnp.where(step > 0, step, 1.0)
+    mag = jnp.clip(jnp.floor((a - lo) / safe + 0.5), 0, L)
+    mag = jnp.where(step > 0, mag, jnp.zeros_like(mag)).astype(jnp.uint8)
+    q = ((neg.astype(jnp.uint8) << (bits - 1)) | mag).astype(jnp.uint8)
+    codes_ref[...] = q
+    deq_ref[...] = (jnp.where(neg, -1.0, 1.0)
+                    * (lo + mag.astype(jnp.float32) * step))
+    packed_ref[...] = _pack_block(q, bits)
+
+
+def sparse_quant_pack_pallas(vals, lo, hi, bits: int, *,
+                             interpret: bool = True):
+    """vals: gathered survivor values, flat f32 [n] (n % BLOCK == 0,
+    zero-padded upstream), lo/hi: the grid-endpoint sidecars, f32 [1].
+
+    Returns ``(packed uint8 [n*bits/8], codes uint8 [n], deq f32 [n])``;
+    the caller slices the k real entries off (pad values quantize like any
+    zero and are discarded — the shared payload packing in core/wire.py
+    re-pads canonically).
+    """
+    n = vals.shape[0]
+    assert n % BLOCK == 0, n
+    assert bits in (1, 2, 4, 8), bits
+    out_block = BLOCK * bits // 8
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_sparse_quant_pack_kernel, bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((out_block,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n * bits // 8,), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vals, lo, hi)
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +317,7 @@ def dequant_acc_pallas(packed, R, keep, bits: int, n: int, acc=None, *,
     ``acc`` (optional f32 [n], e.g. the server aggregate) is folded into the
     same pass: out = acc + sum_w delta_w.
     """
-    assert bits in (2, 4, 8), bits
+    assert bits in (1, 2, 4, 8), bits
     W, nbytes = packed.shape
     in_block = BLOCK * bits // 8
     assert nbytes % in_block == 0, (nbytes, in_block)

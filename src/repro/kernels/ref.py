@@ -22,7 +22,7 @@ def quantize_pack_ref(diff: jnp.ndarray, R: jnp.ndarray, bits: int):
     Returns (packed uint8 [n*bits/8], q_new_delta f32 [n]) where
     q_new_delta = dequantize(codes) (the innovation actually applied).
     """
-    assert bits in (2, 4, 8)
+    assert bits in (1, 2, 4, 8)
     t = 1.0 / (2.0 ** bits - 1.0)
     levels = 2 ** bits - 1
     denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
@@ -31,13 +31,14 @@ def quantize_pack_ref(diff: jnp.ndarray, R: jnp.ndarray, bits: int):
     q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q)).astype(jnp.uint8)
     delta = 2.0 * t * R * q.astype(jnp.float32) - R
     delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
-    if bits == 2:
-        packed = (q[0::4] | (q[1::4] << 2) | (q[2::4] << 4)
-                  | (q[3::4] << 6)).astype(jnp.uint8)
-    elif bits == 4:
-        packed = (q[0::2] | (q[1::2] << 4)).astype(jnp.uint8)
-    else:
+    if bits == 8:
         packed = q
+    else:
+        cpb = 8 // bits
+        packed = q[0::cpb]
+        for j in range(1, cpb):
+            packed = packed | (q[j::cpb] << (bits * j))
+        packed = packed.astype(jnp.uint8)
     return packed, delta
 
 
@@ -68,7 +69,7 @@ def dequant_acc_ref(packed: jnp.ndarray, R: jnp.ndarray, keep: jnp.ndarray,
 
     ``acc`` (optional f32 [n]) is the server aggregate folded into the sum.
     """
-    assert bits in (2, 4, 8)
+    assert bits in (1, 2, 4, 8)
     t = 1.0 / (2.0 ** bits - 1.0)
     if bits < 8:
         mask = (1 << bits) - 1

@@ -22,7 +22,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, for_shape, get_config
+from repro.configs import for_shape, get_config
 from repro.core.strategy import StrategyConfig
 from repro.models import n_active_params, n_params
 from repro.models.config import INPUT_SHAPES

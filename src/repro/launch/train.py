@@ -103,6 +103,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.adaptive import (dequantize_dynamic, eta_at, quantize_dynamic,
                                  tau_of_selection, tau_of_width)
+from repro.core.compressors import ErrorState, compressor_keys
 from repro.core.engine import (apply_svrg_streaming, participation_mask,
                                stale_side_grads)
 from repro.core.quantize import (dequantize_innovation, innovation,
@@ -302,6 +303,25 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
     W = n_workers_of(mesh, worker_axes)
     wa = worker_axes if len(worker_axes) > 1 else worker_axes[0]
     assert wire in ("float", "packed")
+    if strategy.compressed or strategy.error_feedback:
+        # the packed wire re-quantizes the raw grads itself (dense per-leaf
+        # codes); the sparse pipeline ships index+code payloads whose exact
+        # byte layout the sharded exchange does not yet implement — the
+        # compressor path rides the float wire with analytic bit accounting
+        # (same documented degradation as the 0.4.x psum-only wire)
+        assert wire == "float", \
+            "compressor / error_feedback strategies require wire='float'"
+        # global support selection flattens the whole gradient pytree; a
+        # reshape of a model-sharded leaf inside partial-auto shard_map
+        # forces a GSPMD regather that trips the 0.4.x spmd_partitioner
+        # (the same physics that pins the reference backend below), and
+        # the manual region cannot express the gather itself — so the
+        # sparse pipeline covers data-parallel meshes only
+        assert mesh.shape["model"] == 1, (
+            "compressor / error_feedback strategies require a pure "
+            "data-parallel mesh (model axis 1): global top-k/rand-k "
+            "support selection flattens the gradient pytree, which the "
+            "0.4.x partial-auto partitioner cannot reshard")
     assert strategy.participation in ("full", "bernoulli", "fixed_k"), (
         "delay participation is simulated-engine-only: the sharded step "
         "would need a replicated params-history ring of max_delay+1 full "
@@ -337,6 +357,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         bits_spent = jnp.squeeze(comm.bits_spent, 0)
         lazy = _squeeze0(comm.lazy)        # LASG estimator state (this shard)
         R_anchor = jnp.squeeze(comm.R_anchor, 0)
+        error = _squeeze0(comm.error)      # EF residual (this shard)
 
         def loss_fn(p, b):
             return lm_loss(p, b, cfg) / W          # sum_m loss_m == global mean
@@ -400,10 +421,19 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             avail = participation_mask(strategy, comm.step,
                                        W)[jnp.squeeze(widx, 0)]
 
+        ckey = None
+        if strategy.compressor == "randk":
+            # this shard's slot of the round's [W] selection keys — the SAME
+            # draw the simulated engine makes (slot from the widx input, not
+            # axis_index; see the participation note above)
+            ckey = compressor_keys(strategy.compressor_seed, comm.step,
+                                   W)[jnp.squeeze(widx, 0)]
+
         wu = worker_update(grads, qhat, eps_hat_sq, clock, bits_spent,
                            comm.theta_hist, lr_k, W, strategy, step=comm.step,
                            lazy_m=lazy, R_anchor_m=R_anchor, params=params,
-                           grad_stale_m=grads_stale, avail_m=avail)
+                           grad_stale_m=grads_stale, avail_m=avail,
+                           error_m=error, ckey_m=ckey)
         (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
          bits_m, width_m) = (wu.delta_masked, wu.qhat_new, wu.eps_hat_sq_new,
                              wu.clock_new, wu.uploaded, wu.bits_m, wu.width_m)
@@ -440,6 +470,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             lazy=_unsqueeze0(wu.lazy_new),
             R_anchor=wu.R_anchor_new[None],
             svrg=svrg_new,
+            error=_unsqueeze0(wu.error_new),
         )
         metrics = StepMetrics(
             loss=jax.lax.psum(loss, wa),
@@ -462,6 +493,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             lazy=jax.tree.map(lambda _: P(wa), comm.lazy),
             R_anchor=P(wa),
             svrg=jax.tree.map(lambda _: P(wa), comm.svrg),
+            error=jax.tree.map(lambda _: P(wa), comm.error),
         )
         sm = compat.shard_map(
             sharded_step, mesh=mesh,
@@ -560,6 +592,13 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         return SvrgState(theta_anchor=tree_specs(sv.theta_anchor),
                          mu_anchor=tree_specs(sv.mu_anchor))
 
+    def error_specs(er):
+        # the EF residual mirrors qhat: param pytree + leading worker dim
+        if er.residual is None:
+            return ErrorState(None)
+        return ErrorState(residual=jax.tree.map(comm_leaf_spec,
+                                                er.residual, pspecs))
+
     comm_s = CommState(
         qhat=jax.tree.map(comm_leaf_spec, comm_abs.qhat, pspecs),
         server_agg=jax.tree.map(lambda l, sp: shard(l, sp),
@@ -574,6 +613,7 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         lazy=lazy_specs(comm_abs.lazy),
         R_anchor=shard(comm_abs.R_anchor, P(wa)),
         svrg=svrg_specs(comm_abs.svrg),
+        error=error_specs(comm_abs.error),
     )
     step_s = shard(jax.ShapeDtypeStruct((), jnp.int32), P())
     return TrainState(params_s, opt_s, comm_s, step_s)

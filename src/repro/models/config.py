@@ -7,7 +7,7 @@ instantiates the exact published numbers and registers them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax.numpy as jnp
 

@@ -284,15 +284,20 @@ def _prefill_unrolled(params, x, positions, cfg: ModelConfig, cache, place_kv):
         if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
             x, _, kv = attn_block_fwd(bp, x, positions, cfg, return_kv=True)
             k, v = place_kv(kv)
-            attn_k.append(k); attn_v.append(v)
+            attn_k.append(k)
+            attn_v.append(v)
         else:
             x, (st, tail) = mamba_block_fwd(bp, x, cfg, return_state=True)
-            states.append(st); tx.append(tail["x"]); tB.append(tail["B"]); tC.append(tail["C"])
+            states.append(st)
+            tx.append(tail["x"])
+            tB.append(tail["B"])
+            tC.append(tail["C"])
             if cfg.arch_type == "hybrid" and (i + 1) % cfg.attn_every == 0:
                 x, _, kv = attn_block_fwd(params["shared_attn"], x, positions,
                                           cfg, return_kv=True)
                 k, v = place_kv(kv)
-                attn_k.append(k); attn_v.append(v)
+                attn_k.append(k)
+                attn_v.append(v)
     if attn_k:
         cache["attn"] = {"k": jnp.stack(attn_k), "v": jnp.stack(attn_v)}
     if states:
@@ -303,7 +308,6 @@ def _prefill_unrolled(params, x, positions, cfg: ModelConfig, cache, place_kv):
 
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     """One-token decode. tokens:[B,1] -> (logits [B,1,V], new cache)."""
-    B = tokens.shape[0]
     pos = cache["pos"]
     x = params["embed"][tokens].astype(cfg.compute_dtype)
     new_cache = dict(cache)
@@ -393,7 +397,8 @@ def _decode_unrolled(params, cache, x, pos, cfg: ModelConfig):
             m = (moe_forward_dense(bp["moe"], h2, cfg)[0] if "moe" in bp
                  else swiglu(h2, **bp["mlp"]))
             x = x + m
-            ks.append(nk); vs.append(nv)
+            ks.append(nk)
+            vs.append(nv)
         else:
             cs = _layer_slice(cache["mamba"], i)
             h, nc = mamba2_decode(bp["mamba"], rms_norm(x, bp["ln"], cfg.norm_eps),
@@ -410,7 +415,8 @@ def _decode_unrolled(params, cache, x, pos, cfg: ModelConfig):
                                              cache["attn"]["v"][j], pos, cfg)
                 x = x + h
                 x = x + swiglu(rms_norm(x, sh["ln2"], cfg.norm_eps), **sh["mlp"])
-                ks.append(nk); vs.append(nv)
+                ks.append(nk)
+                vs.append(nv)
     if ks:
         new_cache["attn"] = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
     if mslices:

@@ -1,0 +1,282 @@
+"""Compressor-pipeline unit tests (core/compressors.py).
+
+The stage contract and its degenerate corners: k=0 and k=p sparsification,
+empty and scalar pytree leaves through the flatten boundary, rand-k key
+determinism, the sign-magnitude grid's contraction property (the EF
+convergence requirement), and the pack stage's exact byte round-trip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressors import (CodePacker, CompressorPipeline,
+                                    ErrorState, RandKSparsifier,
+                                    SparseSelection, TopKSparsifier,
+                                    UniformQuantizer, _flat, _unflat,
+                                    compressor_keys, init_error_state,
+                                    make_compressor, reference_sparse_quantize,
+                                    scatter_selection, select_support,
+                                    sparse_dequantize, sparse_grid, static_k)
+from repro.core.wire import sparse_roundtrip
+
+PACK_BITS = (1, 2, 4, 8)
+
+
+def _vec(p=64, seed=0, scale=2.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (p,)) * scale
+
+
+# ---------------------------------------------------------------------------
+# static_k and support selection.
+# ---------------------------------------------------------------------------
+
+def test_static_k_bounds_and_rounding():
+    assert static_k(0.0, 100) == 0
+    assert static_k(1.0, 100) == 100
+    assert static_k(0.25, 100) == 25
+    assert static_k(0.006, 100) == 1      # round, not floor
+    assert static_k(1.0, 0) == 0
+    with pytest.raises(AssertionError):
+        static_k(1.5, 10)
+
+
+@pytest.mark.parametrize("mode", ["topk", "randk"])
+def test_select_support_k0_and_kp(mode):
+    v = _vec(32)
+    key = jax.random.PRNGKey(7)
+    empty = select_support(mode, v, 0, key)
+    assert empty.idx.shape == (0,) and empty.vals.shape == (0,)
+    # k >= p: identity support in ascending order, values untouched
+    for k in (32, 50):
+        full = select_support(mode, v, k, key)
+        np.testing.assert_array_equal(np.asarray(full.idx), np.arange(32))
+        np.testing.assert_array_equal(np.asarray(full.vals), np.asarray(v))
+
+
+def test_topk_keeps_largest_magnitudes_sorted():
+    v = jnp.array([0.1, -5.0, 0.2, 3.0, -0.3, 4.0])
+    sel = select_support("topk", v, 3)
+    np.testing.assert_array_equal(np.asarray(sel.idx), [1, 3, 5])
+    np.testing.assert_array_equal(np.asarray(sel.vals), [-5.0, 3.0, 4.0])
+
+
+def test_randk_same_key_same_support_different_key_differs():
+    v = _vec(256)
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    a = select_support("randk", v, 16, k1)
+    b = select_support("randk", v, 16, k1)
+    c = select_support("randk", v, 16, k2)
+    np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+    assert not np.array_equal(np.asarray(a.idx), np.asarray(c.idx))
+    # values are the gathered coordinates, unscaled (biased by design)
+    np.testing.assert_array_equal(np.asarray(a.vals),
+                                  np.asarray(v)[np.asarray(a.idx)])
+
+
+def test_compressor_keys_functional_derivation():
+    """fold_in chain: per-(seed, step, worker) keys with no carried state —
+    re-deriving gives identical keys; any coordinate change perturbs them."""
+    a = compressor_keys(0, jnp.int32(5), 4)
+    b = compressor_keys(0, jnp.int32(5), 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a),
+                              np.asarray(compressor_keys(0, jnp.int32(6), 4)))
+    assert not np.array_equal(np.asarray(a),
+                              np.asarray(compressor_keys(1, jnp.int32(5), 4)))
+    # distinct workers draw distinct supports
+    assert len({tuple(np.asarray(x)) for x in a}) == 4
+
+
+# ---------------------------------------------------------------------------
+# Sign-magnitude quantize stage.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", PACK_BITS)
+def test_sparse_quantize_dequantize_inverse(bits):
+    vals = _vec(48, seed=3)
+    lo, hi = sparse_grid(vals, bits)
+    codes, deq = reference_sparse_quantize(vals, lo, hi, bits)
+    np.testing.assert_array_equal(
+        np.asarray(sparse_dequantize(codes, lo, hi, bits)), np.asarray(deq))
+    # per-coordinate error bounded by half a grid step (b>1) / by |v| (b=1)
+    L = max(2 ** (bits - 1) - 1, 1)
+    step = (float(hi) - float(lo)) / L
+    err = np.abs(np.asarray(vals) - np.asarray(deq))
+    if bits > 1:
+        assert err.max() <= step / 2 + 1e-6
+    assert codes.dtype == jnp.uint8 and int(codes.max()) < 2 ** bits
+
+
+def test_sign_magnitude_grid_is_contractive():
+    """The EF convergence requirement: ||v - Q(v)||^2 < ||v||^2, including
+    at b=1 where the grid collapses to the L2-optimal scaled sign (the
+    dense zero-less eq. 5-6 grid does NOT have this property on small
+    survivors — why the sparse wire uses its own grid)."""
+    for bits in PACK_BITS:
+        for seed in range(5):
+            vals = _vec(64, seed=seed)
+            lo, hi = sparse_grid(vals, bits)
+            _, deq = reference_sparse_quantize(vals, lo, hi, bits)
+            rho = float(jnp.sum((vals - deq) ** 2) / jnp.sum(vals ** 2))
+            assert rho < 1.0, (bits, seed, rho)
+
+
+def test_sparse_grid_degenerate_inputs():
+    z = jnp.zeros((), jnp.float32)
+    lo, hi = sparse_grid(jnp.zeros((0,), jnp.float32), 2)
+    assert float(lo) == 0.0 and float(hi) == 0.0
+    # constant-magnitude survivors: step == 0, codes collapse to mag 0
+    vals = jnp.array([0.5, -0.5, 0.5])
+    lo, hi = sparse_grid(vals, 4)
+    assert float(lo) == float(hi) == 0.5
+    codes, deq = reference_sparse_quantize(vals, lo, hi, 4)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(vals), rtol=1e-6)
+    _ = z
+
+
+# ---------------------------------------------------------------------------
+# Pack stage and full pipeline.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", PACK_BITS)
+@pytest.mark.parametrize("k", [0, 5, 8])
+def test_codepacker_roundtrip(bits, k):
+    rng = np.random.default_rng(bits * 10 + k)
+    codes = jnp.asarray(rng.integers(0, 2 ** bits, size=k), jnp.uint8)
+    idx = jnp.asarray(np.sort(rng.choice(64, size=k, replace=False)),
+                      jnp.int32)
+    packer = CodePacker(bits)
+    ctx = {}
+    payload = packer.compress(SparseSelection(idx, codes), ctx)
+    out = packer.decompress(payload, ctx)
+    np.testing.assert_array_equal(np.asarray(out.idx), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(out.vals), np.asarray(codes))
+
+
+@pytest.mark.parametrize("mode", ["topk", "randk"])
+@pytest.mark.parametrize("bits", (1, 2, 4))
+def test_pipeline_roundtrip_shapes_and_support(mode, bits):
+    p, k = 96, 12
+    v = _vec(p, seed=5)
+    pipe = make_compressor(mode, k, bits)
+    key = jax.random.PRNGKey(11)
+    dense, wire, ctx = pipe.roundtrip(v, key=key)
+    idx, packed = wire
+    assert dense.shape == (p,)
+    assert idx.shape == (k,) and packed.dtype == jnp.uint8
+    # reconstruction is supported exactly on idx
+    nz = np.nonzero(np.asarray(dense))[0]
+    assert set(nz).issubset(set(np.asarray(idx).tolist()))
+    # off-support coordinates are exactly zero
+    mask = np.ones(p, bool)
+    mask[np.asarray(idx)] = False
+    assert np.all(np.asarray(dense)[mask] == 0.0)
+
+
+def test_pipeline_k_equals_p_reduces_to_dense_quantize():
+    """k=p: the sparsifier is the identity and the pipeline is just the
+    sign-magnitude quantizer over the full vector."""
+    p, bits = 40, 4
+    v = _vec(p, seed=9)
+    dense, _, _ = make_compressor("topk", p, bits).roundtrip(v)
+    lo, hi = sparse_grid(v, bits)
+    _, deq = reference_sparse_quantize(v, lo, hi, bits)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(deq))
+
+
+def test_pipeline_k0_reconstructs_zeros():
+    v = _vec(24)
+    dense, (idx, packed), _ = make_compressor("topk", 0, 2).roundtrip(v)
+    assert idx.shape == (0,)
+    np.testing.assert_array_equal(np.asarray(dense), np.zeros(24))
+
+
+def test_pipeline_runs_under_jit_and_vmap():
+    p, k, bits = 64, 8, 2
+    pipe = make_compressor("randk", k, bits)
+
+    @jax.jit
+    def rt(v, key):
+        dense, (idx, packed), ctx = pipe.roundtrip(v, key=key)
+        return dense, idx
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    vs = jnp.stack([_vec(p, seed=s) for s in range(3)])
+    dense, idx = jax.vmap(rt)(vs, keys)
+    assert dense.shape == (3, p) and idx.shape == (3, k)
+
+
+# ---------------------------------------------------------------------------
+# Flatten boundary: empty and scalar leaves.
+# ---------------------------------------------------------------------------
+
+def test_flat_unflat_empty_and_scalar_leaves():
+    tree = {"a": jnp.zeros((0,), jnp.float32),
+            "b": jnp.asarray(3.5, jnp.float32),
+            "c": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+    flat, meta = _flat(tree)
+    assert flat.shape == (7,)
+    back = _unflat(flat, meta)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+        assert back[k].shape == tree[k].shape
+
+
+@pytest.mark.parametrize("mode", ["topk", "randk"])
+def test_sparse_roundtrip_empty_and_scalar_leaves(mode):
+    """The worker_update integration point must survive pytrees with empty
+    and scalar leaves (the flatten boundary the sharded path also takes)."""
+    g = {"a": jnp.zeros((0,), jnp.float32),
+         "b": jnp.asarray(1.25, jnp.float32),
+         "w": _vec(37, seed=2)}
+    qh = jax.tree.map(lambda l: 0.5 * l, g)
+    rt = sparse_roundtrip("reference", g, qh, 2, 4, mode,
+                          key=jax.random.PRNGKey(0))
+    for name in ("q_new", "delta"):
+        leaf_tree = getattr(rt, name)
+        assert leaf_tree["a"].shape == (0,)
+        assert leaf_tree["b"].shape == ()
+        assert leaf_tree["w"].shape == (37,)
+    assert rt.idx.shape == (4,) and rt.codes.shape == (4,)
+    assert float(rt.innovation_sq) >= 0.0
+
+
+def test_scatter_selection_round_trips_support():
+    v = _vec(20)
+    sel = select_support("topk", v, 6)
+    dense = scatter_selection(sel, sel.vals, 20)
+    np.testing.assert_array_equal(np.asarray(dense)[np.asarray(sel.idx)],
+                                  np.asarray(sel.vals))
+    assert float(jnp.sum(jnp.abs(dense))) == pytest.approx(
+        float(jnp.sum(jnp.abs(sel.vals))), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback state gating.
+# ---------------------------------------------------------------------------
+
+def test_init_error_state_gating_and_shapes():
+    tmpl = {"w": jnp.ones((3, 4)), "b": jnp.ones((4,))}
+    off = init_error_state(False, tmpl, 5)
+    assert isinstance(off, ErrorState) and off.residual is None
+    assert jax.tree_util.tree_leaves(off) == []
+    on = init_error_state(True, tmpl, 5)
+    assert on.residual["w"].shape == (5, 3, 4)
+    assert on.residual["b"].shape == (5, 4)
+    assert float(jnp.max(jnp.abs(on.residual["w"]))) == 0.0
+    solo = init_error_state(True, tmpl, 5, worker_dim=False)
+    assert solo.residual["w"].shape == (3, 4)
+
+
+def test_pipeline_init_state_stateless_stages():
+    pipe = make_compressor("topk", 4, 2)
+    assert isinstance(pipe, CompressorPipeline)
+    assert pipe.init_state({"w": jnp.ones((2,))}, 3) == [None, None, None]
+    names = [type(s).__name__ for s in pipe.stages]
+    assert names == ["TopKSparsifier", "UniformQuantizer", "CodePacker"]
+    assert isinstance(pipe.stages[0], TopKSparsifier)
+    rpipe = make_compressor("randk", 4, 2)
+    assert isinstance(rpipe.stages[0], RandKSparsifier)
+    assert isinstance(rpipe.stages[1], UniformQuantizer)

@@ -231,3 +231,44 @@ def test_baseline_stream_independent_of_laq_cfg():
                                   np.asarray(r_cfg.loss))
     np.testing.assert_array_equal(np.asarray(r_bare.params["w"]),
                                   np.asarray(r_cfg.params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# (e) EF-LAQ beats plain LAQ at 2 bits (benchmarks/ef_frontier.py headline,
+#     pinned seeded): at b in {1, 2} the dense zero-less grid is too coarse
+#     — plain LAQ plateaus orders of magnitude above the dense-b4 floor —
+#     while the EF pipeline (top-k sparsify -> sign-magnitude quantize,
+#     damped error memory) reaches it, in fewer total bits than the b=4
+#     dense fallback.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", (1, 2))
+def test_ef_laq_beats_plain_at_low_bits(bits):
+    loss_fn, p0, workers = logistic_setup()
+    crit = CriterionConfig(D=10, xi=0.08, t_bar=100)
+    dense4 = StrategyConfig(kind="laq", bits=4, criterion=crit)
+    plain = dense4._replace(bits=bits)
+    ef = plain._replace(compressor="topk", compressor_k=0.025,
+                        error_feedback=True)
+    steps, alpha = 250, 2.0
+
+    r4 = run_gradient_based(loss_fn, p0, workers, dense4, steps=steps,
+                            alpha=alpha)
+    rp = run_gradient_based(loss_fn, p0, workers, plain, steps=steps,
+                            alpha=alpha)
+    re = run_gradient_based(loss_fn, p0, workers, ef, steps=steps,
+                            alpha=alpha)
+    floor = tail_loss(r4)
+
+    # EF reaches the dense-b4 floor (measured 1.27x at b=2, 1.25x at b=1)
+    assert tail_loss(re) <= 1.6 * floor, (tail_loss(re), floor)
+    # ... which plain LAQ at the same width provably does NOT (measured
+    # ~250x at b=2, worse at b=1)
+    assert tail_loss(rp) >= 10.0 * floor, (tail_loss(rp), floor)
+    # and in fewer total wire bits than the dense-b4 fallback (measured
+    # 1.15e6 vs 1.57e6 at b=2)
+    assert float(re.cum_bits[-1]) < float(r4.cum_bits[-1]), \
+        (float(re.cum_bits[-1]), float(r4.cum_bits[-1]))
+    # seeded absolute budget so a laziness regression fails loudly even if
+    # the dense baseline drifts with it
+    assert float(re.cum_bits[-1]) <= 2.0e6, float(re.cum_bits[-1])

@@ -64,7 +64,9 @@ def test_roundtrip_wire_identity():
     for g in grads:
         R = jnp.max(jnp.abs(g - qh))
         pk, dl = quantize_pack(g, qh, R, bits)
-        payloads.append(pk); Rs.append(R); deltas.append(dl)
+        payloads.append(pk)
+        Rs.append(R)
+        deltas.append(dl)
     acc = dequant_acc(jnp.stack(payloads), jnp.stack(Rs),
                       jnp.ones((W,)), bits, n)
     np.testing.assert_allclose(np.asarray(acc),

@@ -165,7 +165,7 @@ def test_ps_estimator_not_poisoned_by_nonzero_init_params():
     theta0 = {"x": jnp.full((20,), 3.0)}          # far from zero
     cfg = StrategyConfig(kind="laq", bits=6, lazy_rule="lasg_ps",
                          criterion=CriterionConfig(D=10, xi=0.08, t_bar=100))
-    from repro.core import init_comm_state, aggregate, finalize_step
+    from repro.core import init_comm_state, aggregate
 
     state = init_comm_state(theta0, M, cfg)
     np.testing.assert_array_equal(

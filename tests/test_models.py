@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, smoke_config
-from repro.models import (decode_step, forward, init_cache, init_params,
+from repro.models import (decode_step, forward, init_params,
                           lm_loss, n_params, prefill)
 from repro.models.attention import chunked_causal_attention
 from repro.models.config import ModelConfig

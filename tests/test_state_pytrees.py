@@ -163,3 +163,72 @@ def test_leaf_count_is_rule_and_mode_determined():
     # svrg adds theta_anchor + mu_anchor regardless of rule
     for rule in LAZY_RULES:
         assert counts[(rule, "svrg")] == counts[(rule, "sgd")] + 2 * tmpl_leaves
+
+
+# ---------------------------------------------------------------------------
+# ErrorState (EF-LAQ error memory) — same None-gating discipline.
+# ---------------------------------------------------------------------------
+
+def cfg_ef(error_feedback, compressor="topk"):
+    return StrategyConfig(kind="laq", bits=2, compressor=compressor,
+                          compressor_k=0.25, error_feedback=error_feedback)
+
+
+@settings(max_examples=20)
+@given(ef=st.booleans(),
+       n_workers=st.integers(min_value=1, max_value=8),
+       d0=st.integers(min_value=1, max_value=5),
+       d1=st.integers(min_value=1, max_value=5))
+def test_error_state_flatten_unflatten_roundtrip(ef, n_workers, d0, d1):
+    from repro.core.compressors import ErrorState
+    state = init_comm_state(template((d0, d1), (d1,)), n_workers, cfg_ef(ef))
+    assert isinstance(state.error, ErrorState)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert_trees_bit_identical(state, rebuilt)
+    mapped = jax.tree.map(lambda x: x, state)
+    assert_trees_bit_identical(state, mapped)
+    if ef:
+        assert state.error.residual["w"].shape == (n_workers, d0, d1)
+        assert float(jnp.max(jnp.abs(state.error.residual["w"]))) == 0.0
+    else:
+        assert state.error.residual is None
+        assert jax.tree_util.tree_leaves(state.error) == []
+
+
+def test_error_state_leaf_count_gating():
+    """EF off adds ZERO leaves to the flattened CommState (goldens and
+    sharded exchanges untouched); EF on adds one residual leaf per param
+    leaf."""
+    tmpl = template((2, 2), (2,))
+    base = len(jax.tree_util.tree_leaves(
+        init_comm_state(tmpl, 3, cfg_for("laq7a", "sgd"))))
+    off = len(jax.tree_util.tree_leaves(
+        init_comm_state(tmpl, 3, cfg_ef(False))))
+    on = len(jax.tree_util.tree_leaves(
+        init_comm_state(tmpl, 3, cfg_ef(True))))
+    assert off == base
+    assert on == base + 2       # tmpl has two leaves {"w", "b"}
+
+
+def test_error_state_mixed_gate_tree_map_fails_loudly():
+    tmpl = template((3, 3), (3,))
+    s_on = init_comm_state(tmpl, 2, cfg_ef(True))
+    s_off = init_comm_state(tmpl, 2, cfg_ef(False))
+    with pytest.raises(ValueError):
+        jax.tree.map(lambda a, b: a, s_on, s_off)
+
+
+@settings(max_examples=10)
+@given(n_workers=st.integers(min_value=1, max_value=5))
+def test_error_state_worker_dim_squeeze_unsqueeze(n_workers):
+    """The sharded per-shard view: squeeze the worker dim off the residual,
+    restore it — bit-identical (launch/train.py's _squeeze0/_unsqueeze0
+    path, which the EF threading rides)."""
+    state = init_comm_state(template((4, 2), (2,)), 1, cfg_ef(True))
+    sub = state.error
+    squeezed = jax.tree.map(lambda x: jnp.squeeze(x, 0), sub)
+    restored = jax.tree.map(lambda s, o: jnp.broadcast_to(s[None], o.shape),
+                            squeezed, sub)
+    assert_trees_bit_identical(sub, restored)
+    _ = n_workers

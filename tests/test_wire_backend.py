@@ -260,3 +260,120 @@ def test_axis_pack_helpers_roundtrip(bits):
         # raw-code shipping path: identity both ways
         np.testing.assert_array_equal(
             np.asarray(pack_codes_along_axis(odd, bits)), np.asarray(odd))
+
+
+# ---------------------------------------------------------------------------
+# Sparse wire (EF-LAQ compressor pipeline) — the bit-identity contract
+# extends to the sparse payload: selection/scatter/moments/packing are
+# shared code, only the quantize stage's elementwise map is per-backend.
+# ---------------------------------------------------------------------------
+
+SPARSE_BITS = (1, 2, 4)
+SPARSE_MODES = ("topk", "randk")
+
+
+@pytest.mark.parametrize("mode", SPARSE_MODES)
+@pytest.mark.parametrize("bits", SPARSE_BITS)
+def test_sparse_roundtrip_bit_identical(mode, bits):
+    from repro.core.wire import sparse_roundtrip
+    g, qh = _tree(), _qhat()
+    key = jax.random.PRNGKey(5)
+    k = 173    # odd, not a multiple of codes-per-byte
+
+    def rt(backend):
+        return jax.jit(lambda g, qh: sparse_roundtrip(
+            get_backend(backend), g, qh, bits, k, mode, key=key,
+            with_payload=True))(g, qh)
+
+    r, f = rt("reference"), rt("fused")
+    np.testing.assert_array_equal(np.asarray(r.idx), np.asarray(f.idx))
+    np.testing.assert_array_equal(np.asarray(r.codes), np.asarray(f.codes))
+    np.testing.assert_array_equal(np.asarray(r.payload), np.asarray(f.payload))
+    assert float(r.lo) == float(f.lo) and float(r.R) == float(f.R)
+    assert _trees_equal(r.delta, f.delta)
+    assert _trees_equal(r.q_new, f.q_new)
+    np.testing.assert_array_equal(np.asarray(r.err_sq), np.asarray(f.err_sq))
+    np.testing.assert_array_equal(np.asarray(r.innovation_sq),
+                                  np.asarray(f.innovation_sq))
+
+
+@pytest.mark.parametrize("bits", SPARSE_BITS)
+def test_sparse_pallas_lowering_matches_reference(bits):
+    """The interpret-mode Pallas sparse kernel (kernels/quant_pack.py)
+    mirrors reference_sparse_quantize op-for-op: codes exact, dequantized
+    values to interpret-mode float accuracy."""
+    from repro.core.compressors import (reference_sparse_quantize,
+                                        sparse_grid)
+    from repro.kernels import sparse_quantize_pack
+    vals = jax.random.normal(jax.random.PRNGKey(2), (397,)) * 1.7
+    lo, hi = sparse_grid(vals, bits)
+    rc, rd = reference_sparse_quantize(vals, lo, hi, bits)
+    _, pc, pd = sparse_quantize_pack(vals, lo, hi, bits, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rc), np.asarray(pc))
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(rd), atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", SPARSE_MODES)
+@pytest.mark.parametrize("ef", [False, True])
+def test_sparse_worker_update_bit_identical(mode, ef):
+    """The compressed worker state machine (masked delta, qhat, eps, bit
+    accounting, and the EF residual commit) matches bitwise across wire
+    backends."""
+    from repro.core.compressors import ErrorState, compressor_keys
+    g, qh = _tree(), _qhat()
+    err = ErrorState(residual=jax.tree.map(
+        lambda l: 0.01 * l, g)) if ef else ErrorState(None)
+    ckey = compressor_keys(0, jnp.int32(3), 4)[1] if mode == "randk" else None
+    theta_hist = jnp.full((10,), 0.3, jnp.float32)
+    crit = CriterionConfig(D=10, xi=0.08, t_bar=100)
+
+    def upd(backend):
+        cfg = StrategyConfig(kind="laq", bits=2, criterion=crit,
+                             wire_backend=backend, compressor=mode,
+                             compressor_k=0.05, error_feedback=ef)
+        return jax.jit(lambda g, qh: worker_update(
+            g, qh, jnp.float32(0.05), jnp.int32(3), jnp.float32(0.0),
+            theta_hist, 0.1, 10, cfg, error_m=err, ckey_m=ckey))(g, qh)
+
+    r, f = upd("reference"), upd("fused")
+    names = ("delta_masked", "qhat_new", "eps_hat_sq", "clock", "uploaded",
+             "bits_m", "R", "width", "lazy", "R_anchor", "error_new")
+    for name, a, b in zip(names, r, f):
+        assert _trees_equal(a, b), f"{name} differs across wire backends"
+
+
+@pytest.mark.parametrize("mode", SPARSE_MODES)
+@pytest.mark.parametrize("bits", (1, 2))
+def test_sparse_trajectory_bit_identical(mode, bits):
+    """A whole simulated EF-LAQ run (compressor pipeline + error memory +
+    skip criterion in the scan loop) reproduces identically on either
+    backend."""
+    key = jax.random.PRNGKey(0)
+    kc, ka = jax.random.split(key)
+    M, p = 8, 24
+    centers = jax.random.normal(kc, (M, p))
+    scales = 0.5 + jax.random.uniform(ka, (M, p))
+
+    def loss_fn(params, data):
+        c, a = data
+        return 0.5 * jnp.sum(a * jnp.square(params["x"] - c)) / M
+
+    p0 = {"x": jnp.zeros((p,))}
+
+    def run(backend):
+        cfg = StrategyConfig(kind="laq", bits=bits,
+                             criterion=CriterionConfig(D=10, xi=0.08,
+                                                       t_bar=100),
+                             wire_backend=backend, compressor=mode,
+                             compressor_k=0.25, error_feedback=True)
+        return run_gradient_based(loss_fn, p0, (centers, scales), cfg,
+                                  steps=100, alpha=0.1)
+
+    rr, rf = run("reference"), run("fused")
+    np.testing.assert_array_equal(np.asarray(rr.loss), np.asarray(rf.loss))
+    np.testing.assert_array_equal(np.asarray(rr.cum_bits),
+                                  np.asarray(rf.cum_bits))
+    np.testing.assert_array_equal(np.asarray(rr.cum_uploads),
+                                  np.asarray(rf.cum_uploads))
+    np.testing.assert_array_equal(np.asarray(rr.params["x"]),
+                                  np.asarray(rf.params["x"]))
