@@ -1,0 +1,278 @@
+"""Fault frontier: LAQ under corrupt, crashed, and diverging workers.
+
+Headline benchmark for the fault subsystem (core/faults.py injection +
+core/defense.py tolerance).  One small multinomial-logistic problem
+(W=6, p=32, with an L2 term so the optimum is interior — on separable
+data a crash-ghost's stale qhat grows the margin for free and the
+"damage" would show up as *lower* loss), one loss target = 1.02x the
+fault-free final loss, and a grid of fault x defense cells:
+
+* **clean / clean_defended** — defense at fault rate 0 is bitwise free:
+  identical loss trace, identical bits (the overhead claim is exact
+  equality, not a tolerance);
+* **inf corruption (10% of payloads)** — undefended the aggregate goes
+  non-finite and the run never reaches target; upload validation rejects
+  the non-finite payloads (they still pay their bits — rejection is a
+  server decision, the transmission happened) and reaches target within
+  1.5x the clean bits-to-target;
+* **nan corruption** — the sneaky one: a NaN gradient zeroes its own
+  innovation (R = max|g - qhat| = NaN makes the R>0 grid guard drop the
+  payload) so the run *stays finite*, but err_sq = NaN poisons the
+  worker's eps-hat ledger and forces dense uploads until the next
+  committed upload overwrites it.  Undefended pays a silent >=10% upload
+  tax; validation (which finite-checks err_sq, not just the payload)
+  keeps the ledger clean;
+* **crash-restart (2%/round)** — a restarted worker loses its CommState
+  replica; naively re-bootstrapping leaves the server holding the dead
+  replica's stale qhat as a permanent ghost bias (final loss >= 1.3x
+  clean), while reconciliation (subtract the stale qhat from the server
+  aggregate at restart) lands on the clean floor;
+* **byzantine scaling (dense QGD)** — a -40x scaled payload is finite
+  and well-shaped, so validation alone cannot see it.  Coordinate-wise
+  trimmed-mean bounds the damage (>=10x lower final loss than plain
+  sum); note robust aggregators break the LAQ recursion invariant
+  (worker commits its full delta to qhat, server commits the trimmed
+  version), so on the *lazy* path the right tool is the norm-gate,
+  which rejects outliers against a per-worker accepted-norm EMA and
+  actually reaches target (docs/robustness.md, "recursion drift");
+* **divergence watchdog** — chunked run with checkpoint/rollback
+  (core/defense.py run_with_watchdog): on the inf-corrupted run it
+  detects the explosion, rolls back, escalates to a validating engine
+  (deterministic fault streams replay identically, so a plain retry
+  would hit the same fault), and still converges.
+
+Emits ``BENCH_faults.json`` at the repo root (CI bench-smoke runs the
+``--tiny`` variant and uploads it as an artifact).
+
+    PYTHONPATH=src python -m benchmarks.fault_frontier [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CriterionConfig, DefenseConfig, FaultConfig,
+                        RoundEngine, StrategyConfig, WatchdogConfig,
+                        run_gradient_based, run_with_watchdog)
+from repro.core.engine import FullBatchSource
+from repro.data import classification_dataset, split_workers
+
+STEPS = 120
+TINY_STEPS = 60           # CI smoke: convergence claims only — the margin
+                          # claims (bits ratio, crash drift) need the full
+                          # horizon and record SKIP
+W = 6
+ALPHA = 0.05
+BITS = 4
+L2 = 1e-2                 # interior optimum: see module docstring
+CRIT = CriterionConfig(D=10, xi=0.001, t_bar=6)
+TARGET_MULT = 1.02        # target = MULT x fault-free final loss
+BITS_RATIO_MAX = 1.5      # defended bits-to-target vs clean (measured 1.18)
+CRASH_DRIFT_MIN = 1.3     # naive-crash final vs clean final (measured 1.60)
+TRIM_GAIN_MIN = 10.0      # sum final vs trimmed final (measured ~316x)
+
+ROOT_JSON = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         os.pardir, "BENCH_faults.json"))
+
+
+def _problem():
+    X, Y = classification_dataset(jax.random.PRNGKey(0), n_per_class=30,
+                                  n_classes=4, n_features=8, separation=2.0,
+                                  noise=1.0)
+    data = split_workers(X, Y, W)
+
+    def loss_fn(params, shard):
+        Xs, Ys = shard
+        ce = -jnp.mean(jnp.sum(Ys * jax.nn.log_softmax(Xs @ params),
+                               axis=-1))
+        return ce + L2 * jnp.sum(params * params)
+
+    return loss_fn, jnp.zeros((8, 4)), data
+
+
+def _bits_to(res, target):
+    loss = np.asarray(res.loss)
+    hit = np.nonzero(loss <= target)[0]
+    return None if hit.size == 0 else float(np.asarray(res.cum_bits)[hit[0]])
+
+
+INF = FaultConfig(corrupt_p=0.1, corrupt_kind="inf")
+NAN = FaultConfig(corrupt_p=0.1, corrupt_kind="nan")
+CRASH = FaultConfig(crash_p=0.02)
+SCALE = FaultConfig(corrupt_p=0.08, corrupt_kind="scale", corrupt_scale=-40.0)
+VALIDATE = DefenseConfig(validate=True)
+
+
+def _cells():
+    laq = StrategyConfig(kind="laq", bits=BITS, criterion=CRIT)
+    qgd = laq._replace(kind="qgd")
+    return {
+        "clean": laq,
+        "clean_defended": laq._replace(
+            defense=DefenseConfig(validate=True, gate_mult=6.0)),
+        "inf_undefended": laq._replace(faults=INF),
+        "inf_defended": laq._replace(faults=INF, defense=VALIDATE),
+        "nan_undefended": laq._replace(faults=NAN),
+        "nan_defended": laq._replace(faults=NAN, defense=VALIDATE),
+        "crash_naive": laq._replace(
+            faults=CRASH, defense=DefenseConfig(reconcile_crashes=False)),
+        "crash_reconciled": laq._replace(faults=CRASH),
+        "scale_qgd_sum": qgd._replace(faults=SCALE),
+        "scale_qgd_trimmed": qgd._replace(faults=SCALE,
+                                          aggregator="trimmed_mean",
+                                          trim_frac=0.34),
+        "scale_laq_gated": laq._replace(
+            faults=SCALE, defense=DefenseConfig(validate=True, gate_mult=4.0)),
+    }
+
+
+def _watchdog_row(loss_fn, p0, data, steps):
+    """Undefended inf corruption under the watchdog: rollback + escalate."""
+    src = FullBatchSource(loss_fn, data)
+    cfg = StrategyConfig(kind="laq", bits=BITS, criterion=CRIT, faults=INF)
+
+    def escalate(engine):
+        return RoundEngine(src, engine.cfg._replace(defense=VALIDATE),
+                           alpha=ALPHA)
+
+    with tempfile.TemporaryDirectory() as td:
+        res, log, _ = run_with_watchdog(
+            RoundEngine(src, cfg, alpha=ALPHA), p0, steps,
+            ckpt_path=os.path.join(td, "wd.npz"),
+            wd=WatchdogConfig(chunk=20, explode_mult=25.0), escalate=escalate)
+    return res, log
+
+
+def run(out_rows, results, tiny: bool = False):
+    loss_fn, p0, data = _problem()
+    steps = TINY_STEPS if tiny else STEPS
+
+    runs = {name: run_gradient_based(loss_fn, p0, data, cfg, steps=steps,
+                                     alpha=ALPHA)
+            for name, cfg in _cells().items()}
+    wd_res, wd_log = _watchdog_row(loss_fn, p0, data, steps)
+    runs["watchdog_inf"] = wd_res
+
+    clean_final = float(runs["clean"].loss[-1])
+    target = TARGET_MULT * clean_final
+
+    frontier = {}
+    for name, r in runs.items():
+        loss = np.asarray(r.loss)
+        bt = _bits_to(r, target)
+        frontier[name] = dict(
+            final_loss=float(loss[-1]),
+            finite=bool(np.isfinite(loss).all()),
+            total_uploads=int(r.cum_uploads[-1]),
+            total_bits=float(r.cum_bits[-1]),
+            bits_to_target=bt)
+        out_rows.append((f"fault_frontier_{name}", float(r.cum_bits[-1]),
+                         f"loss={frontier[name]['final_loss']:.4f};"
+                         f"to_target={bt}"))
+
+    def f(name, key="final_loss"):
+        return frontier[name][key]
+
+    def bits_to(name):
+        v = frontier[name]["bits_to_target"]
+        return np.inf if v is None else v
+
+    full = None if tiny else True  # margin claims SKIP on the tiny horizon
+    checks = {
+        "defense at fault rate 0 is free: bitwise-identical loss, equal bits":
+            bool(np.array_equal(np.asarray(runs["clean"].loss),
+                                np.asarray(runs["clean_defended"].loss)))
+            and f("clean", "total_bits") == f("clean_defended", "total_bits"),
+        "inf corruption: undefended goes non-finite and never reaches target":
+            (not f("inf_undefended", "finite"))
+            and frontier["inf_undefended"]["bits_to_target"] is None,
+        "inf corruption: validation reaches target":
+            frontier["inf_defended"]["bits_to_target"] is not None
+            and f("inf_defended", "finite"),
+        f"inf corruption: defended bits-to-target <= {BITS_RATIO_MAX}x clean":
+            full and bits_to("inf_defended")
+            <= BITS_RATIO_MAX * bits_to("clean"),
+        "nan corruption: undefended stays finite but pays >=10% upload tax":
+            f("nan_undefended", "finite")
+            and f("nan_undefended", "total_uploads")
+            >= 1.10 * f("clean", "total_uploads"),
+        "nan corruption: err_sq validation reaches target, uploads <= "
+        "undefended":
+            frontier["nan_defended"]["bits_to_target"] is not None
+            and f("nan_defended", "total_uploads")
+            <= f("nan_undefended", "total_uploads"),
+        f"crash: naive restart's ghost bias >= {CRASH_DRIFT_MIN}x clean "
+        "final loss":
+            full and f("crash_naive") >= CRASH_DRIFT_MIN * clean_final,
+        "crash: reconciled restart lands on the clean floor (<=1.05x)":
+            f("crash_reconciled") <= 1.05 * clean_final,
+        f"byzantine scale: trimmed-mean final >= {TRIM_GAIN_MIN:.0f}x lower "
+        "than sum":
+            f("scale_qgd_sum")
+            >= TRIM_GAIN_MIN * f("scale_qgd_trimmed"),
+        "byzantine scale on the lazy path: norm-gate reaches target":
+            frontier["scale_laq_gated"]["bits_to_target"] is not None,
+        "watchdog: rolls back (>=1), escalates, converges":
+            len(wd_log["rollbacks"]) >= 1 and not wd_log["gave_up"]
+            and frontier["watchdog_inf"]["bits_to_target"] is not None,
+    }
+
+    results["fault_frontier"] = dict(
+        target_loss=target, clean_final=clean_final, steps=steps,
+        watchdog_log=dict(rollbacks=len(wd_log["rollbacks"]),
+                          wasted_rounds=int(wd_log["wasted_rounds"]),
+                          wasted_bits=float(wd_log["wasted_bits"]),
+                          gave_up=bool(wd_log["gave_up"])),
+        **frontier)
+    results["fault_frontier/claims"] = checks
+
+    with open(ROOT_JSON, "w") as fh:
+        json.dump({"tiny": tiny, "steps": steps, "target_loss": target,
+                   "clean_final": clean_final,
+                   "watchdog_log": results["fault_frontier"]["watchdog_log"],
+                   "rows": [dict(name=n, **row)
+                            for n, row in frontier.items()],
+                   "checks": checks}, fh, indent=1)
+    return checks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer rounds, margin claims skipped")
+    args = ap.parse_args()
+    out_rows, results = [], {}
+    checks = run(out_rows, results, tiny=args.tiny)
+    fr = results["fault_frontier"]
+    print(f"target loss = {fr['target_loss']:.4f} "
+          f"({TARGET_MULT}x clean final {fr['clean_final']:.4f}, "
+          f"steps={fr['steps']})")
+    print(f"{'cell':18s} {'final loss':>11s} {'finite':>6s} {'uploads':>8s} "
+          f"{'bits':>11s} {'bits@tgt':>11s}")
+    for name in ("clean", "clean_defended", "inf_undefended", "inf_defended",
+                 "nan_undefended", "nan_defended", "crash_naive",
+                 "crash_reconciled", "scale_qgd_sum", "scale_qgd_trimmed",
+                 "scale_laq_gated", "watchdog_inf"):
+        row = fr[name]
+        bt = row["bits_to_target"]
+        print(f"{name:18s} {row['final_loss']:11.5f} "
+              f"{str(row['finite']):>6s} {row['total_uploads']:8d} "
+              f"{row['total_bits']:11.3e} "
+              f"{(f'{bt:.3e}' if bt is not None else 'never'):>11s}")
+    print(f"watchdog: {fr['watchdog_log']}")
+    ok = True
+    for k, v in checks.items():
+        print(f"[{'SKIP' if v is None else 'PASS' if v else 'FAIL'}] {k}")
+        ok &= v is None or bool(v)
+    print(f"-> {ROOT_JSON}")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,11 @@ Headline claims checked:
 * dense uploads are p-scaled (QGD at p=0.5 uses ~half the uploads of
   p=1.0), and so are communication-rich LAQ's;
 * sampling never *increases* LAQ communication;
-* D=4 staleness costs at most a modest bits-to-target factor.
+* D=4 staleness costs at most a modest bits-to-target factor;
+* Markov burst-churn (PR-7: long ON/OFF availability streaks at matched
+  mean availability p=0.5) still reaches the target with essentially the
+  same total bits as full participation — in the skip-dominated regime
+  workers that return from an OFF streak just resume the lazy schedule.
 
     PYTHONPATH=src python -m benchmarks.participation_frontier
 """
@@ -81,6 +85,15 @@ def run(out_rows, results):
         cfgs[f"laq_rich_p{p}"] = sampled(rich, p)
     cfgs[f"laq_d{DELAY}"] = laq._replace(participation="delay",
                                          max_delay=DELAY)
+    # Markov burst-churn vs i.i.d. sampling at matched mean availability
+    # p=0.5: long ON/OFF streaks (sojourn=8) vs the memoryless chain
+    # (sojourn = 1/(1-p) = 2 makes the stationary draw i.i.d. Bernoulli).
+    cfgs["laq_mkv_burst"] = laq._replace(participation="markov",
+                                         participation_p=0.5,
+                                         markov_sojourn=8.0)
+    cfgs["laq_mkv_iid"] = laq._replace(participation="markov",
+                                       participation_p=0.5,
+                                       markov_sojourn=2.0)
     runs = {name: run_gradient_based(loss_fn, logreg_init(), workers, cfg,
                                      steps=STEPS, alpha=ALPHA)
             for name, cfg in cfgs.items()}
@@ -130,6 +143,14 @@ def run(out_rows, results):
             <= frontier["laq_p1.0"]["total_uploads"],
         f"bounded staleness D={DELAY} costs <= 1.5x bits-to-target":
             to_target(f"laq_d{DELAY}") <= 1.5 * to_target("laq_p1.0"),
+        "markov churn (bursty and memoryless) reaches the target":
+            frontier["laq_mkv_burst"]["bits_to_target"] is not None
+            and frontier["laq_mkv_iid"]["bits_to_target"] is not None,
+        "churn costs <= 1.05x full-participation LAQ bits (skips absorb it)":
+            frontier["laq_mkv_burst"]["total_bits"]
+            <= 1.05 * frontier["laq_p1.0"]["total_bits"]
+            and frontier["laq_mkv_iid"]["total_bits"]
+            <= 1.05 * frontier["laq_p1.0"]["total_bits"],
     }
     results["participation_frontier/claims"] = checks
     return checks

@@ -1,7 +1,8 @@
 #!/usr/bin/env python
 """Benchmark-artifact gate: schema-validate every BENCH_*.json at the repo
 root (the per-PR artifacts CI uploads — BENCH_wire.json from the wire
-microbenchmark, BENCH_ef.json from the EF frontier).
+microbenchmark, BENCH_ef.json from the EF frontier, BENCH_faults.json
+from the fault frontier).
 
 Every artifact must be a JSON object with
 

@@ -46,19 +46,45 @@ def save_checkpoint(path: str, tree, step: int) -> None:
 
 
 def load_checkpoint(path: str, tree_template) -> Tuple[object, int]:
-    """Restores into the structure (and shardings) of ``tree_template``."""
+    """Restores into the structure (and shardings) of ``tree_template``.
+
+    The template must match the checkpoint structurally: a key present in
+    the file but absent from the template (or vice versa) raises ``KeyError``
+    naming every offender — the common cause is restoring into a CommState
+    whose optional fields (lazy / svrg / error / defense) were configured
+    differently from the run that saved (see docs/robustness.md on watchdog
+    escalation, which migrates such carries field-by-field instead).
+    """
     with np.load(path) as z:
         data = {k: z[k] for k in z.files}
+    if "__step__" not in data:
+        raise KeyError(f"{path}: not a repro checkpoint (no __step__ entry)")
     step = int(data.pop("__step__"))
+    used = set()
 
     def restore(kp, leaf):
         key = _path_str(kp)
         if "BF16::" + key in data:
-            arr = data["BF16::" + key].astype(jax.numpy.bfloat16)
-        else:
+            key = "BF16::" + key
+            arr = data[key].astype(jax.numpy.bfloat16)
+        elif key in data:
             arr = data[key]
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        else:
+            raise KeyError(
+                f"{path}: template leaf '{key}' missing from checkpoint — "
+                f"saved run used a different CommState configuration")
+        used.add(key)
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"{path}: shape mismatch at '{key}': checkpoint "
+                f"{arr.shape} vs template {leaf.shape}")
         sharding = getattr(leaf, "sharding", None)
         return jax.device_put(arr, sharding) if sharding else jax.numpy.asarray(arr)
 
-    return jax.tree_util.tree_map_with_path(restore, tree_template), step
+    restored = jax.tree_util.tree_map_with_path(restore, tree_template)
+    extra = sorted(set(data) - used)
+    if extra:
+        raise KeyError(
+            f"{path}: checkpoint entries not consumed by the template: "
+            f"{extra} — saved run carried state the template lacks")
+    return restored, step

@@ -30,8 +30,20 @@ Public API:
                                             / MinibatchSource gradients,
                                             participation models (full /
                                             bernoulli / fixed_k sampling /
-                                            bounded-delay async) via
+                                            markov churn / bounded-delay
+                                            async) via
                                             StrategyConfig.participation
+    FaultConfig                          -- fault injection (core/faults.py):
+                                            payload corruption / wire
+                                            bit-flips / crash-restart via
+                                            StrategyConfig.faults
+    DefenseConfig / DefenseState / run_with_watchdog
+                                         -- fault-tolerant aggregation
+                                            (core/defense.py): upload
+                                            validation, norm-clipping,
+                                            robust aggregators
+                                            (StrategyConfig.aggregator),
+                                            divergence watchdog rollback
     run_gradient_based / run_stochastic  -- simulated M-worker cluster
                                             (thin wrappers over RoundEngine;
                                             stochastic kinds: sgd/qsgd/ssgd/
@@ -41,6 +53,12 @@ from .adaptive import (BitSchedule, EtaSchedule, adaptive_roundtrip, eta_at,
                        grid_costs, select_bits)
 from .criterion import (CriterionConfig, history_threshold, push_history,
                         rhs_threshold, should_skip)
+from .defense import (AGGREGATORS, DefenseConfig, DefenseState,
+                      WatchdogConfig, defense_step, init_defense_state,
+                      migrate_carry, robust_aggregate, run_with_watchdog)
+from .faults import (CORRUPT_KINDS, FaultConfig, apply_crashes, bitflip_keys,
+                     corrupt_grads, corruption_mask, crash_mask,
+                     flip_wire_codes)
 from .lazy_rules import (LAZY_RULES, LasgConfig, LazyState, init_lazy_state,
                          should_skip_rule, smoothness_sq, variance_update)
 from .quantize import (dense_bits, dequantize_innovation, pack_codes,
@@ -59,8 +77,9 @@ from .compressors import (COMPRESSORS, CodePacker, Compressor,
                           reference_sparse_quantize, select_support,
                           ssgd_compress, static_k)
 from .engine import (PARTICIPATION, DelayedParticipation, FullBatchSource,
-                     FullParticipation, MinibatchSource, RoundEngine,
-                     RunResult, SampledParticipation, apply_svrg_exact,
-                     apply_svrg_streaming, broadcast_w, make_participation,
-                     participation_mask, stale_side_grads)
+                     FullParticipation, MarkovParticipation, MinibatchSource,
+                     RoundEngine, RunResult, SampledParticipation,
+                     apply_svrg_exact, apply_svrg_streaming, broadcast_w,
+                     make_participation, participation_mask,
+                     stale_side_grads)
 from .simulated import run_gradient_based, run_stochastic

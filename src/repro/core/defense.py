@@ -1,0 +1,335 @@
+"""Fault-tolerant aggregation: the defense half of the robustness subsystem
+(:mod:`repro.core.faults` is the injection half).
+
+Three independent server-side defenses, all selected via ``StrategyConfig``
+and all *per-worker-local* except the aggregator — so validation and
+clipping run unchanged inside the sharded step (``launch/train.py``), where
+a worker only ever sees its own slice:
+
+* **Upload validation** (:class:`DefenseConfig` ``validate`` /
+  ``gate_mult``) — a finite-check and a norm-gate on the decoded payload's
+  innovation energy ``||deltaQ_m||^2`` against a per-worker EMA of the
+  worker's own *accepted* uploads.  A rejected upload is masked **exactly
+  like a lazy skip**: no ``qhat`` commit, no server-aggregate contribution,
+  the clock keeps growing (so criterion (7b) forces a retry), and the wire
+  bits are still counted — the worker *did* transmit; the server just
+  refused to apply the payload.  That accounting invariant (rejected ==
+  forced skip, bits honest) is what keeps every bits-to-target claim
+  meaningful under faults, and is contract-tested.
+
+* **Norm-clipping** (``clip_mult``) — instead of (or in addition to)
+  rejecting, scale an over-norm innovation down to the clip radius before
+  committing.  The *same* scaled delta updates ``server_agg`` and the
+  worker's ``qhat`` mirror, so the recursion invariant ``server_agg ==
+  sum_m qhat_m`` is exactly preserved.  Clipping bounds what a Byzantine
+  scaling attack can inject per round to ``O(sqrt(clip_mult * ema))``.
+
+* **Robust aggregation** (``StrategyConfig.aggregator``:
+  ``"trimmed_mean"`` / ``"median"``) — replace the sum over committed
+  per-worker dequantized deltas with a coordinate-wise trimmed mean or
+  median, rescaled by the committed count to stay on the sum's scale.
+  This breaks the exact recursion invariant (each worker's ``qhat`` still
+  commits its own delta); the drift is bounded by the per-round innovation
+  spread and shrinks as innovations decay — documented in
+  ``docs/robustness.md``.  Simulated engine only: a coordinate-wise sort
+  across workers needs the full worker axis, which the 0.4.x partial-auto
+  sharded step cannot regather (``launch/train.py`` asserts).
+
+Plus the **divergence watchdog** (:func:`run_with_watchdog`): a host-side
+harness around ``RoundEngine.run_from`` that snapshots ``(params,
+CommState, pstate)`` through :mod:`repro.checkpoint` every healthy chunk,
+detects loss explosion / non-finite loss, rolls back to the last good
+snapshot and resumes — optionally *escalating* the defense config first
+(faults replay deterministically from their streams, so a plain resume
+would hit the identical fault; escalation changes the outcome, not the
+fault).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import load_checkpoint, save_checkpoint
+
+Pytree = object
+
+AGGREGATORS = ("sum", "trimmed_mean", "median")
+
+
+class DefenseConfig(NamedTuple):
+    """Static server-side defense knobs (``StrategyConfig.defense``).
+
+    All-off (the default) compiles the exact undefended round — the
+    defended-at-fault-rate-0 bits overhead is exactly zero, and fault-free
+    trajectories stay bitwise identical (asserted by the engine parity
+    goldens and ``benchmarks/fault_frontier.py``).
+    """
+    validate: bool = False      # finite-check decoded payloads
+    gate_mult: float = 0.0      # > 0: reject uploads whose innovation energy
+                                # exceeds gate_mult x the worker's accepted-
+                                # upload EMA (warm-up: first accepted upload
+                                # is finite-checked only)
+    gate_decay: float = 0.9     # EMA decay of the per-worker norm estimate
+    clip_mult: float = 0.0      # > 0: scale over-norm innovations down to
+                                # sqrt(clip_mult x ema) before committing
+    reconcile_crashes: bool = True  # subtract a crashed worker's stale qhat
+                                # from server_agg (keeps the recursion
+                                # invariant; False = the undefended server)
+
+    @property
+    def active(self) -> bool:
+        """True iff any per-upload defense state/logic is needed."""
+        return self.validate or self.gate_mult > 0.0 or self.clip_mult > 0.0
+
+
+class DefenseState(NamedTuple):
+    """Per-worker server-side validation state (a ``CommState`` field).
+
+    ``None``-gated exactly like ``LazyState`` / ``SvrgState`` /
+    ``ErrorState``: with ``DefenseConfig.active`` False the fields vanish
+    from the flattened state, so undefended runs carry zero extra leaves.
+    Leading worker dim in simulated mode, per-shard slice in sharded mode.
+    """
+    norm_ema: Optional[jax.Array]    # raw EMA of accepted ||deltaQ_m||^2
+    norm_count: Optional[jax.Array]  # debias counter (0 = warm-up)
+    rejects: Optional[jax.Array]     # cumulative rejected uploads (int32) —
+                                     # the accounting ledger: a rejected
+                                     # upload pays bits but commits nothing
+
+
+def empty_defense_state() -> DefenseState:
+    return DefenseState(None, None, None)
+
+
+def init_defense_state(dc: DefenseConfig, n_workers: int,
+                       *, worker_dim: bool = True) -> DefenseState:
+    if not dc.active:
+        return empty_defense_state()
+    wshape = (n_workers,) if worker_dim else ()
+    return DefenseState(norm_ema=jnp.zeros(wshape, jnp.float32),
+                        norm_count=jnp.zeros(wshape, jnp.float32),
+                        rejects=jnp.zeros(wshape, jnp.int32))
+
+
+def defense_step(dc: DefenseConfig, ds_m: DefenseState, innovation_sq,
+                 err_sq, uploaded):
+    """One worker's upload validation + clip decision (vmapped upstream,
+    or per-shard in the sharded step — no cross-worker communication).
+
+    ``innovation_sq`` is the decoded payload's energy ``||deltaQ_m||^2``
+    (post wire faults: what the server actually received) and ``err_sq``
+    the upload's quantization-error moment — the value that would commit
+    into ``eps_hat_sq``.  Both are finite-checked under ``validate``: a
+    NaN *gradient* quantizes to a zero delta (the R > 0 guard), so its
+    innovation is a perfectly finite 0 — the poison rides in the eps-hat
+    moment, which would turn the worker's criterion RHS NaN and destroy
+    its skip economics forever.  ``uploaded`` is the transmission bit (the
+    worker sent a payload this round).
+
+    Returns ``(accept, scale, ds_new)``: the acceptance bit, the clip
+    factor in ``(0, 1]`` to apply to the committed delta, and the updated
+    per-worker state.  The norm EMA advances only on *accepted* commits
+    (with the post-clip energy — the mass that actually entered the
+    aggregate); the reject counter only on rejected transmissions.
+    """
+    assert dc.active and ds_m.norm_ema is not None, \
+        "defense_step needs an allocated DefenseState (init_defense_state)"
+    d = dc.gate_decay
+    count = ds_m.norm_count
+    warm = count > 0
+    ema = ds_m.norm_ema / jnp.where(warm, 1.0 - d ** count, 1.0)
+
+    accept = jnp.ones((), bool)
+    if dc.validate:
+        accept = jnp.logical_and(accept, jnp.logical_and(
+            jnp.isfinite(innovation_sq), jnp.isfinite(err_sq)))
+    if dc.gate_mult > 0.0:
+        # warm-up accepts anything finite (there is no estimate to gate
+        # against); a NaN/Inf energy fails the <= and is rejected even
+        # without the explicit finite-check
+        gate_ok = jnp.where(warm, innovation_sq <= dc.gate_mult * ema,
+                            jnp.isfinite(innovation_sq))
+        accept = jnp.logical_and(accept, gate_ok)
+    if dc.clip_mult > 0.0:
+        over = jnp.logical_and(warm, innovation_sq > dc.clip_mult * ema)
+        scale = jnp.where(
+            over,
+            jnp.sqrt(dc.clip_mult * ema
+                     / jnp.maximum(innovation_sq, 1e-30)),
+            jnp.ones((), jnp.float32))
+    else:
+        scale = jnp.ones((), jnp.float32)
+
+    committed = jnp.logical_and(uploaded, accept)
+    rejected = jnp.logical_and(uploaded, jnp.logical_not(accept))
+    inn_committed = innovation_sq * scale * scale
+    ds_new = DefenseState(
+        norm_ema=jnp.where(committed,
+                           d * ds_m.norm_ema + (1.0 - d) * inn_committed,
+                           ds_m.norm_ema),
+        norm_count=jnp.where(committed, count + 1.0, count),
+        rejects=ds_m.rejects + rejected.astype(jnp.int32))
+    return accept, scale, ds_new
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregation over the per-worker dequantized deltas.
+# ---------------------------------------------------------------------------
+
+def robust_aggregate(aggregator: str, delta_masked: Pytree,
+                     committed: jax.Array, trim_frac: float) -> Pytree:
+    """Coordinate-wise robust combination of the committed deltas.
+
+    ``delta_masked`` carries a leading worker axis W (non-committed lanes
+    already zeroed); ``committed`` is the [W] commit mask.  Non-committed
+    lanes are pushed to +BIG before a per-coordinate sort, so exactly the
+    ``n`` committed values occupy the sorted prefix (NaNs among them sort
+    last and are trimmed as the largest).  The result is rescaled by ``n``
+    to stay on the plain sum's scale, so the server recursion and the
+    ``-alpha * agg`` update are unchanged downstream.
+
+    ``trimmed_mean`` drops the ``t = max(1, floor(trim_frac * W))``
+    smallest and largest committed coordinates; when ``n <= 2t`` committed
+    workers remain it degrades to the plain masked sum (nothing left to
+    average).  ``median`` takes the coordinate-wise median of the
+    committed values.
+    """
+    assert aggregator in ("trimmed_mean", "median"), aggregator
+    W = committed.shape[0]
+    n = jnp.sum(committed.astype(jnp.int32))
+    nf = n.astype(jnp.float32)
+    BIG = jnp.float32(3.0e38)
+    t = max(1, int(np.floor(trim_frac * W)))
+
+    def leaf(d):
+        mb = committed.reshape((-1,) + (1,) * (d.ndim - 1))
+        plain = jnp.sum(jnp.where(mb, d, 0.0), axis=0)
+        xs = jnp.sort(jnp.where(mb, d, BIG), axis=0)
+        if aggregator == "median":
+            med = 0.5 * (xs[jnp.maximum((n - 1) // 2, 0)]
+                         + xs[jnp.maximum(n // 2, 0)])
+            return jnp.where(n > 0, med * nf, jnp.zeros_like(plain))
+        idx = jnp.arange(W).reshape((-1,) + (1,) * (d.ndim - 1))
+        keep = jnp.logical_and(idx >= t, idx < n - t)
+        cnt = (n - 2 * t).astype(jnp.float32)
+        mean = (jnp.sum(jnp.where(keep, xs, 0.0), axis=0)
+                / jnp.maximum(cnt, 1.0))
+        return jnp.where(cnt > 0, mean * nf, plain)
+
+    return jax.tree.map(leaf, delta_masked)
+
+
+# ---------------------------------------------------------------------------
+# Divergence watchdog: snapshot / detect / rollback / escalate.
+# ---------------------------------------------------------------------------
+
+class WatchdogConfig(NamedTuple):
+    chunk: int = 25             # rounds per segment between health checks
+    explode_mult: float = 25.0  # loss > mult x best healthy loss => explosion
+    max_rollbacks: int = 8      # give up (flagged in the log) after this many
+
+
+def migrate_carry(old_carry, fresh_carry):
+    """Graft a rolled-back carry onto a freshly initialized one.
+
+    Used after a watchdog escalation rebuilt the engine: state fields whose
+    pytree structure and shapes survive the config change (params, qhat,
+    clocks, estimator state, ...) keep their rolled-back values; fields the
+    escalation (re)allocated — e.g. a newly enabled ``DefenseState`` — keep
+    their fresh initialization.  Field-by-field over the ``CommState``
+    NamedTuple, so the decision is per-subsystem, not all-or-nothing.
+    """
+    params_old, cst_old, ps_old = old_carry
+    _, cst_fresh, ps_fresh = fresh_carry
+
+    def graft(o, f):
+        if (jax.tree_util.tree_structure(o)
+                != jax.tree_util.tree_structure(f)):
+            return f
+        lo, lf = jax.tree_util.tree_leaves(o), jax.tree_util.tree_leaves(f)
+        if any(a.shape != b.shape for a, b in zip(lo, lf)):
+            return f
+        return o
+
+    cst = type(cst_fresh)(*(graft(o, f) for o, f in zip(cst_old, cst_fresh)))
+    return params_old, cst, graft(ps_old, ps_fresh)
+
+
+def run_with_watchdog(engine, params0, steps: int, *, ckpt_path: str,
+                      wd: WatchdogConfig = WatchdogConfig(), escalate=None):
+    """Run ``engine`` for ``steps`` rounds under divergence supervision.
+
+    Scans ``wd.chunk`` rounds at a time via ``engine.run_from``; after each
+    chunk the host checks the recorded losses.  A healthy chunk advances
+    the run and snapshots the full carry (params + ``CommState`` +
+    participation state) to ``ckpt_path`` via :mod:`repro.checkpoint`; an
+    unhealthy one (non-finite loss, or loss above ``explode_mult`` x the
+    best healthy loss) rolls the carry back to the last snapshot — the
+    resumed run continues with its ``CommState`` (clocks, qhat, totals)
+    intact.  ``escalate(engine) -> engine`` (optional) is applied on every
+    rollback: fault streams are deterministic in the round index, so a
+    plain replay hits the identical fault — escalation (e.g. enabling
+    validation) changes how the server handles it.  Wasted rounds/bits are
+    logged, and totals in the final trajectory count only the surviving
+    path (the rollback restored the accounting state too).
+
+    Returns ``(result, log, final_carry)``: the concatenated healthy
+    :class:`~repro.core.engine.RunResult`, a dict with ``rollbacks`` /
+    ``wasted_rounds`` / ``wasted_bits`` / ``gave_up``, and the final carry
+    (its ``CommState`` holds the defense ledgers).
+    """
+    from .engine import RunResult
+
+    carry = engine.init_carry(params0)
+    save_checkpoint(ckpt_path, carry, 0)
+    good, best = 0, float("inf")
+    chunks = []
+    log = {"rollbacks": [], "wasted_rounds": 0, "wasted_bits": 0.0,
+           "gave_up": False}
+    while good < steps:
+        n = min(wd.chunk, steps - good)
+        start_bits = float(np.asarray(carry[1].total_bits))
+        carry2, rr = engine.run_from(carry, n)
+        loss = np.asarray(rr.loss)
+        finite = bool(np.all(np.isfinite(loss)))
+        exploded = (np.isfinite(best)
+                    and float(np.nanmin(loss)) > wd.explode_mult * best)
+        if finite and not exploded:
+            carry = carry2
+            chunks.append(rr)
+            good += n
+            best = min(best, float(loss.min()))
+            save_checkpoint(ckpt_path, carry, good)
+            continue
+        log["wasted_rounds"] += n
+        log["wasted_bits"] += float(np.asarray(carry2[1].total_bits)) \
+            - start_bits
+        log["rollbacks"].append({
+            "round": good,
+            "reason": "nonfinite-loss" if not finite else "loss-explosion"})
+        if len(log["rollbacks"]) > wd.max_rollbacks:
+            log["gave_up"] = True
+            break
+        carry, _ = load_checkpoint(ckpt_path, carry)
+        if escalate is not None:
+            engine = escalate(engine)
+            carry = migrate_carry(carry, engine.init_carry(carry[0]))
+            # re-snapshot so a second rollback restores the POST-escalation
+            # state structure
+            save_checkpoint(ckpt_path, carry, good)
+
+    def cat(field):
+        vals = [getattr(c, field) for c in chunks]
+        if not chunks or vals[0] is None:
+            return None
+        return np.concatenate([np.asarray(v) for v in vals])
+
+    result = RunResult(params=carry[0], loss=cat("loss"),
+                       grad_norm_sq=cat("grad_norm_sq"),
+                       cum_uploads=cat("cum_uploads"),
+                       cum_bits=cat("cum_bits"), quant_err=cat("quant_err"),
+                       mean_bits=cat("mean_bits"))
+    return result, log, carry

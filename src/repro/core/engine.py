@@ -60,13 +60,15 @@ import jax.numpy as jnp
 
 from .adaptive import eta_at
 from .compressors import qsgd_compress, ssgd_compress
+from .faults import (apply_crashes, bitflip_keys, corrupt_grads,
+                     corruption_mask, crash_mask)
 from .quantize import dense_bits, tree_size, tree_sq_norm
 from .strategy import (CommState, StrategyConfig, SvrgState, aggregate,
                        finalize_step, init_comm_state)
 
 Pytree = object
 
-PARTICIPATION = ("full", "bernoulli", "fixed_k", "delay")
+PARTICIPATION = ("full", "bernoulli", "fixed_k", "markov", "delay")
 
 
 class RunResult(NamedTuple):
@@ -301,6 +303,12 @@ def participation_mask(cfg: StrategyConfig, step, n_workers: int):
         k = max(1, int(round(cfg.participation_p * n_workers)))
         scores = jax.random.uniform(key, (n_workers,))
         return scores <= jnp.sort(scores)[k - 1]
+    if cfg.participation == "markov":
+        raise ValueError(
+            "markov churn is stateful (the chain carries the on/off state "
+            "between rounds) — it has no stateless mask; use "
+            "MarkovParticipation via make_participation (simulated engine "
+            "only)")
     raise ValueError(f"unknown participation {cfg.participation!r}; "
                      f"have {PARTICIPATION}")
 
@@ -332,6 +340,51 @@ class SampledParticipation:
     def begin_round(self, pstate, step, params):
         return (participation_mask(self.cfg, step, self.n_workers),
                 None, pstate)
+
+
+class MarkovParticipation:
+    """Bursty on/off availability: a per-worker two-state Markov chain.
+
+    The carried ROADMAP item: real fleets churn in *bursts* (a worker that
+    just dropped tends to stay dropped), which i.i.d. bernoulli sampling
+    cannot express.  Each worker holds a bool on/off state; at round start
+    it transitions with ``P(on -> off) = 1 / sojourn`` and ``P(off -> on) =
+    p_down * p / (1 - p)``, giving stationary availability exactly
+    ``participation_p`` and a mean ON-streak of ``markov_sojourn`` rounds
+    — so churn burstiness is dialed at *matched mean availability*
+    (``benchmarks/participation_frontier.py`` measures the cost of the
+    bursts).  ``sojourn = 1 / (1 - p)`` makes both transition
+    probabilities equal ``1 - p`` / ``p``-complementary, i.e. the next
+    state is independent of the current one: the chain degenerates to
+    i.i.d. bernoulli(p), subsuming ``participation="bernoulli"`` as a
+    special case (distributionally — the draws come from a different
+    stream).  The initial state is drawn from the stationary law on its
+    own fold_in stream.  Simulated engine only: the carried chain state is
+    exactly what :func:`participation_mask`'s stateless contract (and with
+    it the sharded step) cannot express.
+    """
+
+    def __init__(self, cfg: StrategyConfig, n_workers: int):
+        p = cfg.participation_p
+        assert 0.0 < p < 1.0, p
+        assert cfg.markov_sojourn >= 1.0, cfg.markov_sojourn
+        self.p = p
+        self.p_down = min(1.0, 1.0 / cfg.markov_sojourn)
+        self.p_up = min(1.0, self.p_down * p / (1.0 - p))
+        self.n_workers = n_workers
+        self._key0 = jax.random.PRNGKey(cfg.participation_seed)
+
+    def init(self, params0):
+        # stationary initial state; stream 1 (transitions draw on stream 0)
+        return jax.random.bernoulli(jax.random.fold_in(self._key0, 1),
+                                    self.p, (self.n_workers,))
+
+    def begin_round(self, on, step, params):
+        u = jax.random.uniform(
+            jax.random.fold_in(jax.random.fold_in(self._key0, 0), step),
+            (self.n_workers,))
+        on = jnp.where(on, u >= self.p_down, u < self.p_up)
+        return on, None, on
 
 
 class DelayedParticipation:
@@ -383,6 +436,10 @@ def make_participation(cfg: StrategyConfig, n_workers: int):
                 max(1, int(round(cfg.participation_p * n_workers))) == n_workers:
             return FullParticipation()
         return SampledParticipation(cfg, n_workers)
+    if cfg.participation == "markov":
+        if cfg.participation_p >= 1.0:
+            return FullParticipation()
+        return MarkovParticipation(cfg, n_workers)
     return FullParticipation()
 
 
@@ -409,6 +466,11 @@ class RoundEngine:
         if baseline is not None and not source.stochastic:
             raise ValueError("dense baselines need a stochastic source "
                              "(their compressor keys come from its stream 1)")
+        if baseline is not None and cfg.faults.active:
+            raise ValueError("fault injection targets the LAQ state machine "
+                             "(qhat / clocks / estimator state); the dense "
+                             "baselines carry none of it — run them with "
+                             "faults off")
         self.source = source
         self.cfg = cfg
         self.alpha = alpha
@@ -439,6 +501,16 @@ class RoundEngine:
         batches = source.sample(cst.step)
         grads = source.eval_at(params, thetas_w, batches)
 
+        flt = cfg.faults
+        if flt.crashy:
+            # crash-restart BEFORE the svrg/wk2 stages: the restarted
+            # worker's fresh anchors are what this round computes against.
+            # mu restarts from this round's (pre-correction) gradient — the
+            # streaming-style refresh (core/faults.py).
+            cst = apply_crashes(
+                cst, crash_mask(flt, cst.step, self.n_workers), params,
+                grads, cfg, reconcile=cfg.defense.reconcile_crashes)
+
         corr = None
         if source.stochastic and cfg.variance_reduced:
             grads, corr, svrg = apply_svrg_exact(
@@ -453,10 +525,26 @@ class RoundEngine:
                 grads_stale = stale_side_grads(
                     lambda th: source.eval_at(params, th, batches),
                     cst.lazy.theta_last, corr)
-            agg, cst, metrics = aggregate(cst, grads, alpha_k, cfg,
+            # payload corruption AFTER the svrg/wk2 stages: the fault hits
+            # the outgoing payload (what the worker ships), not the local
+            # computation — the stale side stays honest, so the wk2 rule
+            # sees a huge same-sample difference and uploads the garbage,
+            # exactly the failure mode a corrupt sender produces
+            grads_out = grads
+            fault_flip = fault_keys = None
+            if flt.grad_faulty:
+                grads_out = corrupt_grads(
+                    grads, corruption_mask(flt, cst.step, self.n_workers),
+                    flt)
+            elif flt.wire_faulty:
+                fault_flip = corruption_mask(flt, cst.step, self.n_workers)
+                fault_keys = bitflip_keys(flt, cst.step, self.n_workers)
+            agg, cst, metrics = aggregate(cst, grads_out, alpha_k, cfg,
                                           params=params,
                                           grads_stale=grads_stale,
-                                          avail=avail)
+                                          avail=avail,
+                                          fault_flip=fault_flip,
+                                          fault_keys=fault_keys)
             qe, mb = metrics.radius_max, metrics.mean_bits
         else:
             agg, cst, qe, mb = self._baseline_round(cst, grads, avail)
@@ -504,9 +592,18 @@ class RoundEngine:
                            step=cst.step + 1)
         return agg, cst, jnp.zeros(()), mb
 
-    def run(self, params0, steps: int) -> RunResult:
-        (params, _, _), recs = jax.lax.scan(self.round,
-                                            self.init_carry(params0), None,
-                                            length=steps)
+    def run_from(self, carry, steps: int):
+        """Scan ``steps`` rounds from an arbitrary carry — the resume entry
+        point (checkpoint restart, the divergence watchdog's chunked
+        supervision in core/defense.py).  Returns ``(carry, RunResult)``;
+        ``run`` is ``run_from(init_carry(params0))``, so a run split across
+        ``run_from`` calls is bitwise identical to one uninterrupted scan
+        (tests/test_checkpoint.py pins this through a save/load cycle).
+        """
+        carry, recs = jax.lax.scan(self.round, carry, None, length=steps)
         loss, gn, cu, cb, qe, mb = recs
-        return RunResult(params, loss, gn, cu, cb, qe, mb)
+        return carry, RunResult(carry[0], loss, gn, cu, cb, qe, mb)
+
+    def run(self, params0, steps: int) -> RunResult:
+        _, result = self.run_from(self.init_carry(params0), steps)
+        return result

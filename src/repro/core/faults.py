@@ -1,0 +1,246 @@
+"""Fault injection: corrupt, crashed and Byzantine workers (core/defense.py
+holds the countermeasures).
+
+Everything the engine models up to PR 6 is *benign*: the participation layer
+covers workers that are absent or late, but not workers that misbehave.
+This module is the injection half of the robustness subsystem — a pluggable
+:class:`FaultConfig` riding in ``StrategyConfig.faults`` that the
+``RoundEngine`` applies each round, with the same deterministic stream
+discipline as ``participation_mask``: every fault is a pure function of
+``(fault_seed, stream, step, worker)`` via ``fold_in``, independent of the
+batch / compressor / participation streams, so faulty runs are exactly
+reproducible and replayable (which the divergence watchdog's rollback
+depends on).
+
+Three fault families, selected per-worker per-round:
+
+* **payload corruption** (``corrupt_p`` / ``corrupt_kind``) — the worker's
+  outgoing gradient is damaged before encoding: ``"nan"`` / ``"inf"``
+  poison, ``"sign_flip"``, ``"scale"`` (Byzantine gradient-scaling attack,
+  factor ``corrupt_scale``), or ``"bitflip"`` — MSB flips on a
+  ``bitflip_frac`` fraction of the *packed wire codes* themselves (applied
+  inside ``worker_update`` on the quantized payload via the exact
+  code-space inverse maps in :mod:`repro.core.wire`).  Corruption happens
+  at the worker, after the (honest) skip decision: the damaged payload is
+  what both the server aggregate AND the worker's own ``qhat`` mirror
+  commit, so the two views stay consistent — exactly the failure mode a
+  real corrupt sender produces.
+
+* **crash-restart** (``crash_p``) — the worker loses its entire per-worker
+  state (``qhat``, ``LazyState``, ``SvrgState``, ``ErrorState``, threshold
+  anchor) and re-bootstraps through the existing first-upload machinery:
+  its clock restarts at ``t_bar`` so criterion (7b) forces a dense
+  re-upload, and the LASG bootstrap guards (``stat_count == 0``) force the
+  estimator rules to upload too.  The server may *reconcile* the crash
+  (subtract the stale ``qhat_m`` from ``server_agg``, keeping the
+  recursion invariant ``server_agg == sum_m qhat_m``) — without
+  reconciliation the dead contribution biases every subsequent round, the
+  failure ``benchmarks/fault_frontier.py`` measures.
+
+* **Markov-churn availability** — lives with the other participation
+  models in :mod:`repro.core.engine` (``participation="markov"``); it is a
+  fault in the availability process, not in the payload, so it composes
+  with the families above rather than belonging to them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .wire import codes_of_delta, delta_of_codes
+
+Pytree = object
+
+CORRUPT_KINDS = ("nan", "inf", "sign_flip", "scale", "bitflip")
+
+# fold_in stream ids under PRNGKey(fault_seed) — disjoint by construction
+_STREAM_CORRUPT = 0
+_STREAM_CRASH = 1
+_STREAM_BITFLIP = 2
+
+
+class FaultConfig(NamedTuple):
+    """Static fault-injection knobs (``StrategyConfig.faults``).
+
+    All-zero probabilities (the default) make every fault path a static
+    no-op: the engine compiles the exact pre-fault round, so fault-free
+    trajectories stay bitwise identical to the pre-robustness code.
+    """
+    corrupt_p: float = 0.0      # per-worker per-round payload-corruption prob
+    corrupt_kind: str = "nan"   # one of CORRUPT_KINDS
+    corrupt_scale: float = 50.0  # multiplier of the "scale" Byzantine fault
+    bitflip_frac: float = 0.05  # fraction of wire codes MSB-flipped per
+                                # corrupted upload ("bitflip" kind)
+    crash_p: float = 0.0        # per-worker per-round crash-restart prob
+    fault_seed: int = 0         # seed of the fault streams (independent of
+                                # batch / compressor / participation RNG)
+
+    @property
+    def active(self) -> bool:
+        return self.corrupt_p > 0.0 or self.crash_p > 0.0
+
+    @property
+    def grad_faulty(self) -> bool:
+        """Gradient-level corruption (applied by the engine before encode)."""
+        return self.corrupt_p > 0.0 and self.corrupt_kind != "bitflip"
+
+    @property
+    def wire_faulty(self) -> bool:
+        """Code-level corruption (applied inside ``worker_update``)."""
+        return self.corrupt_p > 0.0 and self.corrupt_kind == "bitflip"
+
+    @property
+    def crashy(self) -> bool:
+        return self.crash_p > 0.0
+
+
+def _stream_key(fc: FaultConfig, stream: int, step):
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(fc.fault_seed), stream), step)
+
+
+def corruption_mask(fc: FaultConfig, step, n_workers: int) -> jax.Array:
+    """[W] bool: which workers emit a corrupted payload this round."""
+    return jax.random.bernoulli(_stream_key(fc, _STREAM_CORRUPT, step),
+                                fc.corrupt_p, (n_workers,))
+
+
+def crash_mask(fc: FaultConfig, step, n_workers: int) -> jax.Array:
+    """[W] bool: which workers crash-restart at the START of this round."""
+    return jax.random.bernoulli(_stream_key(fc, _STREAM_CRASH, step),
+                                fc.crash_p, (n_workers,))
+
+
+def bitflip_keys(fc: FaultConfig, step, n_workers: int) -> jax.Array:
+    """[W] per-worker keys for the wire-code flip positions."""
+    ks = _stream_key(fc, _STREAM_BITFLIP, step)
+    return jax.vmap(lambda m: jax.random.fold_in(ks, m))(
+        jnp.arange(n_workers))
+
+
+def corrupt_grads(grads: Pytree, mask: jax.Array, fc: FaultConfig) -> Pytree:
+    """Apply a gradient-level fault to the masked workers' gradients.
+
+    ``grads`` carries a leading worker axis W; ``mask`` is [W] bool.  The
+    whole gradient of a corrupted worker is damaged (a faulty sender, not a
+    faulty coordinate).
+    """
+    kind = fc.corrupt_kind
+    assert kind in CORRUPT_KINDS and kind != "bitflip", kind
+
+    def leaf(g):
+        g = g.astype(jnp.float32)
+        mb = mask.reshape((-1,) + (1,) * (g.ndim - 1))
+        if kind == "nan":
+            bad = jnp.full_like(g, jnp.nan)
+        elif kind == "inf":
+            bad = jnp.full_like(g, jnp.inf)
+        elif kind == "sign_flip":
+            bad = -g
+        else:   # "scale"
+            bad = fc.corrupt_scale * g
+        return jnp.where(mb, bad, g)
+
+    return jax.tree.map(leaf, grads)
+
+
+def flip_wire_codes(delta: Pytree, R_tree: Pytree, bits: int, key,
+                    frac: float) -> Pytree:
+    """MSB-flip a ``frac`` fraction of one worker's wire codes.
+
+    Round-trips the dequantized ``delta`` through the exact code-space
+    inverse maps (:func:`repro.core.wire.codes_of_delta`), XORs the top bit
+    of the keyed coordinate subset — each flip moves the coordinate by
+    half the code range, ``2 tau R 2^{b-1} ~= R`` — and re-emits the
+    corrupted dequantized innovation.  Positions derive from ``key`` (one
+    per worker from :func:`bitflip_keys`) folded with the leaf index.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    r_leaves = jax.tree_util.tree_leaves(R_tree)
+    msb = jnp.uint8(1 << (bits - 1))
+    out = []
+    for i, (d, R) in enumerate(zip(leaves, r_leaves)):
+        if d.size == 0:
+            out.append(d)
+            continue
+        q = codes_of_delta(d, R, bits)
+        u = jax.random.uniform(jax.random.fold_in(key, i), d.shape)
+        q = jnp.where(u < frac, q ^ msb, q)
+        out.append(delta_of_codes(q, R, bits))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def apply_crashes(cst, mask: jax.Array, params: Pytree, grads: Pytree,
+                  cfg, *, reconcile: bool = True):
+    """Reset the per-worker state of crashed workers (start of round).
+
+    ``cst`` is the simulated-mode :class:`~repro.core.strategy.CommState`
+    (leading worker dim); ``mask`` is [W] bool; ``params`` the current
+    iterate (the restarted worker's fresh snapshots); ``grads`` this
+    round's per-worker gradients (the restarted SVRG anchor's ``mu`` — a
+    streaming-style refresh, same documented degradation as the sharded
+    path).  ``cfg`` is the ``StrategyConfig`` (for ``criterion.t_bar``).
+
+    A crashed worker loses ``qhat`` / ``eps_hat_sq`` / ``LazyState`` /
+    ``SvrgState`` / ``ErrorState`` / ``R_anchor`` and restarts its clock at
+    ``t_bar``, so the existing first-upload guard — criterion (7b) plus the
+    LASG ``stat_count == 0`` bootstrap guards — forces a dense re-upload at
+    its next reachable round.  With ``reconcile`` (the defended server) the
+    stale ``qhat_m`` is subtracted from ``server_agg``, preserving the
+    recursion invariant ``server_agg == sum_m qhat_m``; without it the dead
+    contribution stays in the aggregate forever (the undefended failure
+    mode ``benchmarks/fault_frontier.py`` demonstrates).  Server-side
+    ledgers (``bits_spent``, totals, the defense state) are NOT reset: the
+    server never lost them.
+    """
+    fm = mask.astype(jnp.float32)
+
+    def wsel(reset_leaf, old_leaf):
+        mb = mask.reshape((-1,) + (1,) * (old_leaf.ndim - 1))
+        return jnp.where(mb, reset_leaf.astype(old_leaf.dtype), old_leaf)
+
+    def wzero(old):
+        return jax.tree.map(lambda l: wsel(jnp.zeros_like(l, jnp.float32), l),
+                            old)
+
+    def wsnap(old):
+        # per-worker snapshot of the current (replicated) params
+        return jax.tree.map(
+            lambda l, p_: wsel(jnp.broadcast_to(p_.astype(jnp.float32),
+                                                l.shape), l),
+            old, params)
+
+    qhat_old = cst.qhat
+    new = {
+        "qhat": wzero(qhat_old),
+        "eps_hat_sq": jnp.where(mask, 0.0, cst.eps_hat_sq),
+        "clocks": jnp.where(mask, cfg.criterion.t_bar,
+                            cst.clocks).astype(jnp.int32),
+        "R_anchor": jnp.where(mask, 0.0, cst.R_anchor),
+    }
+    if reconcile:
+        new["server_agg"] = jax.tree.map(
+            lambda a, q: (a.astype(jnp.float32)
+                          - jnp.sum(fm.reshape((-1,) + (1,) * (q.ndim - 1))
+                                    * q.astype(jnp.float32), axis=0)
+                          ).astype(a.dtype),
+            cst.server_agg, qhat_old)
+
+    lz = cst.lazy
+    new["lazy"] = lz._replace(
+        grad_ema=None if lz.grad_ema is None else wzero(lz.grad_ema),
+        stat_ema=jnp.where(mask, 0.0, lz.stat_ema),
+        stat_count=jnp.where(mask, 0.0, lz.stat_count),
+        sigma_hat_sq=jnp.where(mask, 0.0, lz.sigma_hat_sq),
+        theta_last=None if lz.theta_last is None else wsnap(lz.theta_last))
+    sv = cst.svrg
+    if sv.theta_anchor is not None:
+        new["svrg"] = sv._replace(
+            theta_anchor=wsnap(sv.theta_anchor),
+            mu_anchor=jax.tree.map(wsel, grads, sv.mu_anchor))
+    er = cst.error
+    if er.residual is not None:
+        new["error"] = er._replace(residual=wzero(er.residual))
+    return cst._replace(**new)

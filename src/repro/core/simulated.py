@@ -11,9 +11,13 @@ trajectories bitwise (tests/test_engine_parity.py).
 The quantize pipeline inside each round is pluggable via
 ``StrategyConfig.wire_backend`` (core/wire.py); which workers the server
 reaches each round via ``StrategyConfig.participation`` /
-``participation_p`` / ``max_delay`` (core/engine.py participation models —
-client sampling and bounded-staleness async workers compose with every
-kind and lazy rule below).
+``participation_p`` / ``max_delay`` / ``markov_sojourn`` (core/engine.py
+participation models — client sampling, bounded-staleness async workers
+and bursty Markov churn compose with every kind and lazy rule below).
+Fault injection (``StrategyConfig.faults``, core/faults.py) and the
+defense stack (``StrategyConfig.defense`` / ``aggregator``,
+core/defense.py) run here in full — corruption, crash-restart and robust
+aggregation are simulated-engine-only; see docs/robustness.md.
 """
 from __future__ import annotations
 

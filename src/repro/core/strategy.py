@@ -35,6 +35,10 @@ from .adaptive import (BitSchedule, EtaSchedule, dequantize_dynamic,
 from .compressors import (COMPRESSORS, ErrorState, compressor_keys,
                           empty_error_state, init_error_state, static_k)
 from .criterion import CriterionConfig, push_history, should_skip
+from .defense import (AGGREGATORS, DefenseConfig, DefenseState, defense_step,
+                      empty_defense_state, init_defense_state,
+                      robust_aggregate)
+from .faults import FaultConfig, flip_wire_codes
 from .lazy_rules import (LAZY_RULES, LasgConfig, LazyState, commit_upload,
                          empty_lazy_state, init_lazy_state, lazy_rule_step)
 from .quantize import (dense_bits, sparse_upload_bits, tree_size,
@@ -85,8 +89,9 @@ class StrategyConfig(NamedTuple):
     participation: str = "full"     # which workers the server reaches each
                                     # round (core/engine.py): "full" |
                                     # "bernoulli" / "fixed_k" client sampling
+                                    # | "markov" bursty on/off churn
                                     # | "delay" bounded-staleness async
-                                    # (simulated engine only)
+                                    # ("markov"/"delay": simulated engine only)
     participation_p: float = 1.0    # bernoulli keep-probability / fixed_k
                                     # cohort fraction (k = round(p * W))
     max_delay: int = 0              # "delay": staleness bound D; worker m
@@ -115,6 +120,25 @@ class StrategyConfig(NamedTuple):
                                     # grids); see docs/compressors.md
     compressor_seed: int = 0        # seed of the randk support stream
                                     # (independent of batch / participation)
+    markov_sojourn: float = 8.0     # "markov" participation: mean ON-streak
+                                    # length in rounds; 1/(1-p) reduces the
+                                    # chain to i.i.d. bernoulli(p)
+    faults: FaultConfig = FaultConfig()  # fault injection (core/faults.py):
+                                    # payload corruption / wire bit-flips /
+                                    # crash-restart; all-off by default
+    defense: DefenseConfig = DefenseConfig()  # server-side upload validation
+                                    # + norm-clipping (core/defense.py); a
+                                    # rejected upload is masked exactly like
+                                    # a lazy skip, bits counted honestly
+    aggregator: str = "sum"         # combination of committed deltas:
+                                    # "sum" (the paper's recursion) |
+                                    # "trimmed_mean" / "median" coordinate-
+                                    # wise robust aggregation (simulated
+                                    # engine only; see docs/robustness.md
+                                    # for the recursion-drift caveat)
+    trim_frac: float = 0.1          # "trimmed_mean": fraction of workers
+                                    # trimmed at EACH end (t = floor(f * W),
+                                    # min 1)
     # wire mode is a launch-layer concern ("float" psum vs "packed" all_gather);
     # the algorithmic state machine is identical for both.
 
@@ -216,15 +240,22 @@ class CommState(NamedTuple):
     error: ErrorState = ErrorState(None)  # per-worker EF residual e_m
                             # (core/compressors.py; None unless
                             # error_feedback — same gating as lazy/svrg)
+    defense: DefenseState = DefenseState(None, None, None)  # per-worker
+                            # server-side validation state + reject ledger
+                            # (core/defense.py; None unless
+                            # DefenseConfig.active — same gating as
+                            # lazy/svrg/error)
 
 
 class RoundMetrics(NamedTuple):
-    uploads: jax.Array      # |M^k| this round
+    uploads: jax.Array      # |M^k| this round (transmissions, incl. rejected)
     bits: jax.Array         # wire bits this round
     mean_skip: jax.Array    # fraction of workers skipping
     radius_max: jax.Array   # max_m R_m^k (0 for unquantized)
     mean_bits: jax.Array    # mean selected width over uploading workers
                             # (== the static width for fixed-bit runs)
+    rejections: jax.Array = jnp.zeros((), jnp.int32)  # transmissions the
+                            # server refused to commit (defense validation)
 
 
 def init_comm_state(grad_template: Pytree, n_workers: int,
@@ -239,10 +270,16 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
 
     assert cfg.lazy_rule in LAZY_RULES, cfg.lazy_rule
     assert cfg.compressor in COMPRESSORS, cfg.compressor
+    assert cfg.aggregator in AGGREGATORS, cfg.aggregator
     if cfg.compressed or cfg.error_feedback:
         assert cfg.quantized and not cfg.adaptive, (
             "the compressor pipeline / error feedback require a fixed-bit "
             "quantized kind (qgd / laq)")
+    if cfg.faults.wire_faulty:
+        assert cfg.quantized and not cfg.adaptive and not cfg.compressed, (
+            "wire-code bit-flips model the packed fixed-bit payload: they "
+            "need a fixed-bit quantized kind (qgd / laq) without the sparse "
+            "compressor pipeline")
     wshape = (n_workers,) if worker_dim else ()
     # clocks start at t_bar when first_round_upload: criterion (7b) then
     # forces a dense first round, bootstrapping qhat / the server aggregate.
@@ -265,6 +302,8 @@ def init_comm_state(grad_template: Pytree, n_workers: int,
                              worker_dim=worker_dim),
         error=init_error_state(cfg.error_feedback, grad_template, n_workers,
                                worker_dim=worker_dim),
+        defense=init_defense_state(cfg.defense, n_workers,
+                                   worker_dim=worker_dim),
     )
 
 
@@ -284,7 +323,9 @@ class WorkerOut(NamedTuple):
     qhat_new: Pytree
     eps_hat_sq_new: jax.Array
     clock_new: jax.Array
-    uploaded: jax.Array
+    uploaded: jax.Array     # transmission bit: the worker SENT a payload
+                            # (drives bits_m / total_uploads even when the
+                            # server rejects it)
     bits_m: jax.Array
     R: jax.Array
     width_m: jax.Array      # selected width b_m^k (static width on the
@@ -293,13 +334,19 @@ class WorkerOut(NamedTuple):
     R_anchor_new: jax.Array  # updated scale-free threshold anchor
     error_new: ErrorState   # updated EF residual (None-gated pass-through
                             # when error_feedback is off)
+    committed: jax.Array = True  # commit bit: the server APPLIED the payload
+                            # (== uploaded unless defense validation rejected
+                            # it; drives qhat/eps/clock/estimator commits)
+    defense_new: DefenseState = DefenseState(None, None, None)  # updated
+                            # validation state (None-gated pass-through)
 
 
 def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
                   bits_spent_m, theta_hist, alpha, n_workers: int,
                   cfg: StrategyConfig, step=None, lazy_m=None,
                   R_anchor_m=None, params=None, grad_stale_m=None,
-                  avail_m=None, error_m=None, ckey_m=None):
+                  avail_m=None, error_m=None, ckey_m=None, defense_m=None,
+                  flip_m=None, fkey_m=None):
     """One worker's bit-width selection + quantize + skip decision.
 
     ``lazy_m`` is this worker's :class:`~repro.core.lazy_rules.LazyState`
@@ -308,15 +355,33 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
     current (replicated) iterate, required by the ``lasg_wk2`` / ``lasg_ps``
     rules; ``grad_stale_m`` is the WK2 same-sample second backprop (the
     current minibatch at the worker's stale iterate), required by that rule
-    only.  ``avail_m`` is this worker's participation bit (core/engine.py):
-    an unreachable worker is masked exactly like a lazy skip — no upload,
-    no wire bits, clock grows, ``qhat`` and the estimator state frozen —
-    so the ``CommState`` accounting stays correct under client sampling.
+    only.  ``avail_m`` is this worker's participation bit (core/engine.py).
     ``error_m`` is this worker's :class:`~repro.core.compressors.ErrorState`
     slice (EF-LAQ: its residual is added back before compressing and
     re-committed on upload) and ``ckey_m`` its rand-k support key
-    (``compressor_keys``; ignored by topk).  Returns a :class:`WorkerOut`;
-    ``delta_masked`` is zero if the upload is skipped.
+    (``compressor_keys``; ignored by topk).  ``defense_m`` is this worker's
+    :class:`~repro.core.defense.DefenseState` slice (required when
+    ``cfg.defense.active``); ``flip_m`` / ``fkey_m`` are the wire-fault
+    mask bit and flip-position key (``core/faults.py``, bitflip kind only).
+
+    Masking discipline — ONE code path for every way a payload fails to
+    commit.  Two bits gate the state commits:
+
+    * ``uploaded`` — the worker transmitted: the (honest, pre-fault) skip
+      rule said upload AND the worker was reachable (``avail_m``).  Drives
+      the bits/uploads accounting: a transmission costs wire bits whether
+      or not the server accepts it.
+    * ``committed`` — the server applied the payload: ``uploaded`` AND the
+      defense validation accepted it.  Drives every state commit —
+      ``delta_masked``, ``qhat``, ``eps_hat_sq``, clock reset, estimator
+      snapshots, the EF residual.  Without an active defense ``committed``
+      IS ``uploaded`` (no extra ops), so a lazy skip, an unreachable worker
+      and a rejected upload all flow through the same masked-commit block:
+      no ``qhat`` commit, clock grows, state frozen.  The only asymmetry is
+      honest accounting: rejects pay bits, skips/absences do not.
+
+    Returns a :class:`WorkerOut`; ``delta_masked`` is zero unless
+    committed.
     """
     p = tree_size(grad_m)
     if lazy_m is None:
@@ -329,6 +394,9 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
         assert cfg.quantized and not cfg.adaptive, (
             "the compressor pipeline / error feedback require a fixed-bit "
             "quantized kind (qgd / laq)")
+    if cfg.faults.wire_faulty:
+        assert cfg.quantized and not cfg.adaptive and not cfg.compressed, (
+            "wire-code bit-flips need the plain fixed-bit quantized path")
     if cfg.error_feedback:
         # EF: compress the residual-corrected gradient g_eff = g + eta e.
         # eta (cfg.ef_damping) tempers the loop gain — the innovation
@@ -384,6 +452,7 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
         rt = backend.roundtrip(g_eff, qhat_m, cfg.effective_bits,
                                cfg.per_leaf_radius)
         q_new, delta, R = rt.q_new, rt.delta, rt.R_max
+        R_tree = rt.R_tree      # the wire-fault layer flips codes per leaf
         # the fused backend emits both criterion moments as in-pass partial
         # sums; the reference backend spends two extra sweeps on them
         err_sq, innovation_sq = rt.err_sq, rt.innovation_sq
@@ -423,8 +492,56 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
         # bound) demands it — its clock keeps growing and the overdue
         # upload happens at its next available round
         uploaded = jnp.logical_and(uploaded, avail_m)
+
+    if cfg.faults.wire_faulty and flip_m is not None:
+        # wire-level fault: MSB flips on this worker's packed codes, AFTER
+        # the (honest) skip decision — corruption happens in encode/
+        # transit, not in the rule.  The corrupted payload is what both
+        # the server aggregate and the worker's own qhat mirror would
+        # commit, so the decoded moments are recomputed from it: the
+        # defense gate sees what the server sees.
+        delta_f = flip_wire_codes(delta, R_tree, cfg.effective_bits, fkey_m,
+                                  cfg.faults.bitflip_frac)
+        delta = jax.tree.map(lambda a, b: jnp.where(flip_m, b, a),
+                             delta, delta_f)
+        q_new = jax.tree.map(lambda qh, d: qh.astype(jnp.float32) + d,
+                             qhat_m, delta)
+        err_sq = tree_sq_norm(jax.tree.map(
+            lambda g, qn: g.astype(jnp.float32) - qn, g_eff, q_new))
+        innovation_sq = tree_sq_norm(delta)
+
+    if cfg.defense.active:
+        # server-side upload validation + norm-clipping on the decoded
+        # payload (core/defense.py).  Per-worker-local by construction, so
+        # the same code runs per shard in launch/train.py.
+        assert defense_m is not None and defense_m.norm_ema is not None, \
+            "cfg.defense.active needs CommState.defense (init_comm_state)"
+        accept, clip_scale, defense_new = defense_step(
+            cfg.defense, defense_m, innovation_sq, err_sq, uploaded)
+        committed = jnp.logical_and(uploaded, accept)
+        if cfg.defense.clip_mult > 0.0:
+            # the SAME scaled delta updates server_agg and the qhat
+            # mirror, preserving server_agg == sum_m qhat_m exactly
+            delta = jax.tree.map(lambda d: d * clip_scale, delta)
+            q_new = jax.tree.map(lambda qh, d: qh.astype(jnp.float32) + d,
+                                 qhat_m, delta)
+            innovation_sq = innovation_sq * clip_scale * clip_scale
+            if cfg.compressed:
+                # the sparse path's err_sq is support-restricted; scaling
+                # the dequant values rescales it only approximately —
+                # exact at scale 1 (the no-clip case), conservative
+                # otherwise (documented in docs/robustness.md)
+                err_sq = err_sq * clip_scale * clip_scale
+            else:
+                err_sq = tree_sq_norm(jax.tree.map(
+                    lambda g, qn: g.astype(jnp.float32) - qn, g_eff, q_new))
+    else:
+        committed = uploaded
+        defense_new = defense_m if defense_m is not None \
+            else empty_defense_state()
+
     if stats is not None:
-        lazy_new = commit_upload(cfg.lazy_rule, cfg.lasg, lazy_pre, uploaded,
+        lazy_new = commit_upload(cfg.lazy_rule, cfg.lasg, lazy_pre, committed,
                                  stats, params=params,
                                  innovation_sq=innovation_sq)
     else:
@@ -437,26 +554,31 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
                                 lazy_new, lazy_m)
         R_anchor_new = jnp.where(avail_m, R_anchor_new, R_anchor_m)
 
-    fup = uploaded.astype(jnp.float32)
-    delta_masked = jax.tree.map(lambda d: d * fup, delta)
-    qhat_new = jax.tree.map(lambda qn, qh: jnp.where(uploaded, qn.astype(qh.dtype), qh),
+    # the single masked-commit block: `committed` (== `uploaded` without an
+    # active defense) gates every state commit; `uploaded` alone pays bits.
+    # Select, don't multiply: a rejected Inf payload would turn 0 * inf
+    # into NaN and poison the server sum through the mask.
+    delta_masked = jax.tree.map(
+        lambda d: jnp.where(committed, d, jnp.zeros_like(d)), delta)
+    qhat_new = jax.tree.map(lambda qn, qh: jnp.where(committed, qn.astype(qh.dtype), qh),
                             q_new, qhat_m)
-    eps_hat_sq_new = jnp.where(uploaded, err_sq, eps_hat_sq_m)
-    clock_new = jnp.where(uploaded, 0, clock_m + 1).astype(jnp.int32)
-    bits_m = fup * bits_if_upload
+    eps_hat_sq_new = jnp.where(committed, err_sq, eps_hat_sq_m)
+    clock_new = jnp.where(committed, 0, clock_m + 1).astype(jnp.int32)
+    bits_m = uploaded.astype(jnp.float32) * bits_if_upload
     if cfg.error_feedback:
-        # the residual commits only on upload (a skipped round transmits
-        # nothing, so its compression error never happened): on upload
-        # e_new = g_eff - q_new — the mass this round's compress dropped
+        # the residual commits only on a committed upload (a skipped or
+        # rejected round changes nothing server-side, so its compression
+        # error never happened): e_new = g_eff - q_new — the mass this
+        # round's compress dropped
         error_new = ErrorState(residual=jax.tree.map(
-            lambda g, qn, e: jnp.where(uploaded,
+            lambda g, qn, e: jnp.where(committed,
                                        g.astype(jnp.float32) - qn, e),
             g_eff, q_new, error_m.residual))
     else:
         error_new = error_m
     return WorkerOut(delta_masked, qhat_new, eps_hat_sq_new, clock_new,
                      uploaded, bits_m, R, width_m, lazy_new, R_anchor_new,
-                     error_new)
+                     error_new, committed, defense_new)
 
 
 # ---------------------------------------------------------------------------
@@ -465,7 +587,8 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
 
 def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig,
               params: Pytree = None, grads_stale: Pytree = None,
-              avail: jax.Array = None):
+              avail: jax.Array = None, fault_flip: jax.Array = None,
+              fault_keys: jax.Array = None):
     """Aggregate per-worker gradients (leading dim W) into the LAQ gradient.
 
     ``params`` is the current (replicated) iterate — required by the
@@ -473,13 +596,16 @@ def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig,
     ``grads_stale`` (leading dim W, same structure as ``grads``) is the WK2
     same-sample second backprop; ``avail`` ([W] bool) is the round's
     participation mask (core/engine.py) — unreachable workers are masked
-    exactly like lazy skips.  Returns ``(agg_grad, new_state, metrics)``.
-    The caller applies ``theta <- theta - alpha * agg_grad`` (or feeds
-    agg_grad to an optimizer) and then calls :func:`finalize_step` with the
-    realized parameter change.
+    exactly like lazy skips; ``fault_flip`` / ``fault_keys`` ([W] bool /
+    [W] keys) drive the wire-code bit-flip fault (core/faults.py, engine-
+    supplied).  Returns ``(agg_grad, new_state, metrics)``.  The caller
+    applies ``theta <- theta - alpha * agg_grad`` (or feeds agg_grad to an
+    optimizer) and then calls :func:`finalize_step` with the realized
+    parameter change.
     """
     n_workers = state.clocks.shape[0]
     have_stale, have_avail = grads_stale is not None, avail is not None
+    have_flip = fault_flip is not None
     have_ckey = cfg.compressor == "randk"
     ckeys = (compressor_keys(cfg.compressor_seed, state.step, n_workers)
              if have_ckey else None)
@@ -488,50 +614,68 @@ def aggregate(state: CommState, grads: Pytree, alpha, cfg: StrategyConfig,
         # theta_hist / params are replicated across workers: closed over,
         # not vmapped
         (grad_m, qhat_m, eps_m, clock_m, spent_m, lazy_m, anchor_m,
-         err_m) = args[:8]
-        rest = list(args[8:])
+         err_m, defense_m) = args[:9]
+        rest = list(args[9:])
         ckey_m = rest.pop(0) if have_ckey else None
         grad_stale_m = rest.pop(0) if have_stale else None
         avail_m = rest.pop(0) if have_avail else None
+        flip_m = rest.pop(0) if have_flip else None
+        fkey_m = rest.pop(0) if have_flip else None
         return worker_update(grad_m, qhat_m, eps_m, clock_m, spent_m,
                              state.theta_hist, alpha, n_workers, cfg,
                              step=state.step, lazy_m=lazy_m,
                              R_anchor_m=anchor_m, params=params,
                              grad_stale_m=grad_stale_m, avail_m=avail_m,
-                             error_m=err_m, ckey_m=ckey_m)
+                             error_m=err_m, ckey_m=ckey_m,
+                             defense_m=defense_m, flip_m=flip_m,
+                             fkey_m=fkey_m)
 
     wargs = (grads, state.qhat, state.eps_hat_sq, state.clocks,
-             state.bits_spent, state.lazy, state.R_anchor, state.error)
+             state.bits_spent, state.lazy, state.R_anchor, state.error,
+             state.defense)
     if have_ckey:
         wargs = wargs + (ckeys,)
     if have_stale:
         wargs = wargs + (grads_stale,)   # vmap cannot map a None arg
     if have_avail:
         wargs = wargs + (avail,)
-    (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
-     bits_m, R_m, width_m, lazy_new, anchor_new,
-     error_new) = jax.vmap(upd)(*wargs)
+    if have_flip:
+        wargs = wargs + (fault_flip, fault_keys)
+    wu = jax.vmap(upd)(*wargs)
 
-    # Server recursion: agg^k = agg^{k-1} + sum_m deltaQ_m.
-    agg = jax.tree.map(lambda a, d: a + jnp.sum(d, axis=0),
-                       state.server_agg, delta_masked)
+    # Server recursion: agg^k = agg^{k-1} + sum_m deltaQ_m ("sum"), or the
+    # robust combination of the committed deltas (core/defense.py) — same
+    # scale, bounded drift from the per-worker qhat mirrors (documented in
+    # docs/robustness.md).
+    if cfg.aggregator == "sum":
+        agg = jax.tree.map(lambda a, d: a + jnp.sum(d, axis=0),
+                           state.server_agg, wu.delta_masked)
+    else:
+        robust = robust_aggregate(cfg.aggregator, wu.delta_masked,
+                                  wu.committed, cfg.trim_frac)
+        agg = jax.tree.map(lambda a, r: a + r, state.server_agg, robust)
 
+    uploaded, bits_m = wu.uploaded, wu.bits_m
     uploads = jnp.sum(uploaded.astype(jnp.int32))
+    rejections = jnp.sum(jnp.logical_and(
+        uploaded, jnp.logical_not(wu.committed)).astype(jnp.int32))
     bits = jnp.sum(bits_m)
     fup = uploaded.astype(jnp.float32)
     metrics = RoundMetrics(uploads=uploads, bits=bits,
                            mean_skip=1.0 - uploads / n_workers,
-                           radius_max=jnp.max(R_m),
-                           mean_bits=jnp.sum(width_m * fup)
-                           / jnp.maximum(jnp.sum(fup), 1.0))
+                           radius_max=jnp.max(wu.R),
+                           mean_bits=jnp.sum(wu.width_m * fup)
+                           / jnp.maximum(jnp.sum(fup), 1.0),
+                           rejections=rejections)
     new_state = state._replace(
-        qhat=qhat_new, server_agg=agg, eps_hat_sq=eps_hat_sq_new,
-        clocks=clock_new,
+        qhat=wu.qhat_new, server_agg=agg, eps_hat_sq=wu.eps_hat_sq_new,
+        clocks=wu.clock_new,
         bits_spent=state.bits_spent + bits_m,
         total_bits=state.total_bits + bits,
         total_uploads=state.total_uploads + uploads,
         step=state.step + 1,
-        lazy=lazy_new, R_anchor=anchor_new, error=error_new,
+        lazy=wu.lazy_new, R_anchor=wu.R_anchor_new, error=wu.error_new,
+        defense=wu.defense_new,
     )
     return agg, new_state, metrics
 

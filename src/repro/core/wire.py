@@ -371,6 +371,40 @@ def sparse_roundtrip(backend, grad: Pytree, qhat: Pytree, bits: int, k: int,
 
 
 # ---------------------------------------------------------------------------
+# Code-space inverse maps — recover the integer wire codes from a
+# dequantized leaf and re-emit after mutating them.  Used by the fault
+# layer (core/faults.py: MSB flips on the packed codes) and usable by any
+# consumer that needs to edit a payload without re-running the quantizer.
+# Exact on the emit path's own output: ``delta = 2 tau R q - R`` is
+# recovered by rounding ``(delta + R) / (2 tau R)`` — the float32 rounding
+# noise of the forward map is orders of magnitude below the half-step the
+# round absorbs (codes are <= 255).
+# ---------------------------------------------------------------------------
+
+def codes_of_delta(delta: jax.Array, R, bits: int) -> jax.Array:
+    """Inverse of the dequant map on one leaf: uint8 codes from ``delta``.
+
+    ``R == 0`` emits the midpoint code, matching the forward map's
+    convention for an identically-zero innovation.
+    """
+    t = tau(bits)
+    levels = 2 ** bits - 1
+    denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
+    q = jnp.round((delta.astype(jnp.float32) + R) / denom)
+    q = jnp.clip(q, 0, levels)
+    q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q))
+    return q.astype(jnp.uint8)
+
+
+def delta_of_codes(codes: jax.Array, R, bits: int) -> jax.Array:
+    """Re-emit the dequantized leaf from (possibly mutated) codes — the
+    same expression as quantize.dequantize_innovation, per leaf."""
+    t = tau(bits)
+    d = 2.0 * t * R * codes.astype(jnp.float32) - R
+    return jnp.where(R > 0, d, jnp.zeros_like(d))
+
+
+# ---------------------------------------------------------------------------
 # Axis-packed wire payload helpers — the sharded collective wire format
 # shared by launch/train.py (pack along the LAST dim: flattening a
 # model-sharded leaf would force GSPMD to regather it).  Same

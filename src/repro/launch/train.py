@@ -52,6 +52,14 @@ path.  The ``lasg_wk2`` rule pays a second backprop per step: the *current*
 batch re-evaluated at this worker's stale iterate (same microbatching), so
 its skip decision is noise-free.
 
+Upload defense (``StrategyConfig.defense``, core/defense.py) runs inside
+the sharded step: validation finite-checks each worker's innovation and
+quantization error against a per-worker accepted-norm EMA, and a rejected
+upload is masked off the wire exactly like a lazy skip (bits still paid —
+the ``committed`` mask; docs/robustness.md).  Fault *injection*, robust
+aggregation (``aggregator != "sum"``) and norm clipping on the packed wire
+are simulated-engine-only and asserted off here.
+
 Three stochastic levers from the simulated engine also apply here — the
 round stages themselves are SHARED with ``core/engine.py`` (this module no
 longer carries its own copy of the SVRG / WK2 round math):
@@ -104,6 +112,7 @@ from repro import compat
 from repro.core.adaptive import (dequantize_dynamic, eta_at, quantize_dynamic,
                                  tau_of_selection, tau_of_width)
 from repro.core.compressors import ErrorState, compressor_keys
+from repro.core.defense import DefenseState
 from repro.core.engine import (apply_svrg_streaming, participation_mask,
                                stale_side_grads)
 from repro.core.quantize import (dequantize_innovation, innovation,
@@ -323,10 +332,27 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             "support selection flattens the gradient pytree, which the "
             "0.4.x partial-auto partitioner cannot reshard")
     assert strategy.participation in ("full", "bernoulli", "fixed_k"), (
-        "delay participation is simulated-engine-only: the sharded step "
-        "would need a replicated params-history ring of max_delay+1 full "
-        "parameter copies (see docs/engine.md)")
+        "delay/markov participation is simulated-engine-only: 'delay' would "
+        "need a replicated params-history ring of max_delay+1 full parameter "
+        "copies, and 'markov' carries a stateful per-worker on/off chain "
+        "(see docs/engine.md)")
     assert strategy.max_delay == 0, "max_delay needs participation='delay'"
+    assert not strategy.faults.active, (
+        "fault injection is simulated-engine-only: the corruption / crash "
+        "stages live in RoundEngine.round (core/engine.py), not the sharded "
+        "step — the launch path is the *defended* deployment target "
+        "(see docs/robustness.md)")
+    assert strategy.aggregator == "sum", (
+        "trimmed_mean/median aggregation is simulated-engine-only: the "
+        "coordinate-wise sort needs every worker's dequantized delta on one "
+        "device, which the 0.4.x partial-auto partitioner cannot express "
+        "per-shard (see docs/robustness.md); the sharded defenses are "
+        "validation + norm-gate + clip, which are per-worker-local")
+    if wire == "packed":
+        assert strategy.defense.clip_mult == 0.0, (
+            "norm-clipping on the packed wire would need a per-worker f32 "
+            "scale sidecar (codes are integers); clip rides the float wire, "
+            "validate/gate work on both (a reject is one mask bit)")
     if strategy.wire_backend != "reference":
         # Inside partial-auto shard_map the gradient leaves keep their
         # global shapes with the model axis auto-sharded: the fused
@@ -358,6 +384,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         lazy = _squeeze0(comm.lazy)        # LASG estimator state (this shard)
         R_anchor = jnp.squeeze(comm.R_anchor, 0)
         error = _squeeze0(comm.error)      # EF residual (this shard)
+        defense = _squeeze0(comm.defense)  # gate EMA / reject ledger (shard)
 
         def loss_fn(p, b):
             return lm_loss(p, b, cfg) / W          # sum_m loss_m == global mean
@@ -433,7 +460,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
                            comm.theta_hist, lr_k, W, strategy, step=comm.step,
                            lazy_m=lazy, R_anchor_m=R_anchor, params=params,
                            grad_stale_m=grads_stale, avail_m=avail,
-                           error_m=error, ckey_m=ckey)
+                           error_m=error, ckey_m=ckey, defense_m=defense)
         (delta_masked, qhat_new, eps_hat_sq_new, clock_new, uploaded,
          bits_m, width_m) = (wu.delta_masked, wu.qhat_new, wu.eps_hat_sq_new,
                              wu.clock_new, wu.uploaded, wu.bits_m, wu.width_m)
@@ -442,7 +469,9 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             agg_delta = jax.tree.map(
                 functools.partial(jax.lax.psum, axis_name=wa), delta_masked)
         else:
-            skip = jnp.logical_not(uploaded)
+            # a defense-rejected upload is masked off the wire exactly like
+            # a lazy skip (its bits_m still pay: the payload was sent)
+            skip = jnp.logical_not(wu.committed)
             agg_delta, _ = _packed_aggregate(
                 grads, qhat, skip, strategy, wa, pspecs=grad_pspecs,
                 width=width_m if strategy.adaptive else None)
@@ -471,6 +500,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             R_anchor=wu.R_anchor_new[None],
             svrg=svrg_new,
             error=_unsqueeze0(wu.error_new),
+            defense=_unsqueeze0(wu.defense_new),
         )
         metrics = StepMetrics(
             loss=jax.lax.psum(loss, wa),
@@ -494,6 +524,7 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             R_anchor=P(wa),
             svrg=jax.tree.map(lambda _: P(wa), comm.svrg),
             error=jax.tree.map(lambda _: P(wa), comm.error),
+            defense=jax.tree.map(lambda _: P(wa), comm.defense),
         )
         sm = compat.shard_map(
             sharded_step, mesh=mesh,
@@ -599,6 +630,14 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         return ErrorState(residual=jax.tree.map(comm_leaf_spec,
                                                 er.residual, pspecs))
 
+    def defense_specs(ds):
+        # all-scalar per-worker fields: gate EMA + debias count + rejects
+        if ds.norm_ema is None:
+            return DefenseState(None, None, None)
+        return DefenseState(norm_ema=shard(ds.norm_ema, P(wa)),
+                            norm_count=shard(ds.norm_count, P(wa)),
+                            rejects=shard(ds.rejects, P(wa)))
+
     comm_s = CommState(
         qhat=jax.tree.map(comm_leaf_spec, comm_abs.qhat, pspecs),
         server_agg=jax.tree.map(lambda l, sp: shard(l, sp),
@@ -614,6 +653,7 @@ def train_state_specs(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         R_anchor=shard(comm_abs.R_anchor, P(wa)),
         svrg=svrg_specs(comm_abs.svrg),
         error=error_specs(comm_abs.error),
+        defense=defense_specs(comm_abs.defense),
     )
     step_s = shard(jax.ShapeDtypeStruct((), jnp.int32), P())
     return TrainState(params_s, opt_s, comm_s, step_s)

@@ -1,0 +1,104 @@
+"""Checkpoint save/load round-trips (repro/checkpoint/ckpt.py).
+
+The contract the divergence watchdog (core/defense.py) leans on: a carry
+saved mid-trajectory and restored into the same engine continues **bitwise
+identically** to the uninterrupted run — CommState (qhat, clocks, eps-hat,
+totals, estimator state, EF residual) and the participation state all ride
+through the npz round-trip losslessly, for every strategy family.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import CriterionConfig, RoundEngine, StrategyConfig
+from repro.core.engine import FullBatchSource, MinibatchSource
+
+from test_engine_parity import quadratic_problem, regression_problem
+
+CRIT = CriterionConfig(D=10, xi=0.08, t_bar=20)
+
+
+def _engines():
+    """(name, engine, params0) for the three strategy families: plain LAQ,
+    stochastic SLAQ-WK2 + SVRG, and error-feedback top-k."""
+    qloss, qp0, qdata = quadratic_problem()
+    rloss, rp0, rdata = regression_problem()
+    laq = StrategyConfig(kind="laq", bits=4, criterion=CRIT)
+    wk2 = laq._replace(lazy_rule="lasg_wk2", grad_mode="svrg", svrg_period=7)
+    ef = laq._replace(compressor="topk", compressor_k=0.5,
+                      error_feedback=True)
+    return [
+        ("laq", RoundEngine(FullBatchSource(qloss, qdata), laq, alpha=0.3),
+         qp0),
+        ("slaq_wk2_svrg",
+         RoundEngine(MinibatchSource(rloss, rdata, batch=4, seed=0), wk2,
+                     alpha=0.1), rp0),
+        ("ef_topk", RoundEngine(FullBatchSource(qloss, qdata), ef,
+                                alpha=0.3), qp0),
+    ]
+
+
+@pytest.mark.parametrize("case", range(3), ids=["laq", "slaq_wk2_svrg",
+                                                "ef_topk"])
+def test_resume_is_bitwise_identical(case, tmp_path):
+    name, eng, p0 = _engines()[case]
+    path = str(tmp_path / f"{name}.npz")
+
+    # the uninterrupted reference: 15 + 15 rounds in one carry chain
+    carry = eng.init_carry(p0)
+    carry_mid, rr_a = eng.run_from(carry, 15)
+    save_checkpoint(path, carry_mid, 15)
+    _, rr_ref = eng.run_from(carry_mid, 15)
+
+    # restore into a *template* carry (fresh init => right structure/dtypes)
+    template = eng.init_carry(p0)
+    # the fresh template must not accidentally equal the mid-run state
+    assert not np.array_equal(np.asarray(template[1].qhat["x" if case != 1
+                                                          else "w"]),
+                              np.asarray(carry_mid[1].qhat["x" if case != 1
+                                                           else "w"]))
+    restored, step = load_checkpoint(path, template)
+    assert step == 15
+    _, rr_resumed = eng.run_from(restored, 15)
+
+    for field in ("loss", "grad_norm_sq", "cum_uploads", "cum_bits"):
+        np.testing.assert_array_equal(np.asarray(getattr(rr_ref, field)),
+                                      np.asarray(getattr(rr_resumed, field)),
+                                      err_msg=f"{name}.{field}")
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), rr_ref.params, rr_resumed.params)
+
+
+def test_dtype_preservation_and_bf16_tag(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.int32).reshape(2, 3),
+            "b": jnp.ones((4,), jnp.bfloat16),
+            "c": jnp.float32(2.5)}
+    path = str(tmp_path / "t.npz")
+    save_checkpoint(path, tree, 7)
+    out, step = load_checkpoint(path, tree)
+    assert step == 7
+    assert out["a"].dtype == jnp.int32 and out["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_load_errors_name_the_offending_keys(tmp_path):
+    path = str(tmp_path / "t.npz")
+    save_checkpoint(path, {"a": jnp.zeros((2,)), "b": jnp.ones((3,))}, 0)
+    # template leaf absent from the file
+    with pytest.raises(KeyError, match="missing from checkpoint"):
+        load_checkpoint(path, {"a": jnp.zeros((2,)), "b": jnp.ones((3,)),
+                               "c": jnp.zeros(())})
+    # file entry the template does not consume
+    with pytest.raises(KeyError, match="not consumed"):
+        load_checkpoint(path, {"a": jnp.zeros((2,))})
+    # shape mismatch
+    with pytest.raises(ValueError, match="shape mismatch"):
+        load_checkpoint(path, {"a": jnp.zeros((5,)), "b": jnp.ones((3,))})
+    # not a checkpoint at all
+    bogus = str(tmp_path / "bogus.npz")
+    np.savez(bogus, x=np.zeros(3))
+    with pytest.raises(KeyError, match="__step__"):
+        load_checkpoint(bogus, {"x": jnp.zeros((3,))})

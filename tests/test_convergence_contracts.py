@@ -272,3 +272,41 @@ def test_ef_laq_beats_plain_at_low_bits(bits):
     # seeded absolute budget so a laziness regression fails loudly even if
     # the dense baseline drifts with it
     assert float(re.cum_bits[-1]) <= 2.0e6, float(re.cum_bits[-1])
+
+
+# ---------------------------------------------------------------------------
+# (f) Fault tolerance: defended LAQ survives payload corruption.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ("reference", "fused"))
+def test_defended_laq_survives_corruption(backend):
+    """The PR-7 robustness contract (benchmarks/fault_frontier.py maps the
+    full frontier): at >=10% per-worker per-round Inf payload corruption,
+    upload validation keeps the run finite and lands it at the clean
+    floor, while the undefended run's aggregate goes non-finite — on both
+    wire backends (wire content is bit-identical by the core/wire.py
+    contract, so the defense decisions must agree)."""
+    from repro.core import DefenseConfig, FaultConfig
+    loss_fn, p0, workers = logistic_setup()
+    cfg = StrategyConfig(kind="laq", bits=4, criterion=CRIT,
+                         wire_backend=backend)
+    fc = FaultConfig(corrupt_p=0.1, corrupt_kind="inf", fault_seed=SEED)
+    steps = 80
+
+    clean = run_gradient_based(loss_fn, p0, workers, cfg, steps=steps,
+                               alpha=ALPHA)
+    undef = run_gradient_based(loss_fn, p0, workers, cfg._replace(faults=fc),
+                               steps=steps, alpha=ALPHA)
+    defended = run_gradient_based(
+        loss_fn, p0, workers,
+        cfg._replace(faults=fc, defense=DefenseConfig(validate=True)),
+        steps=steps, alpha=ALPHA)
+
+    assert not np.all(np.isfinite(np.asarray(undef.loss)))
+    dl = np.asarray(defended.loss)
+    assert np.all(np.isfinite(dl))
+    assert tail_loss(defended, 10) < 1.10 * tail_loss(clean, 10)
+    # honest accounting: rejected transmissions still pay their bits (the
+    # corruption tax is real, and large under this lazy criterion), but the
+    # defense itself adds no communication on top of the faulty run
+    assert float(defended.cum_bits[-1]) <= float(undef.cum_bits[-1])

@@ -1,0 +1,378 @@
+"""Fault injection + fault-tolerant aggregation (core/faults.py,
+core/defense.py).
+
+Covers the deterministic fault streams, the corruption / crash primitives,
+the rejected-upload accounting contract (a rejection is masked exactly like
+a lazy skip, but its wire bits are still paid), the crash reconciliation
+invariant ``server_agg == sum_m qhat_m``, the robust aggregators, and the
+divergence watchdog's rollback + escalation loop.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CriterionConfig, DefenseConfig, DefenseState,
+                        FaultConfig, RoundEngine, StrategyConfig,
+                        WatchdogConfig, apply_crashes, bitflip_keys,
+                        corrupt_grads, corruption_mask, crash_mask,
+                        defense_step, flip_wire_codes, init_comm_state,
+                        init_defense_state, robust_aggregate,
+                        run_gradient_based, run_with_watchdog)
+from repro.core.engine import FullBatchSource
+from repro.core.wire import get_backend
+
+from test_engine_parity import quadratic_problem
+
+CRIT = CriterionConfig(D=10, xi=0.08, t_bar=20)
+LAQ = StrategyConfig(kind="laq", bits=4, criterion=CRIT)
+
+
+def run_laq(steps=60, alpha=0.3, **kw):
+    loss_fn, p0, data = quadratic_problem()
+    cfg = LAQ._replace(**kw)
+    return run_gradient_based(loss_fn, p0, data, cfg, steps=steps,
+                              alpha=alpha)
+
+
+# ---------------------------------------------------------------------------
+# Fault streams: deterministic, independent, correctly distributed.
+# ---------------------------------------------------------------------------
+
+def test_fault_streams_deterministic_and_disjoint():
+    fc = FaultConfig(corrupt_p=0.3, crash_p=0.3)
+    a = np.asarray(corruption_mask(fc, 7, 64))
+    np.testing.assert_array_equal(a, np.asarray(corruption_mask(fc, 7, 64)))
+    # corruption and crash draw from different streams at the same step
+    b = np.asarray(crash_mask(fc, 7, 64))
+    assert not np.array_equal(a, b)
+    # different seeds decorrelate
+    c = np.asarray(corruption_mask(fc._replace(fault_seed=1), 7, 64))
+    assert not np.array_equal(a, c)
+    # frequency sanity over many rounds
+    draws = np.stack([np.asarray(corruption_mask(fc, k, 64))
+                      for k in range(30)])
+    assert 0.2 < draws.mean() < 0.4
+    ks = bitflip_keys(fc, 3, 8)
+    assert ks.shape[0] == 8
+    np.testing.assert_array_equal(np.asarray(ks),
+                                  np.asarray(bitflip_keys(fc, 3, 8)))
+
+
+def test_config_family_predicates():
+    assert not FaultConfig().active
+    assert FaultConfig(corrupt_p=0.1).grad_faulty
+    assert not FaultConfig(corrupt_p=0.1).wire_faulty
+    bf = FaultConfig(corrupt_p=0.1, corrupt_kind="bitflip")
+    assert bf.wire_faulty and not bf.grad_faulty
+    assert FaultConfig(crash_p=0.1).crashy and FaultConfig(crash_p=0.1).active
+
+
+def test_corrupt_grads_kinds():
+    g = {"w": jnp.ones((4, 3)), "b": 2.0 * jnp.ones((4,))}
+    mask = jnp.array([True, False, True, False])
+    for kind, expect in [("nan", np.nan), ("inf", np.inf),
+                         ("sign_flip", -1.0), ("scale", 50.0)]:
+        out = corrupt_grads(g, mask, FaultConfig(corrupt_p=1.0,
+                                                 corrupt_kind=kind))
+        w = np.asarray(out["w"])
+        if kind == "nan":
+            assert np.all(np.isnan(w[0])) and np.all(np.isnan(w[2]))
+        else:
+            np.testing.assert_allclose(w[0], expect)
+        # untouched workers keep the honest gradient
+        np.testing.assert_array_equal(w[1], np.ones((3,)))
+        np.testing.assert_array_equal(np.asarray(out["b"])[3], 2.0)
+
+
+def test_flip_wire_codes_stays_on_grid_and_flips_expected_fraction():
+    key = jax.random.PRNGKey(0)
+    g = {"x": jax.random.normal(key, (256,))}
+    qhat = {"x": jnp.zeros((256,))}
+    rt = get_backend("reference").roundtrip(g, qhat, 4)
+    flipped = flip_wire_codes(rt.delta, rt.R_tree, 4,
+                              jax.random.PRNGKey(7), 0.25)
+    d0, d1 = np.asarray(rt.delta["x"]), np.asarray(flipped["x"])
+    changed = np.mean(~np.isclose(d0, d1))
+    assert 0.1 < changed < 0.4          # ~25% of codes moved
+    # every flipped value is still a representable code: round-tripping the
+    # corrupted delta through the inverse maps is the identity
+    from repro.core.wire import codes_of_delta, delta_of_codes
+    R = rt.R_tree["x"]
+    again = delta_of_codes(codes_of_delta(flipped["x"], R, 4), R, 4)
+    np.testing.assert_allclose(np.asarray(again), d1, rtol=1e-6)
+    # an MSB flip moves a coordinate by 2*tau*R*2^(b-1) exactly
+    tau = 1.0 / (2.0 ** 4 - 1.0)
+    step = 2.0 * tau * float(R) * 8
+    moved = np.abs(d1 - d0)[~np.isclose(d0, d1)]
+    np.testing.assert_allclose(moved, step, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Crash-restart: state loss + reconciliation invariant.
+# ---------------------------------------------------------------------------
+
+def _comm_after_some_rounds(cfg, steps=10):
+    loss_fn, p0, data = quadratic_problem()
+    src = FullBatchSource(loss_fn, data)
+    eng = RoundEngine(src, cfg, alpha=0.3)
+    carry, _ = eng.run_from(eng.init_carry(p0), steps)
+    return eng, carry
+
+
+def _sum_qhat(cst):
+    return jax.tree.map(lambda q: jnp.sum(q.astype(jnp.float32), axis=0),
+                        cst.qhat)
+
+
+def test_apply_crashes_resets_and_reconciles():
+    cfg = LAQ._replace(lazy_rule="lasg_wk2", grad_mode="svrg",
+                       error_feedback=True, compressor="topk")
+    eng, carry = _comm_after_some_rounds(cfg)
+    params, cst, _ = carry
+    grads = jax.tree.map(
+        lambda l: jnp.ones_like(l, jnp.float32), cst.qhat)
+    mask = jnp.array([True] + [False] * 9)
+    out = apply_crashes(cst, mask, params, grads, cfg, reconcile=True)
+    # worker 0 lost everything; worker 1 kept everything
+    for tree in (out.qhat, out.error.residual):
+        leaf = jax.tree.leaves(tree)[0]
+        assert float(jnp.sum(jnp.abs(leaf[0]))) == 0.0
+    np.testing.assert_array_equal(np.asarray(out.qhat["x"][1]),
+                                  np.asarray(cst.qhat["x"][1]))
+    assert float(out.eps_hat_sq[0]) == 0.0
+    assert int(out.clocks[0]) == cfg.criterion.t_bar
+    assert float(out.lazy.stat_count[0]) == 0.0
+    # restarted snapshots: theta_last / svrg anchor at the current iterate,
+    # svrg mu at this round's gradient
+    np.testing.assert_allclose(np.asarray(out.lazy.theta_last["x"][0]),
+                               np.asarray(params["x"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.svrg.theta_anchor["x"][0]),
+                               np.asarray(params["x"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.svrg.mu_anchor["x"][0]), 1.0)
+    # the reconciled server keeps the recursion invariant exactly
+    np.testing.assert_allclose(np.asarray(out.server_agg["x"]),
+                               np.asarray(_sum_qhat(out)["x"]), atol=1e-4)
+    # server-side ledgers survive (the server never lost them)
+    np.testing.assert_array_equal(np.asarray(out.bits_spent),
+                                  np.asarray(cst.bits_spent))
+    assert int(out.total_uploads) == int(cst.total_uploads)
+
+
+def test_naive_crash_breaks_recursion_invariant():
+    eng, carry = _comm_after_some_rounds(LAQ)
+    params, cst, _ = carry
+    grads = jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), cst.qhat)
+    mask = jnp.array([True] + [False] * 9)
+    out = apply_crashes(cst, mask, params, grads, LAQ, reconcile=False)
+    ghost = np.asarray(cst.qhat["x"][0])
+    drift = np.asarray(out.server_agg["x"]) - np.asarray(_sum_qhat(out)["x"])
+    np.testing.assert_allclose(drift, ghost, atol=1e-4)
+
+
+def test_crash_run_recursion_invariant_end_to_end():
+    res_rec = run_laq(faults=FaultConfig(crash_p=0.05),
+                      defense=DefenseConfig(reconcile_crashes=True))
+    assert np.all(np.isfinite(np.asarray(res_rec.loss)))
+    # the engine's own final state keeps the invariant under crashes
+    loss_fn, p0, data = quadratic_problem()
+    cfg = LAQ._replace(faults=FaultConfig(crash_p=0.05))
+    eng = RoundEngine(FullBatchSource(loss_fn, data), cfg, alpha=0.3)
+    carry, _ = eng.run_from(eng.init_carry(p0), 40)
+    _, cst, _ = carry
+    np.testing.assert_allclose(np.asarray(cst.server_agg["x"]),
+                               np.asarray(_sum_qhat(cst)["x"]), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Defense: validation gate semantics + the rejected-upload accounting.
+# ---------------------------------------------------------------------------
+
+def test_defense_step_finite_check_and_gate():
+    dc = DefenseConfig(validate=True, gate_mult=4.0)
+    ds = jax.tree.map(lambda x: x[0], init_defense_state(dc, 1))
+    up = jnp.array(True)
+    # warm-up: finite accepted (EMA seeds), non-finite rejected
+    acc, sc, ds1 = defense_step(dc, ds, jnp.float32(2.0), jnp.float32(0.1), up)
+    assert bool(acc) and float(sc) == 1.0 and float(ds1.norm_count) == 1.0
+    acc, _, _ = defense_step(dc, ds, jnp.float32(jnp.nan), jnp.float32(0.1), up)
+    assert not bool(acc)
+    # a NaN eps-hat moment is rejected even when the payload energy is finite
+    # (the quantizer's R>0 guard turns a NaN gradient into a zero delta)
+    acc, _, _ = defense_step(dc, ds, jnp.float32(0.0), jnp.float32(jnp.nan), up)
+    assert not bool(acc)
+    # warmed gate: in-band accepted, out-of-band rejected + ledger advances
+    acc, _, ds2 = defense_step(dc, ds1, jnp.float32(3.0), jnp.float32(0.1), up)
+    assert bool(acc)
+    acc, _, ds3 = defense_step(dc, ds1, jnp.float32(1e6), jnp.float32(0.1), up)
+    assert not bool(acc) and int(ds3.rejects) == 1
+    # the EMA only advances on committed uploads
+    np.testing.assert_allclose(float(ds3.norm_ema), float(ds1.norm_ema))
+    # a skipped round (no transmission) neither commits nor rejects
+    acc, _, ds4 = defense_step(dc, ds1, jnp.float32(1e6), jnp.float32(0.1),
+                               jnp.array(False))
+    assert int(ds4.rejects) == 0
+    np.testing.assert_allclose(float(ds4.norm_count), float(ds1.norm_count))
+
+
+def test_defense_clip_scales_to_radius():
+    dc = DefenseConfig(clip_mult=2.0)
+    ds = jax.tree.map(lambda x: x[0], init_defense_state(dc, 1))
+    _, _, ds1 = defense_step(dc, ds, jnp.float32(1.0), jnp.float32(0.0),
+                             jnp.array(True))
+    acc, sc, _ = defense_step(dc, ds1, jnp.float32(100.0), jnp.float32(0.0),
+                              jnp.array(True))
+    assert bool(acc)                       # clip does not reject
+    # post-clip energy == clip_mult * ema exactly
+    np.testing.assert_allclose(100.0 * float(sc) ** 2, 2.0 * 1.0, rtol=1e-5)
+
+
+def test_rejected_upload_masked_like_skip_but_pays_bits():
+    """The central accounting contract: rejection == forced skip + honest
+    bits.  Inf-corrupted uploads are rejected by validation; the corrupted
+    worker's qhat must stay frozen, its clock must grow, and its wire bits
+    must still be charged."""
+    fc = FaultConfig(corrupt_p=0.3, corrupt_kind="inf", fault_seed=2)
+    loss_fn, p0, data = quadratic_problem()
+    cfg = LAQ._replace(faults=fc, defense=DefenseConfig(validate=True))
+    eng = RoundEngine(FullBatchSource(loss_fn, data), cfg, alpha=0.3)
+    carry = eng.init_carry(p0)
+    hit_reject = False
+    for step in range(12):
+        _, cst, _ = carry
+        corrupted = np.asarray(corruption_mask(fc, step, 10))
+        before = {"qhat": np.asarray(cst.qhat["x"]),
+                  "eps": np.asarray(cst.eps_hat_sq),
+                  "clocks": np.asarray(cst.clocks),
+                  "bits": np.asarray(cst.bits_spent),
+                  "rejects": np.asarray(cst.defense.rejects),
+                  "agg": np.asarray(cst.server_agg["x"])}
+        carry, _ = eng.run_from(carry, 1)
+        _, cst2, _ = carry
+        rejected = np.asarray(cst2.defense.rejects) > before["rejects"]
+        assert not np.any(rejected & ~corrupted)      # only corrupt rejected
+        for m in np.nonzero(rejected)[0]:
+            hit_reject = True
+            # masked exactly like a lazy skip ...
+            np.testing.assert_array_equal(np.asarray(cst2.qhat["x"])[m],
+                                          before["qhat"][m])
+            assert float(cst2.eps_hat_sq[m]) == before["eps"][m]
+            assert int(cst2.clocks[m]) == before["clocks"][m] + 1
+            # ... except the transmission bits are still charged
+            assert float(cst2.bits_spent[m]) > before["bits"][m]
+        # the server aggregate stays finite throughout
+        assert np.all(np.isfinite(np.asarray(cst2.server_agg["x"])))
+    assert hit_reject                      # the scenario actually fired
+
+
+def test_total_uploads_counts_rejected_transmissions():
+    fc = FaultConfig(corrupt_p=0.3, corrupt_kind="inf", fault_seed=2)
+    res_def = run_laq(steps=30, faults=fc,
+                      defense=DefenseConfig(validate=True))
+    # uploads (transmissions) include the rejected ones: the defended run
+    # pays at least as many as the clean run
+    res_clean = run_laq(steps=30)
+    assert float(res_def.cum_uploads[-1]) >= float(res_clean.cum_uploads[-1])
+    assert np.all(np.isfinite(np.asarray(res_def.loss)))
+
+
+def test_defense_inactive_is_bitwise_noop():
+    a = run_laq()
+    b = run_laq(defense=DefenseConfig(validate=True, gate_mult=6.0))
+    np.testing.assert_array_equal(np.asarray(a.loss), np.asarray(b.loss))
+    np.testing.assert_array_equal(np.asarray(a.cum_bits),
+                                  np.asarray(b.cum_bits))
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregation.
+# ---------------------------------------------------------------------------
+
+def test_robust_aggregate_median_and_trimmed_mean():
+    committed = jnp.array([True, True, True, True, True])
+    d = {"x": jnp.array([[1.0], [2.0], [3.0], [4.0], [100.0]])}
+    med = robust_aggregate("median", d, committed, 0.2)
+    np.testing.assert_allclose(np.asarray(med["x"]), [15.0])      # 3 * 5
+    tm = robust_aggregate("trimmed_mean", d, committed, 0.2)
+    np.testing.assert_allclose(np.asarray(tm["x"]), [15.0])       # mean(2,3,4)*5
+    # non-committed lanes are ignored, not averaged in
+    committed2 = jnp.array([True, True, True, True, False])
+    d2 = {"x": jnp.array([[1.0], [2.0], [3.0], [4.0], [1e30]])}
+    tm2 = robust_aggregate("trimmed_mean", d2, committed2, 0.2)
+    np.testing.assert_allclose(np.asarray(tm2["x"]), [10.0])      # mean(2,3)*4
+    # NaNs among the committed sort last and are trimmed as the largest
+    d3 = {"x": jnp.array([[1.0], [2.0], [3.0], [4.0], [jnp.nan]])}
+    tm3 = robust_aggregate("trimmed_mean", d3, committed, 0.2)
+    np.testing.assert_allclose(np.asarray(tm3["x"]), [15.0])
+    # degenerate cohort (n <= 2t) degrades to the plain masked sum
+    few = jnp.array([True, False, False, False, False])
+    tm4 = robust_aggregate("trimmed_mean", d, few, 0.2)
+    np.testing.assert_allclose(np.asarray(tm4["x"]), [1.0])
+
+
+def test_trimmed_mean_run_bounds_byzantine_damage():
+    fc = FaultConfig(corrupt_p=0.15, corrupt_kind="scale",
+                     corrupt_scale=-40.0)
+    undef = run_laq(kind="qgd", faults=fc)
+    trim = run_laq(kind="qgd", faults=fc, aggregator="trimmed_mean",
+                   trim_frac=0.2)
+    # the attack visibly damages the plain sum; trimming bounds it
+    assert float(np.nanmax(np.asarray(undef.loss))) \
+        > 10.0 * float(np.nanmax(np.asarray(trim.loss)))
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: rollback + escalation.
+# ---------------------------------------------------------------------------
+
+def test_watchdog_rolls_back_and_escalates(tmp_path):
+    loss_fn, p0, data = quadratic_problem()
+    src = FullBatchSource(loss_fn, data)
+    cfg = LAQ._replace(faults=FaultConfig(corrupt_p=0.1, corrupt_kind="inf"))
+    eng = RoundEngine(src, cfg, alpha=0.3)
+
+    def escalate(engine):
+        cfg2 = engine.cfg._replace(defense=DefenseConfig(validate=True))
+        return RoundEngine(src, cfg2, alpha=0.3)
+
+    res, log, carry = run_with_watchdog(
+        eng, p0, 60, ckpt_path=str(tmp_path / "wd.npz"),
+        wd=WatchdogConfig(chunk=10), escalate=escalate)
+    assert len(log["rollbacks"]) >= 1 and not log["gave_up"]
+    assert log["wasted_rounds"] >= 10 and log["wasted_bits"] > 0
+    loss = np.asarray(res.loss)
+    assert loss.shape[0] == 60 and np.all(np.isfinite(loss))
+    # the surviving trajectory converges (the escalated defense holds)
+    assert loss[-1] < loss[0]
+    # the final carry holds the defense ledger with actual rejections
+    _, cst, _ = carry
+    assert cst.defense.rejects is not None
+    assert int(jnp.sum(cst.defense.rejects)) >= 1
+
+
+def test_watchdog_healthy_run_is_single_pass(tmp_path):
+    loss_fn, p0, data = quadratic_problem()
+    eng = RoundEngine(FullBatchSource(loss_fn, data), LAQ, alpha=0.3)
+    res, log, _ = run_with_watchdog(eng, p0, 30,
+                                    ckpt_path=str(tmp_path / "wd.npz"),
+                                    wd=WatchdogConfig(chunk=10))
+    assert log["rollbacks"] == [] and log["wasted_rounds"] == 0
+    ref = run_laq(steps=30)
+    np.testing.assert_array_equal(np.asarray(res.loss), np.asarray(ref.loss))
+    np.testing.assert_array_equal(np.asarray(res.cum_bits),
+                                  np.asarray(ref.cum_bits))
+
+
+def test_watchdog_gives_up_without_escalation(tmp_path):
+    # deterministic fault streams: a plain replay hits the identical fault,
+    # so an inescapable divergence must end in gave_up, not an endless loop
+    loss_fn, p0, data = quadratic_problem()
+    cfg = LAQ._replace(faults=FaultConfig(corrupt_p=0.5, corrupt_kind="inf"))
+    eng = RoundEngine(FullBatchSource(loss_fn, data), cfg, alpha=0.3)
+    res, log, _ = run_with_watchdog(eng, p0, 40,
+                                    ckpt_path=str(tmp_path / "wd.npz"),
+                                    wd=WatchdogConfig(chunk=10,
+                                                      max_rollbacks=2))
+    assert log["gave_up"] and len(log["rollbacks"]) == 3

@@ -363,3 +363,66 @@ def test_rules_run_deterministically_too(rule):
                          criterion=CriterionConfig(D=10, xi=0.08, t_bar=100))
     r = run_gradient_based(loss_fn, p0, data, cfg, steps=300, alpha=0.3)
     assert float(r.grad_norm_sq[-1]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# NaN hardening.
+# ---------------------------------------------------------------------------
+
+def test_ps_lhs_guard_pins_inf_times_zero():
+    """The explicit isfinite guard in rule_lhs: before the first ratio
+    observation L_sq is +inf while the drift can be exactly 0, and
+    inf * 0 = nan would make the <= comparison silently False (an upload,
+    but by accident).  The guard must return +inf — a *forced* upload — and
+    never NaN."""
+    from repro.core.lazy_rules import rule_lhs
+    lasg = LasgConfig()
+    lhs = rule_lhs("lasg_ps", lasg, drift_sq=jnp.float32(0.0),
+                   L_sq=jnp.float32(jnp.inf))
+    assert not np.isnan(float(lhs)) and np.isposinf(float(lhs))
+    # finite smoothness: the ordinary product
+    lhs2 = rule_lhs("lasg_ps", lasg, drift_sq=jnp.float32(2.0),
+                    L_sq=jnp.float32(3.0))
+    np.testing.assert_allclose(float(lhs2), lasg.c_ps * 6.0)
+
+
+def test_nan_gradient_poisons_criterion_without_defense():
+    """A NaN gradient does NOT reach the server aggregate on the quantized
+    path — the R > 0 guard turns it into a zero delta — but its
+    quantization-error moment err_sq = ||g - qhat||^2 = NaN commits into
+    eps_hat_sq, turning the worker's criterion RHS NaN: skips are impossible
+    (NaN <= x is False) until the next committed upload overwrites the
+    moment, so every poison event silently costs forced uploads.  Upload
+    validation (DefenseConfig.validate) finite-checks that moment and
+    rejects the poison; the defended run never carries a NaN moment and
+    completes at the clean run's loss."""
+    from repro.core import DefenseConfig, FaultConfig, RoundEngine
+    from repro.core.engine import FullBatchSource
+    loss_fn, p0, data = quadratic_problem()
+    crit = CriterionConfig(D=10, xi=0.08, t_bar=50)
+    fc = FaultConfig(corrupt_p=0.02, corrupt_kind="nan", fault_seed=1)
+
+    def final_state(cfg):
+        eng = RoundEngine(FullBatchSource(loss_fn, data), cfg, alpha=0.3)
+        carry, rr = eng.run_from(eng.init_carry(p0), 60)
+        return carry[1], rr
+
+    base = StrategyConfig(kind="laq", bits=4, criterion=crit)
+    cst_clean, rr_clean = final_state(base)
+    cst_bad, rr_bad = final_state(base._replace(faults=fc))
+    cst_def, rr_def = final_state(base._replace(
+        faults=fc, defense=DefenseConfig(validate=True)))
+
+    # undefended: the poison lands in eps_hat_sq (params stay finite), and
+    # the faulty runs pay more uploads than the clean one either way
+    assert np.isnan(np.asarray(cst_bad.eps_hat_sq)).any()
+    assert np.all(np.isfinite(np.asarray(rr_bad.loss)))
+    assert int(cst_bad.total_uploads) > int(cst_clean.total_uploads)
+    assert int(cst_def.total_uploads) > int(cst_clean.total_uploads)
+
+    # defended: every moment stays finite, the run completes at the clean
+    # loss, and the rejections were actually exercised
+    assert np.all(np.isfinite(np.asarray(cst_def.eps_hat_sq)))
+    assert int(jnp.sum(cst_def.defense.rejects)) >= 1
+    np.testing.assert_allclose(float(rr_def.loss[-1]),
+                               float(rr_clean.loss[-1]), rtol=0.05)

@@ -232,3 +232,63 @@ def test_error_state_worker_dim_squeeze_unsqueeze(n_workers):
                             squeezed, sub)
     assert_trees_bit_identical(sub, restored)
     _ = n_workers
+
+
+# ---------------------------------------------------------------------------
+# DefenseState (fault-tolerant aggregation) — same None-gating discipline.
+# ---------------------------------------------------------------------------
+
+def cfg_def(defense):
+    from repro.core import DefenseConfig
+    return StrategyConfig(kind="laq", bits=4,
+                          defense=DefenseConfig(**defense))
+
+
+def test_defense_state_leaf_count_gating():
+    """An inactive DefenseConfig adds ZERO pytree leaves: undefended runs
+    keep the exact pre-robustness CommState structure (golden-parity and
+    sharded in/out specs depend on it)."""
+    from repro.core import DefenseState, init_defense_state, DefenseConfig
+    tmpl = template((2, 2), (2,))
+    base = len(jax.tree_util.tree_leaves(init_comm_state(tmpl, 3, cfg_def({}))))
+    off = len(jax.tree_util.tree_leaves(
+        init_comm_state(tmpl, 3, cfg_def({"reconcile_crashes": False}))))
+    assert off == base                      # reconcile needs no state
+    for knobs in ({"validate": True}, {"gate_mult": 4.0}, {"clip_mult": 2.0}):
+        n = len(jax.tree_util.tree_leaves(
+            init_comm_state(tmpl, 3, cfg_def(knobs))))
+        assert n == base + 3, knobs         # norm_ema + norm_count + rejects
+    # inactive config produces the all-None state object
+    assert init_defense_state(DefenseConfig(), 3) == DefenseState(None, None,
+                                                                  None)
+
+
+def test_defense_state_worker_dim_and_roundtrip():
+    from repro.core import DefenseConfig, init_defense_state
+    ds = init_defense_state(DefenseConfig(validate=True, gate_mult=4.0), 5)
+    assert ds.norm_ema.shape == (5,) and ds.rejects.dtype == jnp.int32
+    sq = jax.tree.map(lambda x: x[0], ds)
+    assert sq.norm_ema.shape == ()
+    un = jax.tree.map(lambda x: x[None], sq)
+    assert un.norm_count.shape == (1,)
+    leaves, treedef = jax.tree_util.tree_flatten(ds)
+    assert_trees_bit_identical(ds, jax.tree_util.tree_unflatten(treedef,
+                                                                leaves))
+    # per-shard allocation (sharded init path)
+    shard = init_defense_state(DefenseConfig(validate=True), 5,
+                               worker_dim=False)
+    assert shard.norm_ema.shape == ()
+
+
+def test_defense_state_gating_is_structural():
+    """Defended and undefended CommStates have different treedefs, so a
+    mixed zip cannot silently pair mismatched leaves: any map that touches
+    both sides fails loudly (the None rides through as the whole subtree,
+    never as a fabricated zero)."""
+    tmpl = template((3, 3), (3,))
+    s_on = init_comm_state(tmpl, 2, cfg_def({"validate": True}))
+    s_off = init_comm_state(tmpl, 2, cfg_def({}))
+    assert (jax.tree_util.tree_structure(s_on)
+            != jax.tree_util.tree_structure(s_off))
+    with pytest.raises(TypeError):
+        jax.tree.map(lambda a, b: a + b, s_on, s_off)

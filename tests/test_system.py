@@ -193,6 +193,25 @@ out["vr_theta_last_set"] = float(max(jax.tree.leaves(jax.tree.map(
 out["vr_mu_set"] = float(max(jax.tree.leaves(jax.tree.map(
     lambda l: float(jnp.max(jnp.abs(l))), v1.comm.svrg.mu_anchor))))
 
+# upload defense (PR-7, core/defense.py): DefenseState threads through the
+# sharded step on both wires; at fault rate 0 validation+gate must be a
+# bitwise no-op vs the undefended run, and float vs packed stay identical
+from repro.core.defense import DefenseConfig
+df = strategy._replace(defense=DefenseConfig(validate=True, gate_mult=6.0))
+d1, d2 = fresh(df), fresh(df)
+jdf = jax.jit(make_train_step(cfg, mesh, df, opt, lr=1e-2,
+                              worker_axes=wa, wire="float"))
+jdp = jax.jit(make_train_step(cfg, mesh, df, opt, lr=1e-2,
+                              worker_axes=wa, wire="packed"))
+s0 = fresh()
+for _ in range(3):
+    d1, m = jdf(d1, batch)
+    d2, _ = jdp(d2, batch)
+    s0, _ = jstep(s0, batch)
+out["defense_noop_max_diff"] = max_param_diff(d1, s0)
+out["defense_packed_max_diff"] = max_param_diff(d1, d2)
+out["defense_rejects"] = int(jnp.sum(d1.comm.defense.rejects))
+
 # partial participation (PR-5 round engine): the replicated cohort mask is
 # indexed per shard by the worker-index input (axis_index would lower to
 # PartitionId, which the 0.4.x partial-auto partitioner rejects)
@@ -257,6 +276,11 @@ def test_sharded_integration_subprocess():
     assert np.all(np.isfinite(out["ps_losses"])), out["ps_losses"]
     assert out["ps_anchor_min"] > 0.0, out
     assert out["ps_theta_last_set"] > 0.0, out
+    # defense on a clean run through the mesh: bitwise no-op vs undefended,
+    # float/packed identical, nothing rejected
+    assert out["defense_noop_max_diff"] == 0.0, out
+    assert out["defense_packed_max_diff"] == 0.0, out
+    assert out["defense_rejects"] == 0, out
     # WK2 + streaming svrg + 1/t schedule on the mesh: finite losses, the
     # stale-iterate snapshot and the svrg anchor's mu were both populated
     assert np.all(np.isfinite(out["vr_losses"])), out["vr_losses"]
