@@ -1,0 +1,225 @@
+"""Bits-to-perplexity frontier on a real language model.
+
+The headline LM experiment of this repo: the full LAQ protocol trains a
+tiny next-token transformer (the same micro config the LM test tier pins)
+end to end through the engine's ``AccumulatingSource`` — each worker's
+local corpus streamed through the gradient-accumulation fold — and the
+frontier compares what each method pays on the wire to reach the QGD
+perplexity floor.  ``exp(loss)`` is perplexity throughout
+(``lm_worker_loss`` normalizes so the engine's global objective is the
+global mean token cross-entropy).
+
+Workload facts this frontier documents (all seeded, deterministic rows use
+the full local corpus so the runs are exactly reproducible):
+
+* the LM pins the dense grid at **b=8**: at b=4 the per-leaf quantization
+  error inflates the RHS of (7a) until every round skips and the run
+  diverges — which is also why the radius-scheduled A-LAQ row (width
+  collapse as R decays) stalls above the floor here instead of harvesting
+  slack like it does on the strongly convex regression;
+* both lazy methods need the **1/t stepsize** to skip at the floor: with a
+  constant alpha the aggregate keeps oscillating, the innovation never
+  decays, and LAQ degenerates to QGD-with-occasional-skips.
+
+Claims checked:
+
+* **LAQ reaches the QGD floor target and spends fewer total wire bits**
+  (tiny + full);
+* **bits-to-target: LAQ < 0.5x QGD** (full horizon only; the tiny run's
+  loose target is reached before laziness pays, so tiny records SKIP);
+* **A-LAQ's width collapse stalls above the floor** fixed-b8 LAQ reaches
+  (full only) — the negative result that pins the b=8 grid requirement;
+* **EF-topk reaches the target at < 0.5x LAQ's bits-to-target** — at 5%
+  density the sparse payload dominates even LAQ's skipping;
+* **SLAQ (WK rule, minibatch source) skips and spends fewer total bits
+  than QSGD** while landing within 1.2x of the QSGD tail loss;
+* **training works**: final LAQ perplexity is far below the initial one.
+
+Emits ``BENCH_lm.json`` at the repo root (CI lm-smoke runs the ``--tiny``
+variant and uploads it as an artifact; the committed file is a full run).
+
+    PYTHONPATH=src python -m benchmarks.lm_frontier [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CriterionConfig, EtaSchedule, RoundEngine,
+                        StrategyConfig)
+from repro.core.adaptive import BitSchedule
+from repro.core.engine import AccumulatingSource
+from repro.data import lm_worker_corpus
+from repro.models import init_params, lm_worker_loss
+from repro.models.config import ModelConfig
+
+from .lasg_frontier import first_reach
+
+STEPS = 150
+TINY_STEPS = 50           # CI smoke: before laziness pays off, so tiny
+TINY_TARGET_MULT = 1.10   # gates on the loose target + total-bits claims
+TARGET_MULT = 1.025
+ALPHA = 0.5
+W = 4
+ACCUM = 2                 # microbatches per worker through the fold
+BITS = 8                  # the dense-grid floor this workload needs
+EF_K = 0.05
+
+CFG = ModelConfig(name="lm-micro", arch_type="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                  q_chunk=16, kv_chunk=8,
+                  param_dtype=jnp.float32, compute_dtype=jnp.float32)
+CRIT = CriterionConfig(D=10, xi=0.08, t_bar=100)
+ETA = EtaSchedule(kind="inv_t", t0=30.0)
+
+ROOT_JSON = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         os.pardir, "BENCH_lm.json"))
+
+
+def _methods():
+    base = dict(bits=BITS, per_leaf_radius=True, criterion=CRIT,
+                eta_schedule=ETA)
+    det = {
+        "qgd": StrategyConfig(kind="qgd", **base),
+        "laq": StrategyConfig(kind="laq", **base),
+        "alaq": StrategyConfig(kind="laq", **base, bit_schedule=BitSchedule(
+            kind="radius", grid=(2, 4, 8), threshold_mode="rel",
+            thresholds=(0.05, 0.5))),
+        "ef_topk": StrategyConfig(kind="laq", bits=4, per_leaf_radius=True,
+                                  criterion=CRIT, eta_schedule=ETA,
+                                  compressor="topk", compressor_k=EF_K,
+                                  error_feedback=True),
+    }
+    sto = {
+        "qsgd": StrategyConfig(kind="qgd", bits=4, per_leaf_radius=True,
+                               criterion=CRIT, eta_schedule=ETA),
+        "slaq": StrategyConfig(kind="laq", bits=4, per_leaf_radius=True,
+                               criterion=CRIT, eta_schedule=ETA,
+                               lazy_rule="lasg_wk"),
+    }
+    return det, sto
+
+
+def run(out_rows, results, tiny: bool = False):
+    corpus = lm_worker_corpus(0, W, 16, 16, CFG.vocab)
+    loss_fn = lm_worker_loss(CFG, W)
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    steps = TINY_STEPS if tiny else STEPS
+
+    def det_source():
+        return AccumulatingSource(loss_fn, corpus, deterministic=True,
+                                  accum=ACCUM, scale=1.0)
+
+    def sto_source():
+        return AccumulatingSource(loss_fn, corpus, batch=8, seed=0,
+                                  accum=ACCUM, scale=1.0)
+
+    det_cfgs, sto_cfgs = _methods()
+    runs = {name: RoundEngine(det_source(), cfg, alpha=ALPHA).run(params,
+                                                                  steps)
+            for name, cfg in det_cfgs.items()}
+    runs.update({name: RoundEngine(sto_source(), cfg, alpha=ALPHA)
+                 .run(params, steps) for name, cfg in sto_cfgs.items()})
+
+    floor = float(np.mean(np.asarray(runs["qgd"].loss)[-5:]))
+    target = (TINY_TARGET_MULT if tiny else TARGET_MULT) * floor
+
+    frontier = {}
+    for name, r in runs.items():
+        at = first_reach(r, target)
+        tail = float(np.mean(np.asarray(r.loss)[-5:]))
+        frontier[name] = dict(
+            final_loss=float(r.loss[-1]),
+            final_ppl=float(np.exp(min(float(r.loss[-1]), 30.0))),
+            tail_loss=tail,
+            total_uploads=int(r.cum_uploads[-1]),
+            total_bits=float(r.cum_bits[-1]),
+            uploads_to_target=None if at is None else at[0],
+            bits_to_target=None if at is None else at[1])
+        out_rows.append((f"lm_frontier_{name}", float(r.cum_bits[-1]),
+                         f"ppl={frontier[name]['final_ppl']:.3f};"
+                         f"to_target={at}"))
+
+    def bits_to(name):
+        v = frontier[name]["bits_to_target"]
+        return np.inf if v is None else v
+
+    init_ppl = float(np.exp(float(runs["laq"].loss[0])))
+    checks = {
+        "LAQ reaches the QGD floor target in fewer total wire bits":
+            frontier["laq"]["bits_to_target"] is not None
+            and frontier["laq"]["total_bits"] < frontier["qgd"]["total_bits"],
+        # the strongest form needs the full horizon: the tiny target is
+        # loose enough that QGD reaches it before laziness pays
+        "bits-to-target: LAQ < 0.5x QGD":
+            None if tiny else bits_to("laq") < 0.5 * bits_to("qgd"),
+        # negative result: on the LM the radius schedule's width collapse
+        # (R decays -> grid drops below b=8) stalls above the floor that
+        # fixed-b8 LAQ reaches — the workload pins the grid width
+        "A-LAQ width collapse stalls above the floor LAQ reaches":
+            None if tiny else (frontier["alaq"]["bits_to_target"] is None
+                               and frontier["laq"]["bits_to_target"]
+                               is not None),
+        "EF-topk reaches the target at < 0.5x LAQ's bits-to-target":
+            bits_to("ef_topk") < 0.5 * bits_to("laq"),
+        "SLAQ skips and spends fewer total bits than QSGD":
+            frontier["slaq"]["total_uploads"] < W * steps
+            and frontier["slaq"]["total_bits"]
+            < frontier["qsgd"]["total_bits"],
+        "SLAQ tail loss lands within 1.2x of the QSGD tail":
+            frontier["slaq"]["tail_loss"]
+            <= 1.2 * frontier["qsgd"]["tail_loss"],
+        "LM actually trains: final LAQ perplexity << initial":
+            frontier["laq"]["final_ppl"] < 0.25 * init_ppl,
+    }
+    results["lm_frontier"] = dict(target_loss=target, qgd_floor=floor,
+                                  floor_ppl=float(np.exp(floor)),
+                                  init_ppl=init_ppl, steps=steps,
+                                  accum=ACCUM, workers=W, **frontier)
+    results["lm_frontier/claims"] = checks
+
+    with open(ROOT_JSON, "w") as f:
+        json.dump({"tiny": tiny, "steps": steps, "target_loss": target,
+                   "qgd_floor": floor, "floor_ppl": float(np.exp(floor)),
+                   "rows": [dict(name=n, **row)
+                            for n, row in frontier.items()],
+                   "checks": checks}, f, indent=1)
+    return checks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer rounds, looser target")
+    args = ap.parse_args()
+    out_rows, results = [], {}
+    checks = run(out_rows, results, tiny=args.tiny)
+    f = results["lm_frontier"]
+    print(f"target loss = {f['target_loss']:.4f} "
+          f"({TINY_TARGET_MULT if args.tiny else TARGET_MULT}x QGD floor "
+          f"{f['qgd_floor']:.4f} = ppl {f['floor_ppl']:.3f}, "
+          f"steps={f['steps']}, W={W}, accum={ACCUM})")
+    print(f"{'method':9s} {'final ppl':>10s} {'uploads':>8s} "
+          f"{'bits':>11s} {'uploads@tgt':>12s} {'bits@tgt':>11s}")
+    for name in ("qgd", "laq", "alaq", "ef_topk", "qsgd", "slaq"):
+        row = f[name]
+        ut, bt = row["uploads_to_target"], row["bits_to_target"]
+        print(f"{name:9s} {row['final_ppl']:10.3f} "
+              f"{row['total_uploads']:8d} {row['total_bits']:11.3e} "
+              f"{(str(ut) if ut is not None else 'never'):>12s} "
+              f"{(f'{bt:.3e}' if bt is not None else 'never'):>11s}")
+    ok = True
+    for kk, v in checks.items():
+        print(f"[{'SKIP' if v is None else 'PASS' if v else 'FAIL'}] {kk}")
+        ok &= v is None or bool(v)
+    print(f"-> {ROOT_JSON}")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,8 +28,9 @@ import traceback
 
 def _modules(claims_only: bool):
     from . import (adaptive_sweep, bits_sweep, convergence, ef_frontier,
-                   fault_frontier, lasg_frontier, participation_frontier,
-                   table2_gradient, table3_stochastic, wire_microbench)
+                   fault_frontier, lasg_frontier, lm_frontier,
+                   participation_frontier, table2_gradient,
+                   table3_stochastic, wire_microbench)
     mods = [("table2", table2_gradient), ("table3", table3_stochastic),
             ("convergence", convergence), ("bits_sweep", bits_sweep),
             ("adaptive_sweep", adaptive_sweep),
@@ -37,6 +38,7 @@ def _modules(claims_only: bool):
             ("participation_frontier", participation_frontier),
             ("ef_frontier", ef_frontier),
             ("fault_frontier", fault_frontier),
+            ("lm_frontier", lm_frontier),
             ("wire_microbench", wire_microbench)]
     if claims_only:
         # timing-only modules: their checks are perf trajectories, not

@@ -3,6 +3,13 @@
     # smoke (default): ~7M params, 8 forced host devices, mesh (4 data, 2 model)
     PYTHONPATH=src python examples/train_lm.py --steps 50
 
+    # stochastic lazy rule + gradient accumulation (the AccumulatingSource
+    # fold shared with core/engine.py; 2 sequential microbatches per worker)
+    PYTHONPATH=src python examples/train_lm.py --steps 20 --strategy slaq --accum 2
+
+    # error-feedback top-k compression (pure data-parallel mesh, float wire)
+    PYTHONPATH=src python examples/train_lm.py --steps 20 --strategy ef
+
     # ~100M-parameter run (slow on CPU; the shape MaxText-style frameworks
     # train per-host before scaling the same code to the pod mesh)
     PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
@@ -27,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint
 from repro.core.strategy import StrategyConfig
 from repro.data import lm_batches
+from repro.launch.mesh import n_workers_of
 from repro.launch.train import (init_train_state, make_train_step,
                                 train_state_specs)
 from repro.models.config import ModelConfig
@@ -41,6 +49,29 @@ PRESETS = {
                         head_dim=64, d_ff=2048, q_chunk=256, kv_chunk=128),
 }
 
+# CLI strategy -> StrategyConfig.  The first four are the paper's
+# deterministic kinds; the rest exercise the stochastic levers on the LM
+# step: slaq = variance-aware LASG-WK rule, wk2 = same-sample noise-free
+# rule (second backprop), svrg = variance-reduced local gradients, ef =
+# error-feedback top-k compression (float wire, data-parallel mesh).
+STRATEGIES = ("gd", "qgd", "lag", "laq", "slaq", "wk2", "svrg", "ef")
+
+
+def build_strategy(name: str, bits: int) -> StrategyConfig:
+    base = dict(bits=bits, per_leaf_radius=True)
+    if name in ("gd", "qgd", "lag", "laq"):
+        return StrategyConfig(kind=name, **base)
+    if name == "slaq":
+        return StrategyConfig(kind="laq", lazy_rule="lasg_wk", **base)
+    if name == "wk2":
+        return StrategyConfig(kind="laq", lazy_rule="lasg_wk2", **base)
+    if name == "svrg":
+        return StrategyConfig(kind="laq", grad_mode="svrg", **base)
+    if name == "ef":
+        return StrategyConfig(kind="laq", compressor="topk",
+                              compressor_k=0.05, error_feedback=True, **base)
+    raise ValueError(name)
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -49,29 +80,43 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--strategy", default="laq",
-                    choices=["gd", "qgd", "lag", "laq"])
+    ap.add_argument("--strategy", default="laq", choices=list(STRATEGIES))
     ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--accum", type=int, default=1,
+                    help="sequential microbatches per worker (gradient "
+                         "accumulation; activation memory / accum)")
     ap.add_argument("--wire", default="float", choices=["float", "packed"])
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
 
     cfg = PRESETS[args.preset]
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
-    strategy = StrategyConfig(kind=args.strategy, bits=args.bits,
-                              per_leaf_radius=True)
-    opt = adamw(weight_decay=0.01)
+    strategy = build_strategy(args.strategy, args.bits)
+    if strategy.compressed or strategy.error_feedback:
+        # the sparse pipeline needs a pure data-parallel mesh + float wire
+        # (launch/train.py); all eight host devices become LAQ workers
+        mesh_shape = (8, 1)
+        assert args.wire == "float", "--strategy ef requires --wire float"
+    else:
+        mesh_shape = (4, 2)
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
     wa = ("data",)
+    W = n_workers_of(mesh, wa)
+    assert args.batch % W == 0, f"--batch must be divisible by {W} workers"
+    assert (args.batch // W) % args.accum == 0, \
+        "--accum must divide the per-worker batch"
+    opt = adamw(weight_decay=0.01)
 
     state = init_train_state(jax.random.PRNGKey(0), cfg, mesh, strategy, opt, wa)
     n_par = sum(x.size for x in jax.tree.leaves(state.params))
     print(f"model={cfg.name} params={n_par/1e6:.1f}M strategy={args.strategy}"
-          f"/{args.wire} mesh={dict(data=4, model=2)}")
+          f"/{args.wire} accum={args.accum} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
     specs = train_state_specs(cfg, mesh, strategy, opt, wa)
     state = jax.tree.map(lambda x, s: jax.device_put(x, s.sharding), state, specs)
 
     step_fn = jax.jit(make_train_step(cfg, mesh, strategy, opt, lr=args.lr,
-                                      worker_axes=wa, wire=args.wire))
+                                      worker_axes=wa, wire=args.wire,
+                                      microbatch=args.accum))
     batches = lm_batches(0, args.batch, args.seq, cfg.vocab,
                          sharding=NamedSharding(mesh, P("data", None)))
 
@@ -86,10 +131,10 @@ def main():
     if args.ckpt:
         save_checkpoint(args.ckpt, jax.device_get(state.params), args.steps)
         print(f"checkpoint -> {args.ckpt}")
-    skip_rate = 1 - float(state.comm.total_uploads) / (4 * args.steps)
+    skip_rate = 1 - float(state.comm.total_uploads) / (W * args.steps)
     print(f"done: final loss {float(m.loss):.4f}; worker-upload skip rate "
           f"{skip_rate:.1%}; total wire bits {float(state.comm.total_bits):.3e} "
-          f"(dense GD would be {32 * n_par * 4 * args.steps:.3e})")
+          f"(dense GD would be {32 * n_par * W * args.steps:.3e})")
 
 
 if __name__ == "__main__":

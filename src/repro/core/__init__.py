@@ -76,9 +76,10 @@ from .compressors import (COMPRESSORS, CodePacker, Compressor,
                           init_error_state, make_compressor, qsgd_compress,
                           reference_sparse_quantize, select_support,
                           ssgd_compress, static_k)
-from .engine import (PARTICIPATION, DelayedParticipation, FullBatchSource,
-                     FullParticipation, MarkovParticipation, MinibatchSource,
-                     RoundEngine, RunResult, SampledParticipation,
+from .engine import (PARTICIPATION, AccumulatingSource, DelayedParticipation,
+                     FullBatchSource, FullParticipation, MarkovParticipation,
+                     MinibatchSource, RoundEngine, RunResult,
+                     SampledParticipation, accumulate_loss_grads,
                      apply_svrg_exact, apply_svrg_streaming, broadcast_w,
                      make_participation, participation_mask,
                      stale_side_grads)

@@ -11,7 +11,11 @@ into pluggable stages so a new rule plugs in once:
 * :class:`GradientSource` — where this round's per-worker gradients come
   from.  ``FullBatchSource`` (deterministic GD/QGD/LAG/LAQ: the full local
   gradient), ``MinibatchSource`` (SGD family: fold_in-keyed minibatches,
-  ``(n/B)``-scaled).  The SVRG correction and the WK2 same-sample stale
+  ``(n/B)``-scaled), ``AccumulatingSource`` (the LM-scale worker: the same
+  minibatch stream folded over sequential microbatches via
+  :func:`accumulate_loss_grads`, with a ``per_device`` parallelism knob and
+  a ``deterministic`` full-corpus mode).  The SVRG correction and the WK2
+  same-sample stale
   backprop are *engine* stages expressed through the source's ``eval_at``,
   so their math lives here exactly once (:func:`apply_svrg_exact` /
   :func:`apply_svrg_streaming` / :func:`stale_side_grads` — the streaming
@@ -201,6 +205,180 @@ class MinibatchSource:
         # diagnostic wants the TRUE gradient norm, which costs its own
         # (full-data) backprop here — the full-batch source reuses its
         # exact gradients instead
+        return tree_sq_norm(jax.grad(self.global_loss)(params))
+
+
+def accumulate_loss_grads(loss_fn, params, microbatches, *, unroll=False):
+    """Fold ``(loss, grad)`` over a leading microbatch axis in one scan — the
+    levanter ``accumulate_gradients_sharded`` idiom: per-microbatch
+    ``value_and_grad`` with an f32 running *mean* (``acc + x / n``), so the
+    peak activation memory is one microbatch's backprop regardless of the
+    logical batch size.
+
+    ``loss_fn(params, microbatch) -> scalar`` must be **mean-convention**
+    (a per-example/per-token mean): the mean of equal-sized microbatch means
+    equals the full-batch mean, so the fold reproduces the full-batch
+    gradient up to f32 reduction order (one-microbatch folds are exact —
+    add-zero and divide-by-one are identity in IEEE).  Shared by
+    :class:`AccumulatingSource` and the sharded step's ``loss_and_grads``
+    (launch/train.py), so both execution modes accumulate with identical
+    arithmetic.  ``unroll=True`` replays the fold as a Python loop (the
+    sharded step's probe mode, where scan bodies would be cost-counted
+    once).
+    """
+    n = jax.tree_util.tree_leaves(microbatches)[0].shape[0]
+
+    def body(carry, b):
+        loss_acc, g_acc = carry
+        l, g = jax.value_and_grad(loss_fn)(params, b)
+        g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) / n,
+                             g_acc, g)
+        return (loss_acc + l / n, g_acc), None
+
+    zero = (jnp.zeros((), jnp.float32),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    if not unroll:
+        return jax.lax.scan(body, zero, microbatches)[0]
+    carry = zero
+    for i in range(n):
+        carry, _ = body(carry, jax.tree.map(lambda x: x[i], microbatches))
+    return carry
+
+
+class AccumulatingSource:
+    """Gradient-accumulating minibatch source — the LM-scale worker.
+
+    Each round every worker draws ``batch`` local examples from the SAME
+    fold_in key stream as :class:`MinibatchSource` (stream 0, identical
+    indices for identical ``(seed, batch)``), then folds loss+grad over
+    ``accum`` sequential microbatches of ``batch / accum`` examples via
+    :func:`accumulate_loss_grads` instead of one monolithic backprop.
+    ``per_device`` is the parallelism knob expressed the levanter way:
+    the largest number of examples evaluated at once, with
+    ``accum = batch // per_device`` derived from it.
+
+    Two contracts, both pinned by tests/test_lm_engine.py:
+
+    * ``accum=1`` is **bit-identical** to ``MinibatchSource`` (the fold
+      degenerates to add-zero / divide-by-one); ``accum>1`` matches to f32
+      reduction order (pinned-ulp) for mean-convention losses.
+    * ``deterministic=True`` ignores the sampler and streams the whole
+      local corpus through the fold each round — full-batch LAQ (paper
+      Table 2 semantics, :class:`FullBatchSource` gradients) at the
+      accumulation memory profile; ``stochastic`` reports False so the
+      engine treats it as a deterministic method.
+
+    ``scale`` multiplies the folded gradient; the default ``n_local/batch``
+    matches ``MinibatchSource`` (sum-convention global objectives).  LM
+    losses are token means with the ``1/W`` global normalization already in
+    ``loss_fn`` (see ``repro.models.lm_worker_loss``) — pass ``scale=1.0``.
+    """
+
+    def __init__(self, loss_fn, worker_data: Pytree, *, batch: Optional[int] = None,
+                 seed: int = 0, accum: int = 1, per_device: Optional[int] = None,
+                 deterministic: bool = False, scale: Optional[float] = None):
+        self.loss_fn = loss_fn
+        self.worker_data = worker_data
+        leaves = jax.tree_util.tree_leaves(worker_data)
+        self.n_workers = leaves[0].shape[0]
+        self.n_local = leaves[0].shape[1]
+        if deterministic:
+            batch = self.n_local
+        assert batch is not None, "batch is required for stochastic mode"
+        if per_device is not None:
+            assert batch % per_device == 0, (batch, per_device)
+            accum = batch // per_device
+        assert batch % accum == 0, (batch, accum)
+        self.batch = batch
+        self.accum = accum
+        self.micro = batch // accum
+        self.deterministic = deterministic
+        self.stochastic = not deterministic
+        self.scale = (self.n_local / batch) if scale is None else scale
+        self._key0 = jax.random.PRNGKey(seed)
+        self._worker_ids = jnp.arange(self.n_workers)
+
+    def stream_keys(self, stream: int, step):
+        ks = jax.random.fold_in(jax.random.fold_in(self._key0, stream), step)
+        return jax.vmap(lambda m: jax.random.fold_in(ks, m))(self._worker_ids)
+
+    def sample(self, step):
+        """[W, accum, micro, ...] microbatches.  Stochastic mode draws the
+        SAME ``(batch,)`` index vector as ``MinibatchSource`` and reshapes
+        it into microbatches; deterministic mode chunks the whole corpus."""
+        if self.deterministic:
+            return jax.tree.map(
+                lambda x: x.reshape((x.shape[0], self.accum, self.micro)
+                                    + x.shape[2:]), self.worker_data)
+
+        def sample1(data_m, key):
+            idx = jax.random.randint(key, (self.batch,), 0, self.n_local)
+            idx = idx.reshape(self.accum, self.micro)
+            return jax.tree.map(lambda x: x[idx], data_m)
+
+        return jax.vmap(sample1)(self.worker_data, self.stream_keys(0, step))
+
+    def eval_at(self, params, thetas_w, batches):
+        """This round's accumulated gradients at per-worker iterates, f32
+        and ``scale``-multiplied — same evaluation-point contract as
+        ``MinibatchSource.eval_at`` (WK2 stale iterates, SVRG anchors and
+        delay-mode params all route through here with identical
+        microbatching)."""
+        if thetas_w is None:
+            thetas_w = broadcast_w(params, self.n_workers)
+
+        if self.accum == 1:
+            # one microbatch: evaluate directly, exactly like
+            # MinibatchSource (and like the sharded step's microbatch==1
+            # special case) — the scan wrapper would perturb XLA's fusion
+            # and cost the bit-identity contract a ulp
+            return jax.vmap(lambda t, b: jax.tree.map(
+                lambda g: g.astype(jnp.float32) * self.scale,
+                jax.grad(self.loss_fn)(
+                    t, jax.tree.map(lambda x: jnp.squeeze(x, 0), b))))(
+                thetas_w, batches)
+
+        def one(t, mbs):
+            _, g = accumulate_loss_grads(self.loss_fn, t, mbs)
+            return jax.tree.map(lambda x: x * self.scale, g)
+
+        return jax.vmap(one)(thetas_w, batches)
+
+    def _chunk_full(self, data_m):
+        c = self.micro if self.n_local % self.micro == 0 else self.n_local
+        return jax.tree.map(
+            lambda x: x.reshape((self.n_local // c, c) + x.shape[1:]), data_m)
+
+    def full_local_grads(self, params):
+        """Exact per-worker full local gradients (the SVRG anchor's mu),
+        accumulated over corpus chunks at the configured microbatch size —
+        mean-convention ``loss_fn`` means no extra scale, exactly like
+        ``MinibatchSource.full_local_grads``."""
+        def one(data_m):
+            _, g = accumulate_loss_grads(self.loss_fn, params,
+                                         self._chunk_full(data_m))
+            return g
+
+        return jax.vmap(one)(self.worker_data)
+
+    def global_loss(self, params):
+        def worker_loss(data_m):
+            mbs = self._chunk_full(data_m)
+            n = jax.tree_util.tree_leaves(mbs)[0].shape[0]
+
+            def body(acc, b):
+                return acc + self.loss_fn(params, b) / n, None
+
+            return jax.lax.scan(body, jnp.zeros((), jnp.float32), mbs)[0]
+
+        return jnp.sum(jax.vmap(worker_loss)(self.worker_data))
+
+    def grad_norm_sq(self, params, grads):
+        if self.deterministic:
+            # the summed full-corpus gradients ARE the global gradient
+            # (FullBatchSource's reduction-not-backprop record)
+            return tree_sq_norm(jax.tree.map(lambda g: jnp.sum(g, axis=0),
+                                             grads))
         return tree_sq_norm(jax.grad(self.global_loss)(params))
 
 

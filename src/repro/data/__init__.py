@@ -1,2 +1,2 @@
-from .synthetic import (classification_dataset, lm_batches, split_workers,
-                        synthetic_lm_batch)
+from .synthetic import (classification_dataset, lm_batches, lm_worker_corpus,
+                        split_workers, synthetic_lm_batch)

@@ -71,6 +71,23 @@ def synthetic_lm_batch(key, batch: int, seq: int, vocab: int):
     return {"tokens": stream[:, :-1], "targets": stream[:, 1:]}
 
 
+def lm_worker_corpus(seed: int, n_workers: int, n_local: int, seq: int,
+                     vocab: int) -> dict:
+    """Per-worker LM token shards for the simulated engine: ``{"tokens",
+    "targets"}`` of shape ``[W, N_local, S]``, worker ``m``'s shard drawn
+    from its own ``fold_in(seed, m)`` stream of the same Markov-Zipf
+    process — deterministic, no host I/O, and heterogeneous across workers
+    (each worker sees a different slice of the distribution, the federated
+    LM setting the LAQ skip criterion is supposed to exploit)."""
+    key0 = jax.random.PRNGKey(seed)
+
+    def worker(m):
+        return synthetic_lm_batch(jax.random.fold_in(key0, m),
+                                  n_local, seq, vocab)
+
+    return jax.vmap(worker)(jnp.arange(n_workers))
+
+
 def lm_batches(seed: int, batch: int, seq: int, vocab: int,
                sharding=None) -> Iterator[dict]:
     """Infinite iterator of device-placed LM batches."""

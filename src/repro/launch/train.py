@@ -113,10 +113,10 @@ from repro.core.adaptive import (dequantize_dynamic, eta_at, quantize_dynamic,
                                  tau_of_selection, tau_of_width)
 from repro.core.compressors import ErrorState, compressor_keys
 from repro.core.defense import DefenseState
-from repro.core.engine import (apply_svrg_streaming, participation_mask,
-                               stale_side_grads)
-from repro.core.quantize import (dequantize_innovation, innovation,
-                                 quantize_innovation, tree_sq_norm)
+from repro.core.engine import (accumulate_loss_grads, apply_svrg_streaming,
+                               participation_mask, stale_side_grads)
+from repro.core.quantize import (dequantize_innovation, quantize_codes,
+                                 tree_sq_norm)
 from repro.core.strategy import (CommState, StrategyConfig, SvrgState,
                                  worker_update)
 from repro.core.wire import pack_codes_along_axis, unpack_codes_along_axis
@@ -161,8 +161,20 @@ def _axis_size_static(worker_axes) -> int:
 
 def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
                       worker_axes, pspecs=None, width=None):
-    """The packed-uint8 wire: per-leaf quantize -> pack -> all_gather ->
-    dequantize -> masked sum.  Returns (sum_of_innovations, q_new_tree).
+    """The packed-uint8 wire, **streamed one leaf at a time**: per leaf,
+    innovation -> quantize -> pack -> exchange -> dequantize -> masked sum
+    (plus that leaf's local ``q_new`` reconstruction) before the next leaf
+    is touched.  Returns (sum_of_innovations, q_new_tree).
+
+    Memory frugality at LM scale: the program never materializes a
+    whole-model codes / diff / delta pytree — one leaf's quantize/pack
+    intermediates are live at a time, so the transient footprint is
+    O(max-leaf) instead of O(model).  The only whole-tree pre-pass is the
+    radius: a *scalar* absmax per leaf (global-radius mode maxes the
+    scalars with exactly ``tree_inf_norm``'s reduction), so the per-leaf
+    code math stays bit-identical to ``quantize_innovation`` /
+    ``dequantize_innovation`` (the packed-vs-float parity pinned by
+    tests/test_system.py).
 
     ``pspecs`` (a pytree of PartitionSpec matching ``grads``) pins the
     payload's model-axis sharding through the exchange: without it GSPMD
@@ -180,12 +192,9 @@ def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
     if adaptive:
         grid = strategy.bit_schedule.grid
         onehot = (jnp.asarray(grid, jnp.float32) == width).astype(jnp.float32)
-        diff, R_tree, _ = innovation(grads, qhat, per_leaf)
-        qints = quantize_dynamic(diff, R_tree, grid, onehot)
         provision = max(grid)
     else:
         bits = strategy.effective_bits
-        qints, R_tree = quantize_innovation(grads, qhat, bits, per_leaf)
         provision = bits
     keep = jnp.logical_not(skip_mask).astype(jnp.float32)
     n_workers = _axis_size_static(worker_axes)
@@ -271,27 +280,52 @@ def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
         return (dq(pl, R, tv_self) * keep
                 + dq(peer_pl, peer_R, tv_peer) * peer_keep)
 
-    q_leaves, treedef = jax.tree_util.tree_flatten(qints)
-    r_leaves = jax.tree_util.tree_leaves(R_tree)
-    g_leaves = jax.tree_util.tree_leaves(grads)
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    qh_leaves = jax.tree_util.tree_leaves(qhat)
     s_leaves = (jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, tuple))
-                if pspecs is not None else [None] * len(q_leaves))
+                if pspecs is not None else [None] * len(g_leaves))
     if use_gather:
         leaf_fn = gather_dequant_sum
     elif compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES:
         leaf_fn = permute_dequant_sum          # two-worker (pod) wire
     else:
         leaf_fn = local_decode_psum            # 0.4.x psum-only degradation
-    agg_leaves = [leaf_fn(q, r, g, s) for q, r, g, s
-                  in zip(q_leaves, r_leaves, g_leaves, s_leaves)]
-    agg_delta = jax.tree_util.tree_unflatten(treedef, agg_leaves)
-    # local reconstruction of this worker's new quantized gradient
-    if adaptive:
-        delta_local = dequantize_dynamic(qints, R_tree,
-                                         tau_of_selection(grid, onehot))
+
+    def leaf_diff(g, qh):
+        return g.astype(jnp.float32) - qh.astype(jnp.float32)
+
+    # radius pre-pass: one scalar per leaf — the only whole-tree quantity.
+    # Mirrors innovation()/tree_inf_norm exactly: per-leaf max|diff|, and
+    # for the global radius a max over the stacked leaf scalars.
+    absmax = [jnp.max(jnp.abs(leaf_diff(g, qh))).astype(jnp.float32)
+              if g.size else jnp.zeros((), jnp.float32)
+              for g, qh in zip(g_leaves, qh_leaves)]
+    if per_leaf:
+        r_leaves = absmax
     else:
-        delta_local = dequantize_innovation(qints, R_tree, provision)
-    q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d, qhat, delta_local)
+        R_glob = jnp.max(jnp.stack(absmax))
+        r_leaves = [R_glob] * len(g_leaves)
+
+    t_sel = tau_of_selection(grid, onehot) if adaptive else None
+
+    def stream_leaf(g, qh, R, spec):
+        # the streamed hot path: this leaf's diff, codes, payload and
+        # dequantized delta are dead before the next leaf starts
+        d = leaf_diff(g, qh)
+        if adaptive:
+            q = quantize_dynamic(d, R, grid, onehot)
+            delta_local = dequantize_dynamic(q, R, t_sel)
+        else:
+            q = quantize_codes(d, R, bits)
+            delta_local = dequantize_innovation(q, R, provision)
+        agg = leaf_fn(q, R, g, spec)
+        q_new = qh.astype(jnp.float32) + delta_local
+        return agg, q_new
+
+    streamed = [stream_leaf(g, qh, r, s) for g, qh, r, s
+                in zip(g_leaves, qh_leaves, r_leaves, s_leaves)]
+    agg_delta = jax.tree_util.tree_unflatten(treedef, [a for a, _ in streamed])
+    q_new = jax.tree_util.tree_unflatten(treedef, [qn for _, qn in streamed])
     return agg_delta, q_new
 
 
@@ -392,31 +426,19 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
         def loss_and_grads(at_params):
             """This worker's batch gradient at an arbitrary iterate (the
             current params; the WK2 stale iterate; the SVRG anchor) —
-            microbatching identical for every evaluation point."""
+            microbatching identical for every evaluation point, via the
+            engine-shared fold (core/engine.py accumulate_loss_grads, the
+            same arithmetic AccumulatingSource runs in the simulated
+            engine).  Probe mode (unrolled layers) unrolls the microbatch
+            fold too so cost_analysis counts every pass."""
             if microbatch == 1:
                 return jax.value_and_grad(loss_fn)(at_params, batch)
             mb = jax.tree.map(
                 lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
                                     + x.shape[1:]), batch)
-
-            def acc_body(carry, b):
-                loss_acc, g_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(at_params, b)
-                g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) / microbatch,
-                                     g_acc, g)
-                return (loss_acc + l / microbatch, g_acc), None
-
-            zero = (jnp.zeros((), jnp.float32),
-                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                 at_params))
-            if cfg.scan_layers and not compat.needs_loop_unrolling():
-                return jax.lax.scan(acc_body, zero, mb)[0]
-            # probe mode (unrolled layers): unroll microbatches too so
-            # cost_analysis counts every pass (scan bodies count once)
-            carry = zero
-            for i in range(microbatch):
-                carry, _ = acc_body(carry, jax.tree.map(lambda x: x[i], mb))
-            return carry
+            unroll = not (cfg.scan_layers and not compat.needs_loop_unrolling())
+            return accumulate_loss_grads(loss_fn, at_params, mb,
+                                         unroll=unroll)
 
         loss, grads = loss_and_grads(params)
         lr_k = eta_at(strategy.eta_schedule, lr, comm.step)

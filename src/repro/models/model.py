@@ -28,6 +28,23 @@ def lm_loss(params, batch, cfg: ModelConfig):
     return ce + AUX_LOSS_WEIGHT * aux
 
 
+def lm_worker_loss(cfg: ModelConfig, n_workers: int):
+    """One federated worker's local LM objective: ``lm_loss / W``.
+
+    ``lm_loss`` is a token **mean**, so dividing by the worker count makes
+    the engine's global objective ``sum_m f_m`` equal the global mean token
+    cross-entropy — ``exp(global_loss)`` is perplexity.  Mean convention
+    also makes the loss mean-decomposable over equal microbatches, the
+    contract ``AccumulatingSource`` / ``accumulate_loss_grads``
+    (core/engine.py) need; pass ``scale=1.0`` to the source, the ``1/W``
+    normalization already lives here.
+    """
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg) / n_workers
+
+    return loss_fn
+
+
 def make_batch_specs(cfg: ModelConfig, batch: int, seq: int):
     """ShapeDtypeStructs for one global training batch."""
     return {

@@ -275,6 +275,66 @@ def test_ef_laq_beats_plain_at_low_bits(bits):
 
 
 # ---------------------------------------------------------------------------
+# (g) LM workload: LAQ trains the tiny transformer to the QGD floor at
+#     strictly fewer wire bits (benchmarks/lm_frontier.py headline, pinned
+#     seeded and deterministic — the AccumulatingSource fold streams each
+#     worker's corpus through microbatches, so this is the exact
+#     full-gradient LAQ of the paper on a real next-token objective).
+# ---------------------------------------------------------------------------
+
+def _first_reach_bits(result, target):
+    """Bits at the first *sustained* crossing of ``target`` (trailing max
+    never rises above it again) — a single lucky dip doesn't count."""
+    loss = np.asarray(result.loss)
+    trailing = np.maximum.accumulate(loss[::-1])[::-1]
+    ks = np.nonzero(trailing <= target)[0]
+    return None if ks.size == 0 else float(np.asarray(result.cum_bits)[ks[0]])
+
+
+def test_lm_laq_reaches_qgd_floor_at_fewer_bits():
+    from repro.core import RoundEngine
+    from repro.core.engine import AccumulatingSource
+    from repro.data import lm_worker_corpus
+    from repro.models import init_params, lm_worker_loss
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="lm-micro", arch_type="dense", n_layers=2,
+                      d_model=32, vocab=64, n_heads=2, n_kv_heads=1,
+                      head_dim=16, d_ff=64, q_chunk=16, kv_chunk=8,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    W, steps = 4, 60
+    corpus = lm_worker_corpus(0, W, 16, 16, cfg.vocab)
+    loss_fn = lm_worker_loss(cfg, W)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def source():
+        return AccumulatingSource(loss_fn, corpus, deterministic=True,
+                                  accum=2, scale=1.0)
+
+    def engine_run(kind):
+        # b=8 on the LM: at b=4 the per-leaf quantization error inflates
+        # the RHS of (7a) until every round skips and the run diverges —
+        # the bit-width floor is itself workload-dependent
+        strat = StrategyConfig(kind=kind, bits=8, per_leaf_radius=True,
+                               criterion=CRIT)
+        return RoundEngine(source(), strat, alpha=ALPHA).run(params, steps)
+
+    qgd = engine_run("qgd")
+    laq = engine_run("laq")
+    floor = float(np.mean(np.asarray(qgd.loss)[-5:]))
+    target = 1.05 * floor
+    bits_qgd = _first_reach_bits(qgd, target)
+    bits_laq = _first_reach_bits(laq, target)
+    assert bits_qgd is not None and bits_laq is not None, (bits_laq, bits_qgd)
+    # headline: strictly fewer bits to the same perplexity floor, with
+    # seeded headroom (measured 1.36e7 vs 2.62e7 — a 0.52x ratio)
+    assert bits_laq < 0.75 * bits_qgd, (bits_laq, bits_qgd)
+    # the lazy run actually skips, and stays at the floor
+    assert int(laq.cum_uploads[-1]) < W * steps, int(laq.cum_uploads[-1])
+    assert float(laq.loss[-1]) <= 1.10 * floor, (float(laq.loss[-1]), floor)
+
+
+# ---------------------------------------------------------------------------
 # (f) Fault tolerance: defended LAQ survives payload corruption.
 # ---------------------------------------------------------------------------
 

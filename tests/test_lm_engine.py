@@ -1,0 +1,162 @@
+"""Accumulation-exactness tier for the LM gradient source.
+
+Pins the two contracts that let the LAQ engine train language models by
+gradient accumulation (core/engine.py AccumulatingSource +
+accumulate_loss_grads):
+
+* **microbatch-vs-full parity** — the accumulated gradient over N
+  microbatches equals MinibatchSource's single-backprop gradient on the
+  concatenated batch: bit-identical at ``accum=1`` (the fold degenerates to
+  the direct evaluation, same special case the sharded step takes), and to
+  f32 reduction order (pinned-ulp, asserted <= 1e-6 absolute here) at
+  ``accum in {2, 4}`` — the fold reassociates the mean, nothing else.
+  At ``accum=1`` whole engine trajectories (params, uploads, bits) are
+  bitwise interchangeable between the two sources on BOTH wire backends;
+  the loss *record* differs by the chunked global-loss reduction order
+  only.
+
+* **trajectory golden** — a seeded 30-round tiny-transformer SLAQ run is
+  bitwise deterministic (same seed -> identical losses/params), actually
+  skips (skip rate > 0), learns (final loss < initial), and reproduces
+  bitwise across the reference and fused wire backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RoundEngine, StrategyConfig
+from repro.core.engine import (AccumulatingSource, FullBatchSource,
+                               MinibatchSource)
+from repro.data import lm_worker_corpus
+from repro.models import init_params, lm_worker_loss
+from repro.models.config import ModelConfig
+
+CFG = ModelConfig(name="lm-micro", arch_type="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                  q_chunk=16, kv_chunk=8,
+                  param_dtype=jnp.float32, compute_dtype=jnp.float32)
+W, N_LOCAL, SEQ = 4, 16, 16
+BATCH = 8
+SLAQ = StrategyConfig(kind="laq", bits=4, per_leaf_radius=True,
+                      lazy_rule="lasg_wk")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = lm_worker_corpus(0, W, N_LOCAL, SEQ, CFG.vocab)
+    loss_fn = lm_worker_loss(CFG, W)
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return corpus, loss_fn, params
+
+
+def _tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _tree_maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("accum", [1, 2, 4])
+def test_accum_gradient_parity(setup, accum):
+    """Accumulated gradient == single-backprop gradient on the same batch:
+    bitwise at accum=1, <= 1e-6 abs (f32 reduction order) above."""
+    corpus, loss_fn, params = setup
+    mb = MinibatchSource(loss_fn, corpus, batch=BATCH, seed=0)
+    acc = AccumulatingSource(loss_fn, corpus, batch=BATCH, seed=0, accum=accum)
+    bm, ba = mb.sample(3), acc.sample(3)
+    # the sampler draws the SAME index vector and just reshapes it
+    assert np.array_equal(
+        np.asarray(bm["tokens"]),
+        np.asarray(ba["tokens"]).reshape(W, BATCH, SEQ))
+    gm = mb.eval_at(params, None, bm)
+    ga = acc.eval_at(params, None, ba)
+    if accum == 1:
+        assert _tree_equal(gm, ga)
+    else:
+        assert _tree_maxdiff(gm, ga) <= 1e-6
+
+
+def test_per_device_knob(setup):
+    """per_device is the levanter-style parallelism knob: accum derives
+    from it, and the sampled examples are unchanged."""
+    corpus, loss_fn, _ = setup
+    src = AccumulatingSource(loss_fn, corpus, batch=BATCH, seed=0,
+                             per_device=2)
+    assert src.accum == BATCH // 2 and src.micro == 2
+    ref = AccumulatingSource(loss_fn, corpus, batch=BATCH, seed=0,
+                             accum=BATCH // 2)
+    assert _tree_equal(src.sample(0), ref.sample(0))
+
+
+def test_deterministic_mode_matches_fullbatch(setup):
+    """deterministic=True streams the whole corpus through the fold: the
+    FullBatchSource gradient at the accumulation memory profile."""
+    corpus, loss_fn, params = setup
+    det = AccumulatingSource(loss_fn, corpus, deterministic=True, accum=2,
+                             scale=1.0)
+    assert not det.stochastic
+    fb = FullBatchSource(loss_fn, corpus)
+    gd = det.eval_at(params, None, det.sample(0))
+    gf = fb.eval_at(params, None, None)
+    assert _tree_maxdiff(gd, gf) <= 1e-6
+    np.testing.assert_allclose(float(det.global_loss(params)),
+                               float(fb.global_loss(params)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("wire_backend", ["reference", "fused"])
+def test_accum1_trajectory_interchangeable(setup, wire_backend):
+    """At accum=1 the engine cannot tell the sources apart: params,
+    uploads and bits trajectories are bitwise equal on both backends."""
+    corpus, loss_fn, params = setup
+    cfg = SLAQ._replace(wire_backend=wire_backend)
+    ra = RoundEngine(AccumulatingSource(loss_fn, corpus, batch=BATCH, seed=0,
+                                        accum=1), cfg, alpha=0.5).run(params, 8)
+    rm = RoundEngine(MinibatchSource(loss_fn, corpus, batch=BATCH, seed=0),
+                     cfg, alpha=0.5).run(params, 8)
+    assert _tree_equal(ra.params, rm.params)
+    assert np.array_equal(np.asarray(ra.cum_uploads), np.asarray(rm.cum_uploads))
+    assert np.array_equal(np.asarray(ra.cum_bits), np.asarray(rm.cum_bits))
+    # the loss record is a diagnostic: chunked vs single-shot reduction
+    np.testing.assert_allclose(np.asarray(ra.loss), np.asarray(rm.loss),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("wire_backend", ["reference", "fused"])
+def test_lm_trajectory_golden(setup, wire_backend):
+    """Seeded 30-round tiny-transformer SLAQ run: bitwise same-seed
+    determinism, skip rate > 0, and it learns."""
+    corpus, loss_fn, params = setup
+    cfg = SLAQ._replace(wire_backend=wire_backend)
+
+    def run():
+        src = AccumulatingSource(loss_fn, corpus, batch=BATCH, seed=0,
+                                 accum=2, scale=1.0)
+        return RoundEngine(src, cfg, alpha=0.5).run(params, 30)
+
+    r1, r2 = run(), run()
+    assert np.array_equal(np.asarray(r1.loss), np.asarray(r2.loss))
+    assert _tree_equal(r1.params, r2.params)
+    assert bool(np.isfinite(np.asarray(r1.loss)).all())
+    assert float(r1.loss[-1]) < float(r1.loss[0])
+    uploads = int(r1.cum_uploads[-1])
+    assert 0 < uploads < W * 30, f"no skips: {uploads}/{W * 30}"
+
+
+def test_trajectory_golden_backends_bitwise(setup):
+    """The wire-content contract (core/wire.py) extends to the whole LM
+    trajectory: reference and fused backends reproduce identical runs."""
+    corpus, loss_fn, params = setup
+    losses = {}
+    for wb in ("reference", "fused"):
+        src = AccumulatingSource(loss_fn, corpus, batch=BATCH, seed=0,
+                                 accum=2, scale=1.0)
+        losses[wb] = RoundEngine(src, SLAQ._replace(wire_backend=wb),
+                                 alpha=0.5).run(params, 30)
+    assert np.array_equal(np.asarray(losses["reference"].loss),
+                          np.asarray(losses["fused"].loss))
+    assert np.array_equal(np.asarray(losses["reference"].cum_bits),
+                          np.asarray(losses["fused"].cum_bits))

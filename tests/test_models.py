@@ -1,7 +1,13 @@
 """Per-architecture smoke tests (reduced same-family variants) + numerics:
 chunked attention vs naive softmax, SSD scan vs naive recurrence, MoE
-capacity path vs dense reference, prefill/decode consistency."""
+capacity path vs dense reference, prefill/decode consistency, and
+LAQ-train-step integration smokes (dense/mamba2/moe on the 8-device mesh
+with exact wire-bit accounting)."""
+import json
 import math
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -185,6 +191,110 @@ def test_moe_capacity_drops_overflow():
     x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, 32))
     yc, _ = moe_forward_capacity(p, x, cfg)
     assert bool(jnp.isfinite(yc).all())
+
+
+def test_moe_router_aux_flows_through_accumulated_gradient():
+    """The router's load-balance aux loss must reach the router weights
+    through the gradient-accumulation fold (core/engine.py
+    accumulate_loss_grads) — an aux-only objective folded over microbatches
+    yields nonzero router gradients."""
+    from repro.core.engine import accumulate_loss_grads
+    from repro.models.model import AUX_LOSS_WEIGHT
+
+    cfg = ModelConfig(name="t", arch_type="moe", n_layers=1, d_model=32,
+                      vocab=64, n_heads=2, n_kv_heads=2, head_dim=16,
+                      n_experts=4, top_k=2, moe_d_ff=16, q_chunk=16,
+                      kv_chunk=8, param_dtype=jnp.float32,
+                      compute_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 2, 16), 0, cfg.vocab)
+    mbs = {"tokens": tokens, "targets": jnp.roll(tokens, -1, -1)}
+
+    def aux_only(p, b):
+        _, aux = forward(p, b["tokens"], cfg)
+        return AUX_LOSS_WEIGHT * aux
+
+    loss, grads = accumulate_loss_grads(aux_only, params, mbs)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    paths, _ = jax.tree_util.tree_flatten_with_path(grads)
+    router = [leaf for path, leaf in paths
+              if "router" in jax.tree_util.keystr(path)]
+    assert router, "no router leaves in the gradient tree"
+    assert max(float(jnp.max(jnp.abs(g))) for g in router) > 0.0, \
+        "aux loss did not reach the router through the accumulation fold"
+    # the full LM objective (ce + aux) stays finite through the same fold
+    full, _ = accumulate_loss_grads(lambda p, b: lm_loss(p, b, cfg),
+                                    params, mbs)
+    assert bool(jnp.isfinite(full))
+
+
+_LAQ_ARCH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config, smoke_config
+from repro.core.strategy import StrategyConfig
+from repro.optim import sgd
+from repro.launch.train import (make_train_step, train_state_specs,
+                                init_train_state)
+from repro.data import synthetic_lm_batch
+
+out = {}
+strategy = StrategyConfig(kind="laq", bits=4, per_leaf_radius=True)
+opt = sgd()
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+wa = ("data",)
+# moe runs with microbatch=2: the sharded step folds the round's gradient
+# (aux loss included) through accumulate_loss_grads
+for arch, accum in (("yi-6b", 1), ("mamba2-130m", 1),
+                    ("qwen3-moe-30b-a3b", 2)):
+    cfg = smoke_config(get_config(arch))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, mesh, strategy,
+                             opt, wa)
+    specs = train_state_specs(cfg, mesh, strategy, opt, wa)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s.sharding),
+                         state, specs)
+    batch = synthetic_lm_batch(jax.random.PRNGKey(1), 8, 64, cfg.vocab)
+    batch = jax.device_put(batch, NamedSharding(mesh, P("data", None)))
+    step = jax.jit(make_train_step(cfg, mesh, strategy, opt, lr=1e-2,
+                                   worker_axes=wa, wire="float",
+                                   microbatch=accum))
+    state, m = step(state, batch)
+    out[arch] = {
+        "loss": float(m.loss),
+        "uploads": int(m.uploads),
+        "total_bits": float(state.comm.total_bits),
+        "p": int(sum(x.size for x in jax.tree.leaves(state.params))),
+        "n_leaves": len(jax.tree.leaves(state.params)),
+    }
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_laq_step_arch_smokes_subprocess():
+    """One LAQ round per architecture family (dense / mamba2 / moe) on the
+    (4 data x 2 model) 8-device mesh: loss finite, and the wire accounting
+    is exact against the hand-computed first-round cohort — all W workers
+    upload (first_round_upload), each paying upload_bits(p, 4,
+    n_radii=n_leaves) since per_leaf_radius exchanges one f32 radius per
+    leaf."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _LAQ_ARCH_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-4000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    W = 4
+    for arch, o in out.items():
+        assert math.isfinite(o["loss"]), (arch, o)
+        assert o["uploads"] == W, (arch, o)
+        expected = W * (32 * o["n_leaves"] + 4 * o["p"])
+        assert o["total_bits"] == float(expected), (arch, o, expected)
 
 
 def test_long_context_configs():
