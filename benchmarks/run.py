@@ -29,7 +29,7 @@ import traceback
 def _modules(claims_only: bool):
     from . import (adaptive_sweep, bits_sweep, convergence, ef_frontier,
                    fault_frontier, lasg_frontier, lm_frontier,
-                   participation_frontier, table2_gradient,
+                   participation_frontier, serve_frontier, table2_gradient,
                    table3_stochastic, wire_microbench)
     mods = [("table2", table2_gradient), ("table3", table3_stochastic),
             ("convergence", convergence), ("bits_sweep", bits_sweep),
@@ -39,6 +39,7 @@ def _modules(claims_only: bool):
             ("ef_frontier", ef_frontier),
             ("fault_frontier", fault_frontier),
             ("lm_frontier", lm_frontier),
+            ("serve_frontier", serve_frontier),
             ("wire_microbench", wire_microbench)]
     if claims_only:
         # timing-only modules: their checks are perf trajectories, not

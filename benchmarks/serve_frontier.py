@@ -1,0 +1,288 @@
+"""Serving-freshness frontier: eval quality vs delta-push bandwidth.
+
+One LAQ trainer (the PR-8 micro-LM recipe: b=8 dense grid, 1/t stepsize,
+``AccumulatingSource`` gradient fold) is run ONCE; its parameter
+trajectory is then replayed through competing **publishing policies**
+(core/replica.py) feeding an inference replica, and each policy is scored
+on what the replica fleet actually cares about:
+
+* the replica's held-out eval loss / perplexity at the end of training
+  (serving a stale or quantized view must not cost model quality),
+* pushed wire bits (the model-delta CDN's bandwidth bill, init snapshot
+  included for every policy so comparisons are honest),
+* freshness: the worst ``rounds_behind`` any replica ever serves at.
+
+Policies: always-push **float32** (a full resync every round — the
+naive weight-sync baseline), always-push **quantized** (b=4 deltas every
+round), **lazy quantized** (the tentpole: push only when innovation beats
+the rel-anchor threshold, bounded staleness backstop), lazy **adaptive
+width** (rel-mode ``BitSchedule`` picks b per push), and the lazy policy
+behind a 3-replica fleet with transport delay (``max_delay=2``).
+
+Claims checked:
+
+* **lazy quantized serves within 1.05x of always-push-float32 eval loss**
+  (1.10x tiny) — staleness + quantization don't cost quality;
+* **at <= 0.25x the pushed bytes** — the bandwidth headline;
+* **lazy pushes fewer bytes than always-push quantized** — laziness pays
+  on top of quantization;
+* **replica == published view bitwise on BOTH wire backends, with
+  identical push schedules** — the wire contract under the serve path;
+* **a max_staleness resync restores bitwise trainer equality**;
+* **freshness stays within the staleness budget** (+ transport delay for
+  the delayed fleet);
+* a steady-state greedy-decode **tokens/s** row rides along for the
+  trajectory record (no claim: CPU CI timing is noise).
+
+Emits ``BENCH_serve.json`` at the repo root (CI serve-smoke runs
+``--tiny`` and uploads the artifact; the committed file is a full run).
+
+    PYTHONPATH=src python -m benchmarks.serve_frontier [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CriterionConfig, EtaSchedule, PublishConfig,
+                        RoundEngine, StrategyConfig)
+from repro.core.adaptive import BitSchedule
+from repro.core.engine import AccumulatingSource
+from repro.core.replica import (apply_message, init_publisher, init_replica,
+                                publish)
+from repro.data import lm_worker_corpus
+from repro.launch.publish import ReplicaFleet
+from repro.models import init_params, lm_loss, lm_worker_loss
+from repro.models.config import ModelConfig
+
+STEPS = 150
+TINY_STEPS = 40
+LOSS_MULT = 1.05
+TINY_LOSS_MULT = 1.10
+BYTES_MULT = 0.25
+ALPHA = 0.5
+W = 4
+ACCUM = 2
+TRAIN_BITS = 8            # the gradient wire's dense-grid floor (PR 8)
+PUSH_BITS = 4             # the parameter-delta wire is a separate dial
+LAZY_TH = 0.35
+MAX_STALENESS = 16
+
+CFG = ModelConfig(name="lm-micro", arch_type="dense", n_layers=2, d_model=32,
+                  vocab=64, n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                  q_chunk=16, kv_chunk=8,
+                  param_dtype=jnp.float32, compute_dtype=jnp.float32)
+CRIT = CriterionConfig(D=10, xi=0.08, t_bar=100)
+ETA = EtaSchedule(kind="inv_t", t0=30.0)
+
+ROOT_JSON = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         os.pardir, "BENCH_serve.json"))
+
+
+def _policies(tiny: bool):
+    return {
+        # a full-precision resync every round: threshold>=1 never lazily
+        # pushes, max_staleness=0 tolerates no skip
+        "float32_push": PublishConfig(threshold=1.5, max_staleness=0),
+        "quant_push": PublishConfig(bits=PUSH_BITS, threshold=0.0),
+        "lazy_quant": PublishConfig(bits=PUSH_BITS, threshold=LAZY_TH,
+                                    max_staleness=MAX_STALENESS),
+        "lazy_adaptive": PublishConfig(
+            threshold=LAZY_TH, max_staleness=MAX_STALENESS,
+            bit_schedule=BitSchedule(kind="radius", grid=(2, 4, 8),
+                                     threshold_mode="rel",
+                                     thresholds=(0.05, 0.5))),
+    }
+
+
+def _train_trajectory(steps: int):
+    """The single trainer run every policy replays (host-side list of
+    per-round param pytrees; the micro LM keeps this small)."""
+    engine = RoundEngine(
+        AccumulatingSource(lm_worker_loss(CFG, W),
+                           lm_worker_corpus(0, W, 16, 16, CFG.vocab),
+                           deterministic=True, accum=ACCUM, scale=1.0),
+        StrategyConfig(kind="laq", bits=TRAIN_BITS, per_leaf_radius=True,
+                       criterion=CRIT, eta_schedule=ETA),
+        alpha=ALPHA)
+    params0 = init_params(jax.random.PRNGKey(0), CFG)
+    step = jax.jit(engine.round)
+    carry = engine.init_carry(params0)
+    traj = []
+    for _ in range(steps):
+        carry, _ = step(carry, None)
+        traj.append(carry[0])
+    return params0, traj
+
+
+def _replay(name: str, pcfg: PublishConfig, params0, traj, eval_loss, *,
+            n_replicas=1, max_delay=0):
+    """Run one publishing policy over the trajectory; score the last
+    replica the fleet would serve from."""
+    st = init_publisher(params0, pcfg)
+    fleet = ReplicaFleet(params0, n_replicas, pcfg, max_delay=max_delay)
+    max_behind = 0
+    resync_exact = None
+    for params in traj:
+        msg, st = publish(pcfg, st, params)
+        fleet.deliver(msg)
+        max_behind = max(max_behind, max(fleet.freshness()))
+        if msg is not None and not hasattr(msg, "payloads") and max_delay == 0:
+            # a resync just landed on a synchronous fleet: bitwise trainer
+            # equality is the whole point of the escape hatch
+            exact = all(
+                np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(fleet.replicas[0].params),
+                                jax.tree.leaves(params)))
+            resync_exact = exact if resync_exact is None \
+                else (resync_exact and exact)
+    loss = float(eval_loss(fleet.replicas[0].params))
+    return dict(policy=name, bits=st.bits_sent, n_pushes=st.n_pushes,
+                n_resyncs=st.n_resyncs, max_rounds_behind=max_behind,
+                eval_loss=loss, eval_ppl=float(np.exp(min(loss, 30.0))),
+                resync_exact=resync_exact, n_replicas=n_replicas,
+                max_delay=max_delay)
+
+
+def _bitwise_both_backends(params0, traj):
+    """The wire contract on the serve path: both backends produce the same
+    push schedule and a replica that equals the published view bitwise."""
+    outcomes = {}
+    for backend in ("reference", "fused"):
+        pcfg = PublishConfig(bits=PUSH_BITS, threshold=LAZY_TH,
+                             max_staleness=MAX_STALENESS,
+                             wire_backend=backend)
+        st = init_publisher(params0, pcfg)
+        rep = init_replica(params0)
+        sched, ok = [], True
+        for params in traj:
+            msg, st = publish(pcfg, st, params)
+            rep = apply_message(rep, msg, pcfg)
+            sched.append(None if msg is None
+                         else "p" if hasattr(msg, "payloads") else "r")
+            ok &= all(np.array_equal(np.asarray(a), np.asarray(b))
+                      for a, b in zip(jax.tree.leaves(rep.params),
+                                      jax.tree.leaves(st.theta_pub)))
+        outcomes[backend] = (sched, ok, st.bits_sent)
+    scheds_equal = outcomes["reference"][0] == outcomes["fused"][0]
+    bitwise = outcomes["reference"][1] and outcomes["fused"][1]
+    bits_equal = outcomes["reference"][2] == outcomes["fused"][2]
+    return scheds_equal and bits_equal, bitwise
+
+
+def _decode_tokens_per_s(params, tokens=16, batch=4, prompt_len=16):
+    """Steady-state greedy decode rate on the final served weights (jit
+    warmup excluded; single-device: the mesh timing lives in the example)."""
+    from repro.launch.serve import jit_serve
+    prefill_fn, decode_fn = jit_serve(CFG, prompt_len + tokens)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                                 0, CFG.vocab)
+    tok, cache = prefill_fn(params, prompts)          # warmup prefill
+    jax.block_until_ready(decode_fn(params, cache, tok))  # warmup (eats cache)
+    tok, cache = prefill_fn(params, prompts)
+    t0 = time.time()
+    with jax.transfer_guard("disallow"):
+        for _ in range(tokens):
+            tok, cache = decode_fn(params, cache, tok)
+    jax.block_until_ready(tok)
+    return batch * tokens / (time.time() - t0)
+
+
+def run(out_rows, results, tiny: bool = False):
+    steps = TINY_STEPS if tiny else STEPS
+    params0, traj = _train_trajectory(steps)
+
+    held_out = lm_worker_corpus(1, 1, 32, 16, CFG.vocab)
+    eval_batch = jax.tree.map(lambda l: l[0], held_out)
+    eval_loss = jax.jit(lambda p: lm_loss(p, eval_batch, CFG))
+
+    rows = [_replay(name, pcfg, params0, traj, eval_loss)
+            for name, pcfg in _policies(tiny).items()]
+    rows.append(_replay("lazy_quant_fleet",
+                        PublishConfig(bits=PUSH_BITS, threshold=LAZY_TH,
+                                      max_staleness=MAX_STALENESS),
+                        params0, traj, eval_loss, n_replicas=3, max_delay=2))
+    by = {r["policy"]: r for r in rows}
+
+    toks_per_s = _decode_tokens_per_s(init_replica(traj[-1]).params)
+    rows.append(dict(policy="decode_rate", tokens_per_s=float(toks_per_s)))
+
+    for r in rows[:-1]:
+        out_rows.append((f"serve_{r['policy']}", float(r["bits"]),
+                         f"ppl={r['eval_ppl']:.3f};behind<={r['max_rounds_behind']};"
+                         f"pushes={r['n_pushes']}+{r['n_resyncs']}rs"))
+    out_rows.append(("serve_decode_rate", float(toks_per_s), "tok/s"))
+
+    f32, lazy, quant = by["float32_push"], by["lazy_quant"], by["quant_push"]
+    mult = TINY_LOSS_MULT if tiny else LOSS_MULT
+    sched_ok, bitwise_ok = _bitwise_both_backends(params0, traj)
+    checks = {
+        "lazy quantized publishing serves within "
+        f"{mult}x of always-push-float32 eval loss":
+            lazy["eval_loss"] <= mult * f32["eval_loss"],
+        "lazy quantized pushes <= 0.25x the float32 bytes":
+            lazy["bits"] <= BYTES_MULT * f32["bits"],
+        "laziness pays on top of quantization: lazy < always-push bytes":
+            lazy["bits"] < quant["bits"],
+        "replica == published view bitwise on both wire backends":
+            bitwise_ok,
+        "both wire backends cut identical push schedules and bits":
+            sched_ok,
+        "every max_staleness resync restored bitwise trainer equality":
+            None if lazy["n_resyncs"] == 0 and f32["n_resyncs"] == 0
+            else bool((lazy["resync_exact"] in (None, True))
+                      and (f32["resync_exact"] in (None, True))
+                      and (lazy["n_resyncs"] + f32["n_resyncs"]) > 0),
+        "freshness stays within the staleness budget (+ transport delay)":
+            lazy["max_rounds_behind"] <= MAX_STALENESS
+            and by["lazy_quant_fleet"]["max_rounds_behind"]
+            <= MAX_STALENESS + 2,
+        "adaptive width serves the same quality band as fixed b=4":
+            by["lazy_adaptive"]["eval_loss"] <= mult * f32["eval_loss"],
+    }
+    results["serve_frontier"] = dict(steps=steps, push_bits=PUSH_BITS,
+                                     threshold=LAZY_TH,
+                                     max_staleness=MAX_STALENESS,
+                                     **{r["policy"]: r for r in rows})
+    results["serve_frontier/claims"] = checks
+
+    with open(ROOT_JSON, "w") as fh:
+        json.dump({"tiny": tiny, "steps": steps,
+                   "rows": rows, "checks": checks}, fh, indent=1)
+    return checks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer trainer rounds, looser loss band")
+    args = ap.parse_args()
+    out_rows, results = [], {}
+    checks = run(out_rows, results, tiny=args.tiny)
+    f = results["serve_frontier"]
+    print(f"{'policy':17s} {'eval ppl':>9s} {'Mbits':>8s} {'pushes':>7s} "
+          f"{'resyncs':>8s} {'behind':>7s}")
+    for name in ("float32_push", "quant_push", "lazy_quant", "lazy_adaptive",
+                 "lazy_quant_fleet"):
+        r = f[name]
+        print(f"{name:17s} {r['eval_ppl']:9.3f} {r['bits']/1e6:8.3f} "
+              f"{r['n_pushes']:7d} {r['n_resyncs']:8d} "
+              f"{r['max_rounds_behind']:7d}")
+    print(f"decode: {f['decode_rate']['tokens_per_s']:,.0f} tok/s "
+          f"(steady-state greedy, no claim)")
+    ok = True
+    for k, v in checks.items():
+        print(f"[{'SKIP' if v is None else 'PASS' if v else 'FAIL'}] {k}")
+        ok &= v is None or bool(v)
+    print(f"-> {ROOT_JSON}")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,10 @@
 """Benchmark-artifact gate: schema-validate every BENCH_*.json at the repo
 root (the per-PR artifacts CI uploads — BENCH_wire.json from the wire
 microbenchmark, BENCH_ef.json from the EF frontier, BENCH_faults.json
-from the fault frontier).
+from the fault frontier, BENCH_lm.json from the LM frontier,
+BENCH_serve.json from the serving frontier).  The REQUIRED set makes a
+*missing* artifact fail too: a benchmark that silently stopped writing its
+file must not read as green.
 
 Every artifact must be a JSON object with
 
@@ -26,6 +29,8 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 SCALARS = (int, float, str, bool, type(None))
+REQUIRED = ("BENCH_wire.json", "BENCH_ef.json", "BENCH_faults.json",
+            "BENCH_lm.json", "BENCH_serve.json")
 
 
 def validate(path: pathlib.Path) -> list[str]:
@@ -70,6 +75,9 @@ def main() -> int:
               file=sys.stderr)
         return 1
     errors = [e for p in paths for e in validate(p)]
+    names = {p.name for p in paths}
+    errors += [f"required artifact {r} is missing"
+               for r in REQUIRED if r not in names]
     for e in errors:
         print(f"check_bench: {e}", file=sys.stderr)
     print(f"check_bench: {len(paths)} artifact(s), "

@@ -48,6 +48,12 @@ Public API:
                                             (thin wrappers over RoundEngine;
                                             stochastic kinds: sgd/qsgd/ssgd/
                                             slaq/slaq_wk/slaq_wk2/slaq_ps)
+    PublishConfig / publish / ReplicaState
+                                         -- lazy-replica serving
+                                            (core/replica.py): quantized
+                                            parameter-delta publishing to an
+                                            inference fleet with bounded
+                                            staleness + forced resync
 """
 from .adaptive import (BitSchedule, EtaSchedule, adaptive_roundtrip, eta_at,
                        grid_costs, select_bits)
@@ -83,4 +89,7 @@ from .engine import (PARTICIPATION, AccumulatingSource, DelayedParticipation,
                      apply_svrg_exact, apply_svrg_streaming, broadcast_w,
                      make_participation, participation_mask,
                      stale_side_grads)
+from .replica import (DeltaMsg, PublishConfig, PublisherState, ReplicaState,
+                      ResyncMsg, apply_message, init_publisher, init_replica,
+                      publish, staleness_drift)
 from .simulated import run_gradient_based, run_stochastic

@@ -1,0 +1,107 @@
+"""Publisher driver: a `RoundEngine` trainer feeding a replica fleet.
+
+Glue between the jitted training loop and the host-side publishing state
+machine of :mod:`repro.core.replica`: step the engine round by round,
+offer each new iterate to the publisher, and deliver whatever it emits
+(delta / resync / nothing) to a fleet of bounded-staleness replicas.
+
+The fleet models pull-side heterogeneity with the exact
+`DelayedParticipation` idiom (``d_r = r mod (max_delay + 1)``): replica
+``r`` applies at round ``k`` the message the publisher cut at round
+``k - d_r`` — a slow edge PoP is a *delayed subscriber*, not a different
+protocol.  Messages ride a ring of the last ``max_delay + 1`` rounds; a
+replica whose message "has not arrived yet" ages exactly like a lazy
+skip, so freshness accounting (``rounds_behind``) is uniform across
+laziness and transport delay.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, Optional
+
+import jax
+
+from repro.core.replica import (PublishConfig, PublisherState, apply_message,
+                                init_replica, publish, staleness_drift)
+
+
+class ReplicaFleet:
+    """``n_replicas`` bounded-staleness subscribers of one publisher.
+
+    ``max_delay=0`` is a synchronous fleet (every replica applies each
+    message the round it is cut); otherwise replica ``r`` lags by the
+    fixed transport delay ``r mod (max_delay + 1)`` rounds.
+    """
+
+    def __init__(self, params0, n_replicas: int, cfg: PublishConfig, *,
+                 max_delay: int = 0):
+        assert n_replicas >= 1 and max_delay >= 0
+        self.cfg = cfg
+        self.delays = [r % (max_delay + 1) for r in range(n_replicas)]
+        self.replicas = [init_replica(params0) for _ in range(n_replicas)]
+        # ring of the last max_delay+1 cut messages; index -1-d is the
+        # message from d rounds ago (None until it exists)
+        self._ring = deque([None] * (max_delay + 1), maxlen=max_delay + 1)
+
+    def deliver(self, msg) -> None:
+        """One fleet round: enqueue the freshly cut ``msg`` (may be None)
+        and let every replica apply the message its delay entitles it to."""
+        self._ring.append(msg)
+        ring = list(self._ring)
+        for r, d in enumerate(self.delays):
+            arrived = ring[-1 - d] if d < len(ring) else None
+            self.replicas[r] = apply_message(self.replicas[r], arrived,
+                                             self.cfg)
+
+    def freshness(self):
+        """Per-replica ``rounds_behind`` (transport delay + laziness)."""
+        return [st.rounds_behind for st in self.replicas]
+
+    def max_drift(self, params) -> float:
+        return max(staleness_drift(params, st) for st in self.replicas)
+
+
+def trainer_rounds(engine, params0, steps: int) -> Iterable:
+    """Yield the trainer's params iterate after each of ``steps`` rounds.
+
+    The engine round is jitted once and stepped eagerly (the publisher is
+    a host-side state machine between rounds, so a `lax.scan` over the
+    whole run is not an option here — and the per-round host hop is the
+    realistic serving deployment anyway).
+    """
+    step = jax.jit(engine.round)
+    carry = engine.init_carry(params0)
+    for _ in range(steps):
+        carry, _ = step(carry, None)
+        yield carry[0]
+
+
+def publish_trajectory(params_iter: Iterable, cfg: PublishConfig,
+                       state: PublisherState, *,
+                       fleet: Optional[ReplicaFleet] = None):
+    """Run the publisher over a parameter trajectory.
+
+    Returns ``(final_state, rows)`` where ``rows`` has one dict per round:
+    what was sent (``kind`` in push/resync/skip), cumulative bits, and —
+    when a ``fleet`` is attached — its freshness and worst-case drift
+    against the live trainer params.
+    """
+    rows = []
+    for params in params_iter:
+        msg, state = publish(cfg, state, params)
+        if msg is None:
+            kind = "skip"
+        elif hasattr(msg, "payloads"):
+            kind = "push"
+        else:
+            kind = "resync"
+        row = {"round": state.seq, "kind": kind,
+               "bits_sent": state.bits_sent, "n_pushes": state.n_pushes,
+               "n_resyncs": state.n_resyncs,
+               "pub_rounds_behind": state.rounds_behind}
+        if fleet is not None:
+            fleet.deliver(msg)
+            row["fleet_max_behind"] = max(fleet.freshness())
+            row["fleet_max_drift"] = fleet.max_drift(params)
+        rows.append(row)
+    return state, rows

@@ -28,6 +28,47 @@ def make_decode_step(cfg: ModelConfig):
     return serve_step
 
 
+def make_greedy_decode_step(cfg: ModelConfig):
+    """One-token greedy decode with the argmax folded into the jitted body:
+    (params, cache, tokens[B,1]) -> (next_tokens[B,1] int32, new cache).
+
+    Keeping token selection on-device means the decode loop never pulls
+    logits ([B,1,V] f32) back to the host — only the [B,1] int32 token ids
+    cross, and only when the caller asks for them.
+    """
+    def greedy_step(params, cache, tokens):
+        logits, cache = decode_step(params, cache, tokens, cfg)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32) % cfg.vocab
+        return nxt, cache
+    return greedy_step
+
+
+def make_greedy_prefill_step(cfg: ModelConfig, max_len: int):
+    """Prefill returning (first_greedy_token[B,1] int32, cache) — the
+    argmax over the last-position logits folded into the jit, mirroring
+    :func:`make_greedy_decode_step`."""
+    def greedy_prefill(params, tokens):
+        logits, cache = prefill(params, tokens, cfg, max_len)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32) % cfg.vocab
+        return nxt, cache
+    return greedy_prefill
+
+
+def jit_serve(cfg: ModelConfig, max_len: int):
+    """(jitted greedy prefill, jitted greedy decode) for the serve loop.
+
+    The decode jit **donates the cache argument** (arg 1): the KV cache is
+    by far the largest serve-time buffer and is dead the moment the step
+    returns the updated one, so without donation every decoded token pays
+    a full cache copy.  Callers must treat the passed-in cache as consumed
+    (rebind to the returned one) — and must warm the jit with a throwaway
+    cache first, since the warmup call eats its input too.
+    """
+    prefill_fn = jax.jit(make_greedy_prefill_step(cfg, max_len))
+    decode_fn = jax.jit(make_greedy_decode_step(cfg), donate_argnums=(1,))
+    return prefill_fn, decode_fn
+
+
 def _dp_axes(mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 

@@ -1,0 +1,314 @@
+"""Lazy-replica publishing contracts (core/replica.py, launch/publish.py).
+
+The load-bearing guarantees of docs/serving.md, pinned on BOTH wire
+backends:
+
+* a replica that applies every message equals the publisher's published
+  view ``theta_pub`` **bitwise** (the decode path is expression-identical
+  to the publisher's q_new accumulation);
+* lazy skipping bounds the published-view staleness by the relative
+  threshold (``R <= threshold * anchor`` on every skipped round);
+* a ``max_staleness`` resync restores **exact** equality with the live
+  trainer params and resets the error recursion;
+* the two wire backends produce identical push schedules, payload bytes,
+  and replica weights;
+* fleet transport delay composes with laziness: replica ``r`` at round
+  ``k`` serves exactly the published view of round ``k - d_r``;
+* wire-bit accounting is analytic: ``dense_bits`` for snapshots,
+  ``upload_bits(p, b, n_radii=L)`` per quantized push.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CriterionConfig, PublishConfig, RoundEngine,
+                        StrategyConfig)
+from repro.core.adaptive import BitSchedule
+from repro.core.engine import FullBatchSource
+from repro.core.quantize import dense_bits, tree_size, upload_bits
+from repro.core.replica import (apply_message, init_publisher, init_replica,
+                                publish, staleness_drift)
+from repro.launch.publish import (ReplicaFleet, publish_trajectory,
+                                  trainer_rounds)
+
+BACKENDS = ("reference", "fused")
+
+
+def _tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _trajectory(n=25, seed=0):
+    """Geometrically converging iterates: theta_k = theta* + 0.8^k noise_k
+    (what a training run looks like to the publisher, without the cost of
+    one)."""
+    k0 = jax.random.PRNGKey(seed)
+    star = {"w": jax.random.normal(k0, (9, 4)),
+            "b": jax.random.normal(jax.random.fold_in(k0, 1), (11,))}
+    out = []
+    for k in range(n):
+        nk = jax.random.fold_in(k0, 100 + k)
+        noise = {"w": jax.random.normal(nk, (9, 4)),
+                 "b": jax.random.normal(jax.random.fold_in(nk, 1), (11,))}
+        out.append(jax.tree.map(lambda s, z: s + (0.8 ** k) * z, star, noise))
+    return out
+
+
+@pytest.fixture(scope="module")
+def traj():
+    return _trajectory()
+
+
+# ---------------------------------------------------------------------------
+# Bitwise replica == published view; staleness bounds.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_always_push_replica_equals_published_view_bitwise(traj, backend):
+    """threshold=0 pushes every round with nonzero innovation; the replica
+    must track theta_pub bit-for-bit, and theta_pub must track the trainer
+    within one round's quantization error (non-accumulating recursion)."""
+    cfg = PublishConfig(bits=4, threshold=0.0, wire_backend=backend)
+    st = init_publisher(traj[0], cfg)
+    rep = init_replica(traj[0])
+    for params in traj[1:]:
+        msg, st = publish(cfg, st, params)
+        assert msg is not None and hasattr(msg, "payloads")
+        rep = apply_message(rep, msg, cfg)
+        assert _tree_equal(rep.params, st.theta_pub)
+    assert st.n_pushes == len(traj) - 1 and st.n_resyncs == 0
+    # after the final push the view is one quantization step from the
+    # trainer: |theta - theta_pub|_inf <= 2*tau(b)*R of that push
+    assert staleness_drift(traj[-1], rep) < 2.0 / (2 ** 4 - 1)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lazy_skip_bounds_drift_by_relative_threshold(traj, backend):
+    """On every skipped round the innovation radius obeys the lazy rule:
+    R <= threshold * anchor — the freshness guarantee serving relies on."""
+    cfg = PublishConfig(bits=4, threshold=0.4, max_staleness=100,
+                        wire_backend=backend)
+    st = init_publisher(traj[0], cfg)
+    rep = init_replica(traj[0])
+    n_skips = 0
+    for params in traj[1:]:
+        prev_anchor = float(st.R_anchor)
+        msg, st = publish(cfg, st, params)
+        rep = apply_message(rep, msg, cfg)
+        if msg is None:
+            n_skips += 1
+            # the anchor only ever decays between pushes, so the skipped
+            # round's R is bounded by threshold * (this round's anchor)
+            drift = staleness_drift(params, rep)
+            anchor = max(float(st.R_anchor), prev_anchor)
+            assert drift <= cfg.threshold * anchor + 1e-7
+        else:
+            assert _tree_equal(rep.params, st.theta_pub)
+    assert n_skips > 0, "threshold=0.4 on a converging run must skip"
+    assert st.n_pushes + n_skips == len(traj) - 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_max_staleness_resync_restores_exact_equality(traj, backend):
+    """threshold >= 1 never lazily pushes, so every max_staleness+1 rounds
+    the publisher must cut a full-precision resync that makes the replica
+    bitwise equal to the live trainer params."""
+    cfg = PublishConfig(threshold=1.5, max_staleness=3, wire_backend=backend)
+    st = init_publisher(traj[0], cfg)
+    rep = init_replica(traj[0])
+    resync_rounds = []
+    for k, params in enumerate(traj[1:]):
+        msg, st = publish(cfg, st, params)
+        rep = apply_message(rep, msg, cfg)
+        if msg is not None:
+            assert not hasattr(msg, "payloads"), "threshold>=1 never pushes"
+            resync_rounds.append(k)
+            assert _tree_equal(rep.params, params)
+            assert _tree_equal(st.theta_pub, params)
+            assert st.rounds_behind == 0
+        else:
+            assert rep.rounds_behind <= cfg.max_staleness
+    assert resync_rounds, "a converging run must trip the staleness bound"
+    # the skip counter is bounded: resyncs land every max_staleness+1 rounds
+    gaps = np.diff([-1] + resync_rounds)
+    assert (gaps == cfg.max_staleness + 1).all()
+    assert st.n_resyncs == len(resync_rounds) and st.n_pushes == 0
+    # exact accounting: resyncs are dense snapshots
+    p = tree_size(traj[0])
+    assert st.bits_sent == dense_bits(p) * (1 + st.n_resyncs)
+
+
+def test_zero_innovation_skips_without_resync(traj):
+    """A stationary trainer (R == 0) must stay silent forever — bounded
+    staleness is about unseen *change*, not wall-clock."""
+    cfg = PublishConfig(threshold=0.25, max_staleness=2)
+    st = init_publisher(traj[0], cfg)
+    for _ in range(10):
+        msg, st = publish(cfg, st, traj[0])
+        assert msg is None
+    assert st.n_resyncs == 0 and st.n_pushes == 0
+    assert st.rounds_behind == 10
+
+
+# ---------------------------------------------------------------------------
+# Backend parity; adaptive width; accounting.
+# ---------------------------------------------------------------------------
+
+def test_backend_parity_schedule_payloads_and_weights(traj):
+    """Reference and fused backends must agree on the push schedule, the
+    payload bytes on the wire, and the resulting replica weights."""
+    reps, sts, payloads = {}, {}, {}
+    for backend in BACKENDS:
+        cfg = PublishConfig(bits=4, threshold=0.35, max_staleness=5,
+                            wire_backend=backend)
+        st = init_publisher(traj[0], cfg)
+        rep = init_replica(traj[0])
+        sched, raw = [], []
+        for params in traj[1:]:
+            msg, st = publish(cfg, st, params)
+            rep = apply_message(rep, msg, cfg)
+            sched.append(None if msg is None
+                         else "p" if hasattr(msg, "payloads") else "r")
+            if msg is not None and hasattr(msg, "payloads"):
+                raw.append([np.asarray(x) for x in msg.payloads])
+        reps[backend], sts[backend], payloads[backend] = rep, st, (sched, raw)
+    assert payloads["reference"][0] == payloads["fused"][0]
+    for mr, mf in zip(payloads["reference"][1], payloads["fused"][1]):
+        for lr, lf in zip(mr, mf):
+            # fused payloads are BLOCK-padded; the common prefix (all real
+            # codes live there) must match byte-for-byte
+            n = min(lr.size, lf.size)
+            np.testing.assert_array_equal(lr[:n], lf[:n])
+    assert _tree_equal(reps["reference"].params, reps["fused"].params)
+    assert sts["reference"].bits_sent == sts["fused"].bits_sent
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_adaptive_width_pushes_decode_bitwise(traj, backend):
+    """With a rel-mode BitSchedule the per-push width varies; the replica
+    decodes through the width announced in the message and still matches
+    theta_pub bitwise."""
+    cfg = PublishConfig(threshold=0.0, wire_backend=backend,
+                        bit_schedule=BitSchedule(kind="radius", grid=(2, 4, 8),
+                                                 threshold_mode="rel",
+                                                 thresholds=(0.05, 0.5)))
+    st = init_publisher(traj[0], cfg)
+    rep = init_replica(traj[0])
+    widths = []
+    for params in traj[1:]:
+        msg, st = publish(cfg, st, params)
+        rep = apply_message(rep, msg, cfg)
+        if msg is not None:
+            widths.append(msg.width)
+            assert _tree_equal(rep.params, st.theta_pub)
+    assert set(widths) <= {2, 4, 8}
+    assert len(set(widths)) > 1, "radius decay must move the width"
+    # accounting carries the 8-bit width sidecar
+    p = tree_size(traj[0])
+    L = len(jax.tree.leaves(traj[0]))
+    expect = dense_bits(p) + sum(
+        upload_bits(p, b, n_radii=L, bit_sidecar=True) for b in widths)
+    assert st.bits_sent == expect
+
+
+def test_always_push_bits_accounting_is_analytic(traj):
+    """bits_sent == init dense snapshot + K * upload_bits(p, b, L)."""
+    cfg = PublishConfig(bits=8, threshold=0.0)
+    st = init_publisher(traj[0], cfg)
+    for params in traj[1:]:
+        _, st = publish(cfg, st, params)
+    p = tree_size(traj[0])
+    L = len(jax.tree.leaves(traj[0]))
+    assert st.bits_sent == dense_bits(p) + st.n_pushes * upload_bits(
+        p, 8, n_radii=L)
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        PublishConfig(bits=3).validate()
+    with pytest.raises(AssertionError):
+        PublishConfig(threshold=-0.1).validate()
+    with pytest.raises(AssertionError):  # abs-mode schedule has no anchor
+        PublishConfig(bit_schedule=BitSchedule(
+            kind="radius", grid=(2, 4, 8), threshold_mode="abs",
+            thresholds=(0.1, 1.0))).validate()
+
+
+# ---------------------------------------------------------------------------
+# Fleet: transport delay composes with laziness.
+# ---------------------------------------------------------------------------
+
+def test_fleet_delay_serves_the_delayed_published_view(traj):
+    """Replica r (delay d_r = r mod (max_delay+1)) at round k holds exactly
+    the published view of round k - d_r — transport delay is just a shifted
+    subscription, not a different protocol."""
+    cfg = PublishConfig(bits=4, threshold=0.3, max_staleness=4)
+    st = init_publisher(traj[0], cfg)
+    fleet = ReplicaFleet(traj[0], 3, cfg, max_delay=2)
+    views = [st.theta_pub]  # published view after each round; [0] = init
+    for params in traj[1:]:
+        msg, st = publish(cfg, st, params)
+        fleet.deliver(msg)
+        views.append(st.theta_pub)
+        for r, d in enumerate(fleet.delays):
+            want = views[max(0, len(views) - 1 - d)]
+            assert _tree_equal(fleet.replicas[r].params, want)
+    assert max(fleet.freshness()) <= cfg.max_staleness + 2  # + max_delay
+
+
+def test_fleet_synchronous_equals_single_replica(traj):
+    cfg = PublishConfig(bits=4, threshold=0.3, max_staleness=4)
+    st = init_publisher(traj[0], cfg)
+    rep = init_replica(traj[0])
+    fleet = ReplicaFleet(traj[0], 2, cfg, max_delay=0)
+    for params in traj[1:]:
+        msg, st = publish(cfg, st, params)
+        rep = apply_message(rep, msg, cfg)
+        fleet.deliver(msg)
+    for fr in fleet.replicas:
+        assert _tree_equal(fr.params, rep.params)
+
+
+# ---------------------------------------------------------------------------
+# End to end against a real RoundEngine trainer.
+# ---------------------------------------------------------------------------
+
+def _quadratic(M=6, p=16, seed=3):
+    key = jax.random.PRNGKey(seed)
+    kc, ka = jax.random.split(key)
+    centers = jax.random.normal(kc, (M, p))
+    scales = 0.5 + jax.random.uniform(ka, (M, p))
+
+    def loss_fn(params, data):
+        c, a = data
+        return 0.5 * jnp.sum(a * jnp.square(params["x"] - c)) / M
+    return loss_fn, {"x": jnp.zeros((p,))}, (centers, scales)
+
+
+def test_publish_trajectory_over_engine_rounds():
+    """The full driver: a LAQ RoundEngine trainer feeds publish_trajectory;
+    the attached fleet stays within the configured staleness budget and its
+    drift against the live trainer decays with the iterates."""
+    loss_fn, p0, data = _quadratic()
+    eng = RoundEngine(FullBatchSource(loss_fn, data),
+                      StrategyConfig(kind="laq", bits=8, per_leaf_radius=True,
+                                     criterion=CriterionConfig(D=10, xi=0.08,
+                                                               t_bar=100)),
+                      alpha=0.3)
+    cfg = PublishConfig(bits=4, threshold=0.3, max_staleness=4)
+    st = init_publisher(p0, cfg)
+    fleet = ReplicaFleet(p0, 2, cfg, max_delay=1)
+    st, rows = publish_trajectory(trainer_rounds(eng, p0, 40), cfg, st,
+                                  fleet=fleet)
+    assert len(rows) == 40
+    kinds = {r["kind"] for r in rows}
+    assert "push" in kinds and "skip" in kinds, \
+        "a converging trainer must both push and skip"
+    assert max(r["fleet_max_behind"] for r in rows) <= cfg.max_staleness + 1
+    # monotone bits, and the tail drift is small compared to the head
+    bits = [r["bits_sent"] for r in rows]
+    assert all(b2 >= b1 for b1, b2 in zip(bits, bits[1:]))
+    drifts = [r["fleet_max_drift"] for r in rows]
+    assert np.mean(drifts[-5:]) < 0.1 * (np.mean(drifts[:5]) + 1e-12)
