@@ -9,7 +9,9 @@ Flags:
 * ``--claims-only`` — run only the modules that gate paper claims (skips the
   timing-only microbenchmarks, whose numbers are machine noise on CI).
 * ``--tiny`` — forward ``tiny=True`` to every module whose ``run`` accepts
-  it (shorter horizons / looser targets for CI smoke).
+  it (shorter horizons / looser targets for CI smoke), and register the
+  ``wire_roofline`` pass: compiled cost analysis of the fused wire pipeline
+  (launch/roofline.py) with no timing, so it gates even on noisy runners.
 
 Any module that *raises* fails the harness exactly like a failed claim: the
 exception is recorded as a synthetic failing check and the exit code is
@@ -26,7 +28,9 @@ import time
 import traceback
 
 
-def _modules(claims_only: bool):
+def _modules(claims_only: bool, tiny: bool = False):
+    import types
+
     from . import (adaptive_sweep, bits_sweep, convergence, ef_frontier,
                    fault_frontier, lasg_frontier, lm_frontier,
                    participation_frontier, serve_frontier, table2_gradient,
@@ -45,6 +49,12 @@ def _modules(claims_only: bool):
         # timing-only modules: their checks are perf trajectories, not
         # paper claims, and CI runners are too noisy to gate on them
         mods = [(n, m) for n, m in mods if n != "wire_microbench"]
+    if tiny:
+        # roofline-only pass (compiled cost analysis, no timing): it is
+        # deterministic, so it can gate CI smoke even when the timing
+        # microbenchmark above is skipped
+        mods.append(("wire_roofline", types.SimpleNamespace(
+            run=wire_microbench.run_roofline)))
     return mods
 
 
@@ -60,7 +70,7 @@ def main(argv=None) -> None:
     out_rows, results = [], {}
     all_checks = {}
 
-    for name, mod in _modules(args.claims_only):
+    for name, mod in _modules(args.claims_only, args.tiny):
         t = time.time()
         kwargs = {}
         if args.tiny and "tiny" in inspect.signature(mod.run).parameters:

@@ -28,6 +28,19 @@ The sweep counts in the JSON are derived from the stage/pass lists the
 bench actually executes, not hardcoded — adding a pass to either pipeline
 changes the recorded number (and fails the <= 2 check for the fused path).
 
+Every row also carries the lowering the fused backend actually took
+(``fused_lowering``: "pallas" off-CPU, "jnp-flat" on CPU) and flat
+``roofline_*`` terms from launch/roofline.py: compiled cost-analysis
+FLOPs / HBM bytes / collective bytes of the fused whole-jit pipeline
+against the TPU v5e roofline constants, the binding term, the roofline
+bound in microseconds, and the achieved fraction of that bound
+(bound / measured whole-jit time — nominal on CPU, where the constants
+describe the target part, meaningful on it).
+
+An adaptive row (bit_schedule grid, width selected by onehot) rides the
+largest size so the width-grid-unrolled pass-2 kernel shows up in the
+trajectory next to its 8-stage staged counterpart.
+
     PYTHONPATH=src python -m benchmarks.wire_microbench [--tiny]
 """
 from __future__ import annotations
@@ -40,16 +53,24 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.adaptive import (dequantize_dynamic, quantize_dynamic,
+                                 tau_of_selection)
 from repro.core.quantize import (dequantize_innovation, pack_codes,
                                  quantize_codes)
-# _fused_leaf_jnp is the CPU lowering of the pass-2 kernel; the bench jits
-# it as one unit per pass, mirroring the Pallas kernel structure
-from repro.core.wire import FusedWire, _fused_leaf_jnp, get_backend
+# _fused_leaf_jnp / _fused_leaf_adaptive_jnp are the CPU lowerings of the
+# pass-2 kernels; the bench jits each as one unit per pass, mirroring the
+# Pallas kernel structure
+from repro.core.wire import (FusedWire, _fused_leaf_adaptive_jnp,
+                             _fused_leaf_jnp, get_backend)
+from repro.launch import roofline
 
 SIZES = [1 << 14, 1 << 17, 1 << 20]
 TINY_SIZES = [1 << 12]
 EXTRA_BITS_AT_LARGEST = (2, 8)
 REPS = 20
+GRID = (2, 4, 8)          # adaptive row: bit_schedule grid ...
+ADAPTIVE_SEL = 1          # ... with b = GRID[1] = 4 selected (matches the
+                          # fixed-width default, so the rows are comparable)
 
 ROOT_JSON = os.path.abspath(os.path.join(os.path.dirname(__file__),
                                          os.pardir, "BENCH_wire.json"))
@@ -90,16 +111,79 @@ def _fused_passes(bits):
             jax.jit(lambda g, qh, R: _fused_leaf_jnp(g, qh, R, bits, True))]
 
 
-def _runners(n, bits):
+def _onehot(grid, sel):
+    return jnp.eye(len(grid), dtype=jnp.float32)[sel]
+
+
+def _adaptive_ref_stages(grid, onehot):
+    """The staged adaptive pipeline: same 8-stage shape as the fixed-width
+    one, with the codes/delta stages running the grid-evaluated
+    quantize_dynamic / dequantize_dynamic sweeps (core/adaptive.py)."""
+    t_sel = tau_of_selection(grid, onehot)
+    provision = max(grid)
+    return [
+        jax.jit(lambda g, qh: g - qh),                             # diff
+        jax.jit(lambda d: jnp.max(jnp.abs(d))),                    # R
+        jax.jit(lambda d, R: quantize_dynamic(                     # codes
+            {"w": d}, {"w": R}, grid, onehot)["w"]),
+        jax.jit(lambda q, R: dequantize_dynamic(                   # delta
+            {"w": q}, {"w": R}, t_sel)["w"]),
+        jax.jit(lambda qh, d: qh + d),                             # q_new
+        jax.jit(lambda g, qn: jnp.sum(jnp.square(g - qn))),        # err_sq
+        jax.jit(lambda d: jnp.sum(jnp.square(d))),                 # inn_sq
+        jax.jit(lambda q: pack_codes(q, provision)),               # payload
+    ]
+
+
+def _adaptive_fused_passes(grid, onehot):
+    """The adaptive fused pipeline: absmax + the width-grid-unrolled pass-2
+    kernel (one lax.switch arm per grid width)."""
+    if FusedWire()._use_pallas():
+        from repro.kernels import absmax, quantize_pack_adaptive
+        return [absmax,
+                lambda g, qh, R: quantize_pack_adaptive(g, qh, R,
+                                                        onehot, grid)]
+    t_sel = tau_of_selection(grid, onehot)
+    return [jax.jit(lambda g, qh: jnp.max(jnp.abs(g - qh))),
+            jax.jit(lambda g, qh, R: _fused_leaf_adaptive_jnp(
+                g, qh, R, grid, onehot, t_sel, True))]
+
+
+def _whole_jit_adaptive(backend, grid, onehot):
+    """Single-jit adaptive roundtrip through ``backend`` (radius computed
+    inside the jit, like the fixed-width whole-jit rows)."""
+    def fn(g, qh):
+        d = g.astype(jnp.float32) - qh.astype(jnp.float32)
+        R = jnp.max(jnp.abs(d))
+        return backend.adaptive_roundtrip({"w": g}, {"w": qh}, {"w": d},
+                                          {"w": R}, grid, onehot)
+    return jax.jit(fn)
+
+
+def _runners(n, bits, adaptive=False):
     """(staged_reference, staged_fused, jit_reference, jit_fused) callables
     over the same flat-leaf inputs, plus the per-pipeline sweep counts."""
     ref = get_backend("reference")
     fus = get_backend("fused")
-    stages = _ref_stages(bits)
-    passes = _fused_passes(bits)
 
     def tree(g, qh):
         return {"w": g}, {"w": qh}
+
+    if adaptive:
+        onehot = _onehot(GRID, ADAPTIVE_SEL)
+        stages = _adaptive_ref_stages(GRID, onehot)
+        passes = _adaptive_fused_passes(GRID, onehot)
+        ref_jit = _whole_jit_adaptive(ref, GRID, onehot)
+        fus_jit = _whole_jit_adaptive(fus, GRID, onehot)
+        key = "_adaptive"
+    else:
+        stages = _ref_stages(bits)
+        passes = _fused_passes(bits)
+        ref_jit = jax.jit(lambda g, qh: ref.roundtrip(
+            *tree(g, qh), bits, False, with_payload=True))
+        fus_jit = jax.jit(lambda g, qh: fus.roundtrip(
+            *tree(g, qh), bits, False, with_payload=True))
+        key = ""
 
     def ref_staged(g, qh):
         s_diff, s_R, s_codes, s_delta, s_qnew, s_err, s_inn, s_pack = stages
@@ -114,21 +198,45 @@ def _runners(n, bits):
         p_absmax, p_main = passes
         return p_main(g, qh, p_absmax(g, qh))
 
-    ref_jit = jax.jit(lambda g, qh: ref.roundtrip(*tree(g, qh), bits, False,
-                                                  with_payload=True))
-    fus_jit = jax.jit(lambda g, qh: fus.roundtrip(*tree(g, qh), bits, False,
-                                                  with_payload=True))
-    sweeps = {"reference": len(stages), "fused": len(passes)}
+    sweeps = {"reference" + key: len(stages), "fused" + key: len(passes)}
     return (ref_staged, fus_staged, ref_jit, fus_jit), sweeps
 
 
-def _time_all(n, bits, reps, best=None):
+def _roofline_terms(n, bits, adaptive=False):
+    """Flat ``roofline_*`` scalars for the fused whole-jit pipeline at
+    (n, bits): compiled cost-analysis terms against the TPU v5e roofline
+    constants, plus the lowering the fused backend takes on this host."""
+    g, qh = _inputs(n)
+    fus = get_backend("fused")
+    if adaptive:
+        fn = _whole_jit_adaptive(fus, GRID, _onehot(GRID, ADAPTIVE_SEL))
+    else:
+        fn = jax.jit(lambda g, qh: fus.roundtrip({"w": g}, {"w": qh}, bits,
+                                                 False, with_payload=True))
+    r = roofline.analyze(fn.lower(g, qh).compile(),
+                         n_devices=1, model_flops_global=0.0)
+    bound_s = max(r.t_compute, r.t_memory, r.t_collective)
+    return {
+        "fused_lowering": ("pallas" if FusedWire()._use_pallas()
+                           else "jnp-flat"),
+        "roofline_flops": r.flops,
+        "roofline_hbm_bytes": r.hbm_bytes,
+        "roofline_coll_bytes": r.coll_bytes,
+        "roofline_t_compute_us": round(r.t_compute * 1e6, 4),
+        "roofline_t_memory_us": round(r.t_memory * 1e6, 4),
+        "roofline_t_collective_us": round(r.t_collective * 1e6, 4),
+        "roofline_bottleneck": r.bottleneck,
+        "roofline_bound_us": round(bound_s * 1e6, 4),
+    }
+
+
+def _time_all(n, bits, reps, best=None, adaptive=False):
     """Min-of-reps with INTERLEAVED repetitions so machine-load drift hits
     every pipeline equally.  ``best`` merges mins from earlier rounds: the
     min estimates the quiet-machine cost, so pooling reps across rounds is
     the same estimator with more samples."""
     g, qh = _inputs(n)
-    fns, sweeps = _runners(n, bits)
+    fns, sweeps = _runners(n, bits, adaptive)
     for fn in fns:
         jax.tree.map(jax.block_until_ready, fn(g, qh))   # compile
     best = list(best) if best else [float("inf")] * len(fns)
@@ -142,26 +250,34 @@ def _time_all(n, bits, reps, best=None):
 
 def bench(sizes, reps=REPS, bits=4):
     rows = []
-    cases = [(n, bits) for n in sizes]
+    cases = [(n, bits, False) for n in sizes]
     if len(sizes) > 1:
-        cases += [(sizes[-1], b) for b in EXTRA_BITS_AT_LARGEST]
-    sweeps = None
-    for n, b in cases:
-        best, sweeps = _time_all(n, b, reps)
+        cases += [(sizes[-1], b, False) for b in EXTRA_BITS_AT_LARGEST]
+    # the adaptive trajectory row: grid-unrolled pass 2 at the largest size
+    cases += [(sizes[-1], GRID[ADAPTIVE_SEL], True)]
+    sweeps = {}
+    for n, b, adaptive in cases:
+        best, sw = _time_all(n, b, reps, adaptive=adaptive)
+        sweeps.update(sw)
         # headline cell: keep pooling reps until the min-cost estimate is
         # converged enough to call (noisy shared machines need more samples)
         rounds = 1
-        while (n == max(sizes) and b == bits and rounds < 4
+        while (not adaptive and n == max(sizes) and b == bits and rounds < 4
                and best[0] / best[1] <= 1.05):
             best, _ = _time_all(n, b, reps, best)
             rounds += 1
         r_st, f_st, r_jit, f_jit = [x * 1e6 for x in best]
-        rows.append({"n": n, "bits": b,
-                     "reference_us": round(r_st, 2),
-                     "fused_us": round(f_st, 2),
-                     "speedup": round(r_st / f_st, 3),
-                     "whole_jit_reference_us": round(r_jit, 2),
-                     "whole_jit_fused_us": round(f_jit, 2)})
+        row = {"n": n, "bits": b, "adaptive": adaptive,
+               "reference_us": round(r_st, 2),
+               "fused_us": round(f_st, 2),
+               "speedup": round(r_st / f_st, 3),
+               "whole_jit_reference_us": round(r_jit, 2),
+               "whole_jit_fused_us": round(f_jit, 2)}
+        row.update(_roofline_terms(n, b, adaptive))
+        row["roofline_frac_achieved"] = (
+            round(row["roofline_bound_us"] / row["whole_jit_fused_us"], 6)
+            if row["whole_jit_fused_us"] > 0 else None)
+        rows.append(row)
     return rows, sweeps
 
 
@@ -170,15 +286,26 @@ def write_json(rows, sweeps, sizes, path=ROOT_JSON, tiny=False):
     # the headline cell (largest size, default width); extra-bits rows stay
     # recorded as data but don't gate — their CPU margins are thinner and
     # machine noise would make the check flaky
-    head = [r for r in rows if r["n"] == largest and r["bits"] == 4]
+    head = [r for r in rows if r["n"] == largest and r["bits"] == 4
+            and not r["adaptive"]]
     checks = {
         # derived from the pass list the bench actually executed, not a
         # constant: a third pass in the fused pipeline fails this
         "fused_le_two_sweeps": sweeps["fused"] <= 2,
+        "adaptive_fused_le_two_sweeps": (
+            sweeps["fused_adaptive"] <= 2
+            if "fused_adaptive" in sweeps else None),
         # dispatch overhead dominates the tiny CI-smoke size, so the
         # speedup claim is only evaluated on the full size sweep
         "fused_speedup_at_largest": (None if tiny else
                                      all(r["speedup"] > 1.0 for r in head)),
+        # every row records the lowering it measured and positive compiled
+        # cost-analysis terms (the roofline inputs)
+        "rows_record_lowering": all(
+            r.get("fused_lowering") in ("pallas", "jnp-flat") for r in rows),
+        "roofline_terms_present": all(
+            r.get("roofline_flops", 0) > 0 and
+            r.get("roofline_hbm_bytes", 0) > 0 for r in rows),
     }
     payload = {
         "jax_backend": jax.default_backend(),
@@ -190,6 +317,9 @@ def write_json(rows, sweeps, sizes, path=ROOT_JSON, tiny=False):
                                      "(8 staged kernels vs 2 fused passes)",
             "whole_jit_*": "single-jit context rows; XLA monolithic fusion "
                            "puts both at parity on CPU",
+            "roofline_*": "compiled cost-analysis of the fused whole-jit "
+                          "pipeline vs TPU v5e peaks (launch/roofline.py); "
+                          "frac_achieved = bound/measured, nominal on CPU",
         },
         "sweeps_per_round": sweeps,
         "rows": rows,
@@ -205,11 +335,41 @@ def run(out_rows, results):
     rows, sweeps = bench(SIZES)
     checks, payload = write_json(rows, sweeps, SIZES)
     for r in rows:
-        out_rows.append((f"wire_ref_n{r['n']}_b{r['bits']}",
+        tag = "_adaptive" if r["adaptive"] else ""
+        out_rows.append((f"wire_ref_n{r['n']}_b{r['bits']}{tag}",
                          r["reference_us"], "us/round staged send-side"))
-        out_rows.append((f"wire_fused_n{r['n']}_b{r['bits']}",
-                         r["fused_us"], f"2-pass, speedup x{r['speedup']}"))
+        out_rows.append((f"wire_fused_n{r['n']}_b{r['bits']}{tag}",
+                         r["fused_us"],
+                         f"2-pass ({r['fused_lowering']}), "
+                         f"speedup x{r['speedup']}"))
     results["wire_microbench"] = payload
+    return checks
+
+
+def run_roofline(out_rows, results, tiny=True):
+    """benchmarks/run.py entry point for the roofline-only pass (compiled
+    cost analysis, no timing — deterministic, so safe to gate in CI smoke
+    where the timing microbenchmarks are skipped)."""
+    n = TINY_SIZES[0] if tiny else SIZES[-1]
+    rows = []
+    for bits, adaptive in ((4, False), (4, True)):
+        r = {"n": n, "bits": bits, "adaptive": adaptive}
+        r.update(_roofline_terms(n, bits, adaptive))
+        rows.append(r)
+        tag = "_adaptive" if adaptive else ""
+        out_rows.append((f"wire_roofline_n{n}_b{bits}{tag}",
+                         r["roofline_bound_us"],
+                         f"{r['roofline_bottleneck']}-bound, "
+                         f"{r['fused_lowering']}"))
+    checks = {
+        "roofline_cost_analysis_positive": all(
+            r["roofline_flops"] > 0 and r["roofline_hbm_bytes"] > 0
+            for r in rows),
+        "roofline_bottleneck_valid": all(
+            r["roofline_bottleneck"] in ("compute", "memory", "collective")
+            for r in rows),
+    }
+    results["wire_roofline"] = {"rows": rows, "checks": checks}
     return checks
 
 
@@ -222,11 +382,14 @@ def main():
     rows, sweeps = bench(sizes, reps=3 if args.tiny else REPS)
     checks, _ = write_json(rows, sweeps, sizes, tiny=args.tiny)
     for r in rows:
-        print(f"n={r['n']} b={r['bits']}: staged reference "
+        kind = "adaptive" if r["adaptive"] else "fixed"
+        print(f"n={r['n']} b={r['bits']} {kind}: staged reference "
               f"{r['reference_us']:.0f}us  fused 2-pass {r['fused_us']:.0f}us"
               f"  speedup x{r['speedup']}  (whole-jit: "
               f"{r['whole_jit_reference_us']:.0f} vs "
-              f"{r['whole_jit_fused_us']:.0f}us)")
+              f"{r['whole_jit_fused_us']:.0f}us; {r['fused_lowering']}, "
+              f"roofline {r['roofline_bottleneck']}-bound "
+              f"{r['roofline_bound_us']}us)")
     print(f"sweeps/round: {sweeps} -> {ROOT_JSON}")
     for k, v in checks.items():
         print(f"[{'SKIP' if v is None else 'PASS' if v else 'FAIL'}] {k}")

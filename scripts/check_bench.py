@@ -17,6 +17,16 @@ Every artifact must be a JSON object with
 A ``false`` check is also a failure here: a committed artifact recording a
 failing claim must fail the gate, not ride along silently.
 
+``BENCH_wire.json`` additionally carries per-row lowering + roofline
+schema (the perf-trajectory contract): every row must record which
+lowering the fused pipeline measured (``fused_lowering``: "pallas" or
+"jnp-flat") and positive compiled cost-analysis roofline terms
+(``roofline_flops``, ``roofline_hbm_bytes``, a valid
+``roofline_bottleneck``).  On a Pallas-capable backend (``jax_backend``
+!= "cpu") a row reporting "jnp-flat" fails the gate: the artifact would
+be silently measuring the fallback lowering on hardware where the
+kernels should run.
+
 Exit code 0 iff every artifact validates.
 
     python scripts/check_bench.py
@@ -65,6 +75,40 @@ def validate(path: pathlib.Path) -> list[str]:
             elif v is False:
                 errors.append(f"{path.name}: checks[{name!r}] is false — "
                               f"artifact records a failing claim")
+
+    if path.name == "BENCH_wire.json" and isinstance(rows, list):
+        errors += validate_wire(path.name, doc, rows)
+    return errors
+
+
+_BOTTLENECKS = ("compute", "memory", "collective")
+
+
+def validate_wire(name: str, doc: dict, rows: list) -> list[str]:
+    """BENCH_wire.json-specific schema: per-row lowering + roofline terms."""
+    errors = []
+    backend = doc.get("jax_backend")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            continue
+        lowering = row.get("fused_lowering")
+        if lowering not in ("pallas", "jnp-flat"):
+            errors.append(f"{name}: rows[{i}] missing/invalid "
+                          f"'fused_lowering' (got {lowering!r})")
+        elif backend != "cpu" and lowering == "jnp-flat":
+            errors.append(f"{name}: rows[{i}] measured the jnp-flat "
+                          f"fallback on Pallas-capable backend "
+                          f"{backend!r} — kernels did not lower")
+        for key in ("roofline_flops", "roofline_hbm_bytes"):
+            v = row.get(key)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or v <= 0:
+                errors.append(f"{name}: rows[{i}] needs positive "
+                              f"{key!r}, got {v!r}")
+        if row.get("roofline_bottleneck") not in _BOTTLENECKS:
+            errors.append(f"{name}: rows[{i}] 'roofline_bottleneck' must "
+                          f"be one of {_BOTTLENECKS}, got "
+                          f"{row.get('roofline_bottleneck')!r}")
     return errors
 
 

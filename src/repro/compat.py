@@ -1,10 +1,16 @@
-"""jax version-compatibility shims (validated on 0.4.37 and the current API).
+"""jax version-compatibility layer — native ≥ 0.5 paths primary, 0.4.x shims
+kept for one more release.
 
-Two API moves are papered over here so the rest of the codebase can be
-written against the modern surface:
+As of the jax ≥ 0.5 migration the **native API surface is the primary
+path**: ``jax.shard_map`` (full partial-auto support in the partitioner),
+``jax.sharding.get_abstract_mesh``, and Pallas lowering inside
+partially-manual ``shard_map`` regions.  Everything in this module that
+exists to paper over 0.4.x is a *deprecated legacy shim*, gated on
+``ON_LEGACY_JAX`` and scheduled for deletion when the 0.4.37 CI pin drops
+(one release of overlap; the CI matrix runs both pins until then):
 
 * ``shard_map`` — new jax exposes ``jax.shard_map(f, mesh=..., in_specs=...,
-  out_specs=..., axis_names=..., check_vma=...)``; 0.4.x only has
+  out_specs=..., axis_names=...)``; 0.4.x only has
   ``jax.experimental.shard_map.shard_map(f, mesh, in_specs, out_specs,
   check_rep=..., auto=...)``.  The shim translates ``axis_names`` (the set of
   *manual* axes) into ``auto`` (its complement over the mesh) and ``check_vma``
@@ -23,15 +29,46 @@ written against the modern surface:
   (``models.layers.maybe_constrain``) already treat an unresolvable
   constraint as a no-op, which is the correct 0.4.x degradation: the pins
   are a collective-payload perf optimization, not a correctness requirement.
+
+* the three 0.4.x partial-auto partitioner limits (loops/collectives over
+  auto axes, PartitionId, Pallas lowering) and their degradations
+  (``needs_loop_unrolling`` static unrolls, the local-decode+psum packed
+  wire, the reference-wire downgrade in ``launch/train.py``).  On ≥ 0.5
+  every capability flag below is True and none of the degradations is ever
+  consulted — they are dead code on the primary path.
 """
 from __future__ import annotations
 
 import contextlib
 import functools
+import logging
 import threading
 from typing import NamedTuple
 
 import jax
+
+logger = logging.getLogger("repro.compat")
+
+
+def _parse_version(v: str) -> tuple:
+    parts = []
+    for tok in v.split(".")[:3]:
+        num = ""
+        for ch in tok:
+            if not ch.isdigit():
+                break
+            num += ch
+        parts.append(int(num) if num else 0)
+    return tuple(parts)
+
+
+JAX_VERSION = _parse_version(jax.__version__)
+
+# The migration gate: jax < 0.5 runs the *legacy* partial-auto partitioner
+# whose limits the degradations below paper over.  ≥ 0.5 is the primary,
+# shim-free path.  (Kept alongside the hasattr probes because a bare
+# version check is what the deprecation schedule is written against.)
+ON_LEGACY_JAX = JAX_VERSION < (0, 5)
 
 _HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
 _HAS_NATIVE_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
@@ -45,11 +82,16 @@ class AmbientMesh(NamedTuple):
 
 _tls = threading.local()
 
+# --------------------------------------------------------------------------
+# Capability flags.  All True on ≥ 0.5 (the primary path); the False
+# branches are the deprecated 0.4.x degradations, kept for one release.
+# --------------------------------------------------------------------------
+
 # The 0.4.x SPMD partitioner check-fails (hard abort: "Check failed:
 # sharding.IsManualSubgroup()") on XLA control flow (scan/while/cond) whose
 # body touches values sharded over the *auto* axes of a partially-manual
 # shard_map.  Model code must statically unroll such loops there.
-SUPPORTS_LOOPS_OVER_AUTO_AXES = _HAS_NATIVE_SHARD_MAP
+SUPPORTS_LOOPS_OVER_AUTO_AXES = not ON_LEGACY_JAX
 
 # Likewise, inside a partially-manual shard_map the 0.4.x partitioner only
 # lowers ``psum``: ``all_gather``/``ppermute`` hit the same hard abort, and
@@ -57,27 +99,60 @@ SUPPORTS_LOOPS_OVER_AUTO_AXES = _HAS_NATIVE_SHARD_MAP
 # still because ``axis_index`` lowers to a PartitionId instruction the
 # partitioner rejects.  Payload-exchange code must degrade to psum-only
 # transport on 0.4.x (see launch/train.py ``_packed_aggregate``).
-SUPPORTS_PARTIAL_AUTO_COLLECTIVES = _HAS_NATIVE_SHARD_MAP
+SUPPORTS_PARTIAL_AUTO_COLLECTIVES = not ON_LEGACY_JAX
+
+# The 0.4.x partial-auto partitioner cannot lower ``pallas_call`` (nor the
+# flat reshapes of auto-axis-sharded leaves the fused wire's per-leaf
+# kernels need), so the sharded step must downgrade any non-reference wire
+# backend there.  ≥ 0.5 lowers both, so the requested backend is honored
+# (launch/train.py resolve_wire_backend).
+SUPPORTS_PALLAS_PARTIAL_AUTO = not ON_LEGACY_JAX
+
+
+def in_legacy_partial_auto_region() -> bool:
+    """True while tracing inside a compat shard_map region on 0.4.x — the
+    scope where ALL the legacy partitioner limits apply (loops/collectives/
+    Pallas over auto axes, and non-manual sharding constraints, which
+    hard-abort ``spmd_partitioner.cc`` the same way).  Constant False on
+    ≥ 0.5; scheduled for deletion with the 0.4.37 CI pin."""
+    return ON_LEGACY_JAX and getattr(_tls, "mesh", None) is not None
 
 
 def needs_loop_unrolling() -> bool:
     """True while tracing inside a compat shard_map region on a jax whose
-    partitioner aborts on loops over auto-axis-sharded values (0.4.x).
+    partitioner aborts on loops over auto-axis-sharded values (0.4.x only —
+    constant False on ≥ 0.5, where this helper is scheduled for deletion).
 
     Model code consults this to swap ``lax.scan`` for a static python loop
-    (layer stack, flash-attention kv chunks, microbatch accumulation).  Known
-    limitation: the Mamba2 sequence scan and the hybrid stack's ``lax.cond``
-    have no unrolled variant, so SSM/hybrid architectures still cannot run
-    under partial-auto shard_map on 0.4.x.
+    (layer stack, flash-attention kv chunks, microbatch accumulation, and
+    the Mamba2 inter-chunk recurrence).  Perf-only sharding constraints
+    (``moe._shard_experts``) no-op in the same scope via
+    :func:`in_legacy_partial_auto_region`.
     """
     return (not SUPPORTS_LOOPS_OVER_AUTO_AXES
             and getattr(_tls, "mesh", None) is not None)
 
 
+_warned: set = set()
+_warned_lock = threading.Lock()
+
+
+def warn_once(key: str, message: str) -> bool:
+    """Log ``message`` at WARNING level the first time ``key`` is seen in
+    this process (degradation notices must not spam a jitted training loop).
+    Returns True iff the warning was emitted now."""
+    with _warned_lock:
+        if key in _warned:
+            return False
+        _warned.add(key)
+    logger.warning(message)
+    return True
+
+
 def get_abstract_mesh():
     """The ambient mesh (axis_names/axis_sizes), or None when there isn't one.
 
-    Native on new jax; on 0.4.x, the record installed by the compat
+    Native on ≥ 0.5; on 0.4.x, the record installed by the compat
     :func:`shard_map` wrapper, falling back to the physical mesh context
     (``with mesh:``) when one is active.
     """
@@ -115,12 +190,17 @@ def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check_vma=True):
     axis (both APIs' default).
     """
     if _HAS_NATIVE_SHARD_MAP:
-        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      check_vma=check_vma)
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
         if axis_names is not None:
             kwargs["axis_names"] = set(axis_names)
-        return jax.shard_map(f, **kwargs)
+        try:
+            return jax.shard_map(f, check_vma=check_vma, **kwargs)
+        except TypeError:
+            # 0.5/0.6-era native shard_map spells the replication check
+            # ``check_rep``; same semantics
+            return jax.shard_map(f, check_rep=bool(check_vma), **kwargs)
 
+    # ---- deprecated 0.4.x shim (delete with the 0.4.37 CI pin) ----------
     from jax.experimental.shard_map import shard_map as _shard_map
     all_axes = set(mesh.axis_names)
     manual = all_axes if axis_names is None else set(axis_names)

@@ -30,8 +30,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .adaptive import (BitSchedule, EtaSchedule, dequantize_dynamic,
-                       quantize_dynamic, select_bits, tau_of_selection)
+from .adaptive import BitSchedule, EtaSchedule, select_bits
 from .compressors import (COMPRESSORS, ErrorState, compressor_keys,
                           empty_error_state, init_error_state, static_k)
 from .criterion import CriterionConfig, push_history, should_skip
@@ -426,14 +425,12 @@ def worker_update(grad_m: Pytree, qhat_m: Pytree, eps_hat_sq_m, clock_m,
         width_m, onehot, R_anchor_new = select_bits(
             sched, R, bits_spent_m, step_, p, n_radii=n_sidecars,
             R_anchor=R_anchor_m)
-        codes = quantize_dynamic(diff, R_tree, sched.grid, onehot)
-        delta = dequantize_dynamic(codes, R_tree,
-                                   tau_of_selection(sched.grid, onehot))
-        q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d,
-                             qhat_m, delta)
-        err_sq = tree_sq_norm(jax.tree.map(
-            lambda g, qn: g.astype(jnp.float32) - qn, grad_m, q_new))
-        innovation_sq = tree_sq_norm(delta)
+        # pass 2 through the backend: the reference backend runs the staged
+        # quantize_dynamic/dequantize_dynamic pipeline (moved verbatim into
+        # WireBackend.adaptive_roundtrip — bitwise anchor), the fused
+        # backend the width-grid-unrolled one-sweep kernel
+        q_new, delta, err_sq, innovation_sq = backend.adaptive_roundtrip(
+            grad_m, qhat_m, diff, R_tree, sched.grid, onehot)
         bits_if_upload = upload_bits(p, width_m, n_radii=n_sidecars,
                                      bit_sidecar=True)
     elif cfg.compressed:

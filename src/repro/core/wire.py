@@ -43,10 +43,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from .adaptive import (dequantize_dynamic, quantize_dynamic, tau_of_selection)
 from .compressors import (_flat, _unflat, reference_sparse_quantize,
                           scatter_selection, select_support, sparse_grid)
-from .quantize import (innovation, pack_codes, roundtrip_parts, tau,
-                       tree_sq_norm)
+from .quantize import (dequantize_innovation, innovation, pack_codes,
+                       quantize_codes, roundtrip_parts, tau, tree_sq_norm)
 
 Pytree = object
 
@@ -65,7 +66,17 @@ class WireRoundtrip(NamedTuple):
 
 
 class WireBackend:
-    """Interface: radius reduction, quantize roundtrip, server dequant-acc."""
+    """Interface: radius reduction, quantize roundtrip, server dequant-acc.
+
+    The per-LEAF primitives (``leaf_absmax`` / ``leaf_quantize`` /
+    ``leaf_quantize_adaptive``) are the streamed sharded wire's hot loop
+    (launch/train.py ``_packed_aggregate`` touches one leaf at a time).
+    Their base-class bodies below ARE the reference expressions — verbatim
+    :mod:`repro.core.quantize` / :mod:`repro.core.adaptive` calls — so every
+    backend inherits bit-identical wire content by code sharing; subclasses
+    override only to swap the *lowering* (the fused backend dispatches the
+    Pallas kernels off-CPU).
+    """
 
     name = "?"
 
@@ -77,6 +88,61 @@ class WireBackend:
                   per_leaf: bool = False,
                   with_payload: bool = False) -> WireRoundtrip:
         raise NotImplementedError
+
+    def leaf_absmax(self, g, qh):
+        """Scalar ``|| g - qh ||_inf`` for ONE leaf (f32) — the radius
+        pre-pass primitive (pass 1 of the two-pass pipeline, per leaf).
+        Mirrors ``innovation``/``tree_inf_norm`` exactly; empty leaves
+        reduce to 0 like the tree helpers skip them."""
+        if g.size == 0:
+            return jnp.zeros((), jnp.float32)
+        return jnp.max(jnp.abs(g.astype(jnp.float32)
+                               - qh.astype(jnp.float32))).astype(jnp.float32)
+
+    def leaf_quantize(self, g, qh, R, bits: int):
+        """``(codes, delta)`` for one leaf at one static width — the
+        send-side pass-2 sweep of the streamed sharded wire.  Shape
+        preserving (codes uint8, delta f32, both leaf-shaped): the
+        axis-packed payload codec downstream packs along the leaf's last
+        dim, so the codes must keep the leaf shape."""
+        d = g.astype(jnp.float32) - qh.astype(jnp.float32)
+        codes = quantize_codes(d, R, bits)
+        delta = dequantize_innovation(codes, R, bits)
+        return codes, delta
+
+    def leaf_quantize_adaptive(self, g, qh, R, grid, onehot, t_sel):
+        """Traced-width variant of :meth:`leaf_quantize`: ``onehot``
+        selects from the static ascending ``grid``, ``t_sel`` is
+        ``tau_of_selection(grid, onehot)`` (computed once per round by the
+        caller, not per leaf)."""
+        d = g.astype(jnp.float32) - qh.astype(jnp.float32)
+        codes = quantize_dynamic(d, R, grid, onehot)
+        delta = dequantize_dynamic(codes, R, t_sel)
+        return codes, delta
+
+    def adaptive_roundtrip(self, grad: Pytree, qhat: Pytree, diff: Pytree,
+                           R_tree: Pytree, grid, onehot):
+        """Dynamic-width roundtrip ``(q_new, delta, err_sq, innovation_sq)``
+        for the width encoded in ``onehot`` over the static ``grid``.
+
+        ``diff``/``R_tree`` come from this backend's own prior
+        :meth:`innovation` call — the width selection (adaptive.select_bits)
+        needs the radius BEFORE the quantize sweep can run, so the two
+        passes cannot be fused across that data dependence.  The base body
+        is the reference staged pipeline moved verbatim from
+        ``strategy.worker_update`` (bit-compatibility anchor); the fused
+        backend overrides with the width-grid-unrolled pass-2 kernel that
+        emits delta, q_new and both criterion moments in one sweep.
+        """
+        codes = quantize_dynamic(diff, R_tree, grid, onehot)
+        delta = dequantize_dynamic(codes, R_tree,
+                                   tau_of_selection(grid, onehot))
+        q_new = jax.tree.map(lambda q, d: q.astype(jnp.float32) + d,
+                             qhat, delta)
+        err_sq = tree_sq_norm(jax.tree.map(
+            lambda g, qn: g.astype(jnp.float32) - qn, grad, q_new))
+        innovation_sq = tree_sq_norm(delta)
+        return q_new, delta, err_sq, innovation_sq
 
     def dequant_acc(self, packed, R, keep, bits: int, n: int, acc=None):
         """Server side: ``(acc +) sum_w keep_w * dequant(packed_w, R_w)``."""
@@ -168,6 +234,39 @@ def _fused_leaf_jnp(g, qh, R, bits, with_payload):
     return delta, qn, err_sq, inn_sq, payload
 
 
+def _fused_leaf_adaptive_jnp(g, qh, R, grid, onehot, t_sel,
+                             with_payload=False):
+    """Adaptive (traced-width) analogue of :func:`_fused_leaf_jnp`: the
+    whole pass-2 sweep — grid-evaluated codes, delta, q_new and both moments
+    — as one dense flat per-leaf expression.  The code/delta math is
+    expression-for-expression ``quantize_dynamic`` + ``dequantize_dynamic``
+    (via the shared ``quantize_codes``), so wire content and moments are
+    bit-identical to the reference staged path on CPU.  The payload (wanted
+    by the wire microbench's pass framing only) is packed at the provision
+    width max(grid), matching the adaptive Pallas kernel."""
+    n = g.size
+    gf = g.reshape(-1).astype(jnp.float32)
+    qf = qh.reshape(-1).astype(jnp.float32)
+    d = gf - qf
+    q = None
+    for i, b in enumerate(grid):
+        qi = quantize_codes(d, R, b)
+        q = qi if q is None else jnp.where(onehot[i] > 0, qi, q)
+    delta = 2.0 * t_sel * R * q.astype(jnp.float32) - R
+    delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
+    qn = qf + delta
+    err = gf - qn
+    payload = None
+    if with_payload:
+        provision = max(grid)
+        pad = (-n) % (8 // provision)
+        qp = q
+        if pad:
+            qp = jnp.concatenate([q, jnp.zeros((pad,), jnp.uint8)])
+        payload = pack_codes(qp, provision)
+    return delta, qn, jnp.sum(err * err), jnp.sum(delta * delta), payload
+
+
 class FusedWire(WireBackend):
     """The two-pass fused pipeline (see module docstring).
 
@@ -187,17 +286,31 @@ class FusedWire(WireBackend):
             return jax.default_backend() != "cpu"
         return self.lowering == "pallas"
 
-    def _leaf_absmax(self, g, qh):
-        if g.size == 0:
-            return jnp.zeros((), jnp.float32)
-        if self._use_pallas():
+    def leaf_absmax(self, g, qh):
+        if g.size and self._use_pallas():
             from repro.kernels import absmax
             return absmax(g, qh)
-        return jnp.max(jnp.abs(g.astype(jnp.float32)
-                               - qh.astype(jnp.float32))).astype(jnp.float32)
+        return super().leaf_absmax(g, qh)
+
+    def leaf_quantize(self, g, qh, R, bits):
+        if g.size and self._use_pallas():
+            from repro.kernels import quantize_codes_fused
+            codes, delta = quantize_codes_fused(g, qh, R, bits)
+            return codes.reshape(g.shape), delta.reshape(g.shape)
+        # the dense jnp expressions of the base class ARE the pass-2 math
+        # (codes + delta, one sweep under jit) — bit-identical by sharing
+        return super().leaf_quantize(g, qh, R, bits)
+
+    def leaf_quantize_adaptive(self, g, qh, R, grid, onehot, t_sel):
+        if g.size and self._use_pallas():
+            from repro.kernels import quantize_codes_adaptive
+            codes, delta = quantize_codes_adaptive(g, qh, R, onehot,
+                                                   tuple(grid))
+            return codes.reshape(g.shape), delta.reshape(g.shape)
+        return super().leaf_quantize_adaptive(g, qh, R, grid, onehot, t_sel)
 
     def _radii(self, g_leaves, q_leaves, per_leaf):
-        maxes = [self._leaf_absmax(g, qh) for g, qh in zip(g_leaves, q_leaves)]
+        maxes = [self.leaf_absmax(g, qh) for g, qh in zip(g_leaves, q_leaves)]
         if per_leaf:
             return maxes, jnp.max(jnp.stack(maxes))
         R = jnp.max(jnp.stack([m for m, g in zip(maxes, g_leaves) if g.size]
@@ -258,6 +371,49 @@ class FusedWire(WireBackend):
             R_tree=jax.tree_util.tree_unflatten(treedef, R_leaves),
             R_max=R_max, err_sq=err_sq, innovation_sq=inn_sq,
             payload=payload if with_payload else None)
+
+    def adaptive_roundtrip(self, grad, qhat, diff, R_tree, grid, onehot):
+        """Adaptive pass 2 as ONE sweep: the width-grid-unrolled fused
+        kernel (kernels/quant_pack.py — one ``lax.switch`` arm per grid
+        width, each arm the static-width pipeline) off-CPU, the dense flat
+        jnp expression of the same sweep on CPU.  ``diff`` is deliberately
+        unused here: innovation() keeps it a lazy elementwise expression,
+        and this path recomputes g - qh inside the sweep instead of
+        materializing the tensor."""
+        grid = tuple(grid)
+        assert all(b in (1, 2, 4, 8) for b in grid), \
+            f"fused wire backend covers the packed-width grid, got {grid}"
+        t_sel = tau_of_selection(grid, onehot)
+        use_pallas = self._use_pallas()
+        g_leaves, treedef = jax.tree_util.tree_flatten(grad)
+        q_leaves = jax.tree_util.tree_leaves(qhat)
+        R_leaves = jax.tree_util.tree_leaves(R_tree)
+
+        delta_leaves, qnew_leaves, err_parts, inn_parts = [], [], [], []
+        for g, qh, R in zip(g_leaves, q_leaves, R_leaves):
+            if g.size == 0:
+                delta_leaves.append(jnp.zeros(g.shape, jnp.float32))
+                qnew_leaves.append(jnp.zeros(g.shape, jnp.float32))
+                continue
+            if use_pallas:
+                from repro.kernels import quantize_pack_adaptive
+                _, dl, qn, esq, isq = quantize_pack_adaptive(
+                    g, qh, R, onehot, grid)
+            else:
+                dl, qn, esq, isq, _ = _fused_leaf_adaptive_jnp(
+                    g, qh, R, grid, onehot, t_sel)
+            delta_leaves.append(dl.reshape(g.shape))
+            qnew_leaves.append(qn.reshape(g.shape))
+            err_parts.append(esq)
+            inn_parts.append(isq)
+
+        err_sq = (jnp.sum(jnp.stack(err_parts)) if err_parts
+                  else jnp.zeros((), jnp.float32))
+        inn_sq = (jnp.sum(jnp.stack(inn_parts)) if inn_parts
+                  else jnp.zeros((), jnp.float32))
+        return (jax.tree_util.tree_unflatten(treedef, qnew_leaves),
+                jax.tree_util.tree_unflatten(treedef, delta_leaves),
+                err_sq, inn_sq)
 
     def dequant_acc(self, packed, R, keep, bits, n, acc=None):
         if self._use_pallas():

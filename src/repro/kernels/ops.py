@@ -19,7 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from .quant_pack import (BLOCK, absmax_pallas, dequant_acc_pallas,
-                         quantize_pack_pallas, quantize_pack_payload_pallas,
+                         quantize_codes_adaptive_pallas, quantize_codes_pallas,
+                         quantize_pack_adaptive_pallas, quantize_pack_pallas,
+                         quantize_pack_payload_pallas,
                          sparse_quant_pack_pallas)
 
 
@@ -73,6 +75,65 @@ def quantize_pack_fused(grad, qhat, R, bits: int, *,
     packed, delta, q_new, err_p, inn_p = quantize_pack_pallas(
         g, qh, R.astype(jnp.float32).reshape(1), bits, n, interpret=interpret)
     return packed, delta[:n], q_new[:n], jnp.sum(err_p), jnp.sum(inn_p)
+
+
+@functools.partial(jax.jit, static_argnames=("grid", "interpret"))
+def quantize_pack_adaptive(grad, qhat, R, onehot, grid: tuple, *,
+                           interpret: bool | None = None):
+    """Adaptive pass 2: the width-grid-unrolled fused quantize+pack sweep.
+
+    grad/qhat f32 (any shape, flattened), R scalar, ``onehot`` f32 [len(grid)]
+    indicator of the selected width (adaptive.select_bits), ``grid`` the
+    static ascending width tuple.  Returns ``(packed uint8
+    [ceil(n/blk)*blk*max(grid)/8], delta f32 [n], q_new f32 [n], err_sq,
+    innovation_sq)`` — the payload is provisioned at max(grid) bits (the
+    sharded wire's static-shape convention); a pinned selection reproduces
+    :func:`quantize_pack_fused` at that width bit-for-bit (each switch arm
+    IS the static-width kernel body).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    g, qh, n = _pad_pair(grad, qhat)
+    sel = jnp.argmax(onehot).astype(jnp.int32).reshape(1)
+    packed, delta, q_new, err_p, inn_p = quantize_pack_adaptive_pallas(
+        g, qh, R.astype(jnp.float32).reshape(1), sel, grid, n,
+        interpret=interpret)
+    return packed, delta[:n], q_new[:n], jnp.sum(err_p), jnp.sum(inn_p)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_codes_fused(grad, qhat, R, bits: int, *,
+                         interpret: bool | None = None):
+    """Pass 2 for the streamed sharded wire: codes + delta in one sweep,
+    codes left UNPACKED (the sharded wire packs along the leaf's last dim
+    itself — core/wire.py pack_codes_along_axis).
+
+    grad/qhat f32 (any shape, flattened), R scalar.  Returns ``(codes uint8
+    [n], delta f32 [n])`` sliced to the real length (callers reshape back
+    to the leaf shape).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    g, qh, n = _pad_pair(grad, qhat)
+    codes, delta = quantize_codes_pallas(
+        g, qh, R.astype(jnp.float32).reshape(1), bits, interpret=interpret)
+    return codes[:n], delta[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("grid", "interpret"))
+def quantize_codes_adaptive(grad, qhat, R, onehot, grid: tuple, *,
+                            interpret: bool | None = None):
+    """Traced-width variant of :func:`quantize_codes_fused` (``onehot``
+    selects from the static ``grid`` via one ``lax.switch`` arm per width).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    g, qh, n = _pad_pair(grad, qhat)
+    sel = jnp.argmax(onehot).astype(jnp.int32).reshape(1)
+    codes, delta = quantize_codes_adaptive_pallas(
+        g, qh, R.astype(jnp.float32).reshape(1), sel, grid,
+        interpret=interpret)
+    return codes[:n], delta[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))

@@ -215,6 +215,195 @@ def quantize_pack_payload_pallas(grad, qhat, R, bits: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Adaptive pass 2: width-grid-unrolled fused quantize + pack.  The traced
+# per-worker width selection (core/adaptive.py select_bits) cannot
+# specialize the kernel at trace time, so the kernel carries one
+# ``lax.switch`` arm per grid width — each arm IS the static-width pass-2
+# pipeline above, so a pinned selection reproduces the fixed-width kernel
+# bit-for-bit.  The packed payload is provisioned at the static width
+# max(grid) (codes < 2^b always fit; the sharded wire's provisioning
+# convention, docs/wire-format.md), which keeps every arm's output shapes
+# identical — the lax.switch requirement.
+# ---------------------------------------------------------------------------
+
+
+def _adaptive_arm(b, provision, g, qh, R, valid):
+    """One grid width's pass-2 pipeline (the static kernel body, verbatim),
+    packed at the provision width so all arms shape-match."""
+    d = g - qh
+    q = _quant_codes(d, R, b)
+    t = 1.0 / (2.0 ** b - 1.0)
+    delta = 2.0 * t * R * q.astype(jnp.float32) - R
+    delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
+    qn = qh + delta
+    err = (g - qn) * valid
+    dv = delta * valid
+    return (_pack_block(q, provision), delta, qn,
+            jnp.sum(err * err), jnp.sum(dv * dv))
+
+
+def _quantize_pack_adaptive_kernel(grid, provision, n_valid, g_ref, qh_ref,
+                                   R_ref, sel_ref, packed_ref, delta_ref,
+                                   qnew_ref, err_ref, inn_ref):
+    R = R_ref[0]
+    sel = sel_ref[0]
+    g = g_ref[...]
+    qh = qh_ref[...]
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (BLOCK, 1), 0).reshape(-1)
+           + pl.program_id(0) * BLOCK)
+    valid = (idx < n_valid).astype(jnp.float32)
+    arms = [functools.partial(_adaptive_arm, b, provision) for b in grid]
+    packed, delta, qn, err, inn = jax.lax.switch(sel, arms, g, qh, R, valid)
+    packed_ref[...] = packed
+    delta_ref[...] = delta
+    qnew_ref[...] = qn
+    err_ref[0] = err
+    inn_ref[0] = inn
+
+
+def quantize_pack_adaptive_pallas(grad, qhat, R, sel, grid, n_valid: int, *,
+                                  interpret: bool = True):
+    """grad, qhat: flat f32 [n] (n % BLOCK == 0), R: f32 [1], sel: int32 [1]
+    index into ``grid`` (the ascending static width grid), n_valid: static
+    count of real elements.
+
+    Returns ``(packed uint8 [n*max(grid)/8], delta f32 [n], q_new f32 [n],
+    err_part f32 [n//BLOCK], inn_part f32 [n//BLOCK])`` — the payload is
+    provisioned at max(grid) bits (static shape across arms); moments are
+    pad-masked block partials exactly like the fixed-width kernel.
+    """
+    n = grad.shape[0]
+    assert n % BLOCK == 0, n
+    grid = tuple(grid)
+    assert all(b in (1, 2, 4, 8) for b in grid), grid
+    provision = max(grid)
+    out_block = BLOCK * provision // 8
+    pgrid = (n // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_quantize_pack_adaptive_kernel, grid, provision,
+                          n_valid),
+        grid=pgrid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((out_block,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n * provision // 8,), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n // BLOCK,), jnp.float32),
+            jax.ShapeDtypeStruct((n // BLOCK,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(grad, qhat, R, sel)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-wire pass 2: quantize emitting UNPACKED codes + delta in one
+# sweep.  The packed collective wire packs along the leaf's LAST dim
+# (core/wire.py pack_codes_along_axis — flattening a model-sharded leaf
+# would force a GSPMD regather), so the kernel leaves packing to that
+# shared axis codec and just fuses the code/delta math; the caller reshapes
+# the flat outputs back to the leaf shape.  Fixed-width and width-switched
+# (adaptive) variants.
+# ---------------------------------------------------------------------------
+
+
+def _quantize_codes_kernel(bits, g_ref, qh_ref, R_ref, codes_ref, delta_ref):
+    R = R_ref[0]
+    d = g_ref[...] - qh_ref[...]
+    q = _quant_codes(d, R, bits)
+    t = 1.0 / (2.0 ** bits - 1.0)
+    delta = 2.0 * t * R * q.astype(jnp.float32) - R
+    codes_ref[...] = q
+    delta_ref[...] = jnp.where(R > 0, delta, jnp.zeros_like(delta))
+
+
+def quantize_codes_pallas(grad, qhat, R, bits: int, *, interpret: bool = True):
+    """grad, qhat: flat f32 [n] (n % BLOCK == 0), R: f32 [1].
+
+    Returns ``(codes uint8 [n], delta f32 [n])`` — the sharded packed wire's
+    send-side sweep (codes stay unpacked for the axis codec)."""
+    n = grad.shape[0]
+    assert n % BLOCK == 0, n
+    assert bits in (1, 2, 4, 8), bits
+    return pl.pallas_call(
+        functools.partial(_quantize_codes_kernel, bits),
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(grad, qhat, R)
+
+
+def _codes_arm(b, g, qh, R):
+    d = g - qh
+    q = _quant_codes(d, R, b)
+    t = 1.0 / (2.0 ** b - 1.0)
+    delta = 2.0 * t * R * q.astype(jnp.float32) - R
+    return q, jnp.where(R > 0, delta, jnp.zeros_like(delta))
+
+
+def _quantize_codes_adaptive_kernel(grid, g_ref, qh_ref, R_ref, sel_ref,
+                                    codes_ref, delta_ref):
+    R = R_ref[0]
+    sel = sel_ref[0]
+    arms = [functools.partial(_codes_arm, b) for b in grid]
+    q, delta = jax.lax.switch(sel, arms, g_ref[...], qh_ref[...], R)
+    codes_ref[...] = q
+    delta_ref[...] = delta
+
+
+def quantize_codes_adaptive_pallas(grad, qhat, R, sel, grid, *,
+                                   interpret: bool = True):
+    """Width-switched variant of :func:`quantize_codes_pallas` (``sel``:
+    int32 [1] index into ``grid``)."""
+    n = grad.shape[0]
+    assert n % BLOCK == 0, n
+    grid = tuple(grid)
+    assert all(b in (1, 2, 4, 8) for b in grid), grid
+    return pl.pallas_call(
+        functools.partial(_quantize_codes_adaptive_kernel, grid),
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(grad, qhat, R, sel)
+
+
+# ---------------------------------------------------------------------------
 # Sparse pipeline: quantize + pack the GATHERED survivor values of the
 # EF-LAQ compressor (core/compressors.py).  The selection/scatter halves
 # are gather-bound and stay in XLA; the elementwise sign-magnitude grid

@@ -63,6 +63,48 @@ def quantize_pack_fused_ref(grad: jnp.ndarray, qhat: jnp.ndarray,
     return packed, delta, q_new, jnp.sum(err * err), jnp.sum(delta * delta)
 
 
+def quantize_pack_adaptive_ref(grad: jnp.ndarray, qhat: jnp.ndarray,
+                               R: jnp.ndarray, grid: tuple, sel: int):
+    """Oracle for the adaptive (width-switched) fused pass-2 kernel on
+    *unpadded* inputs: the static-width pipeline at ``bits = grid[sel]``,
+    with the payload packed at the provision width ``max(grid)`` (codes
+    < 2^b always fit the wider lanes; the sharded wire's static-shape
+    provisioning convention).
+
+    Returns ``(packed, delta, q_new, err_sq, innovation_sq)`` exactly like
+    :func:`quantize_pack_fused_ref`.
+    """
+    bits = grid[sel]
+    provision = max(grid)
+    g = grad.astype(jnp.float32)
+    qh = qhat.astype(jnp.float32)
+    n = g.shape[0]
+    t = 1.0 / (2.0 ** bits - 1.0)
+    levels = 2 ** bits - 1
+    d = g - qh
+    pad = (-n) % (8 // provision)     # provision-width packing needs whole
+    if pad:                           # bytes; pad diff is 0 like the kernel's
+        d = jnp.concatenate([d, jnp.zeros((pad,), jnp.float32)])
+    denom = jnp.where(R > 0, 2.0 * t * R, 1.0)
+    q = jnp.floor((d + R) / denom + 0.5)
+    q = jnp.clip(q, 0, levels)
+    q = jnp.where(R > 0, q, (levels + 1) // 2 * jnp.ones_like(q)).astype(jnp.uint8)
+    delta = 2.0 * t * R * q.astype(jnp.float32) - R
+    delta = jnp.where(R > 0, delta, jnp.zeros_like(delta))
+    if provision == 8:
+        packed = q
+    else:
+        cpb = 8 // provision
+        packed = q[0::cpb]
+        for j in range(1, cpb):
+            packed = packed | (q[j::cpb] << (provision * j))
+        packed = packed.astype(jnp.uint8)
+    delta = delta[:n]
+    q_new = qh + delta
+    err = g - q_new
+    return packed, delta, q_new, jnp.sum(err * err), jnp.sum(delta * delta)
+
+
 def dequant_acc_ref(packed: jnp.ndarray, R: jnp.ndarray, keep: jnp.ndarray,
                     bits: int, n: int, acc: jnp.ndarray = None):
     """packed [W, n*bits/8] uint8, R [W], keep [W] -> sum_w delta_w, f32 [n].

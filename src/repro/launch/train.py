@@ -109,17 +109,16 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.adaptive import (dequantize_dynamic, eta_at, quantize_dynamic,
-                                 tau_of_selection, tau_of_width)
+from repro.core.adaptive import eta_at, tau_of_selection, tau_of_width
 from repro.core.compressors import ErrorState, compressor_keys
 from repro.core.defense import DefenseState
 from repro.core.engine import (accumulate_loss_grads, apply_svrg_streaming,
                                participation_mask, stale_side_grads)
-from repro.core.quantize import (dequantize_innovation, quantize_codes,
-                                 tree_sq_norm)
+from repro.core.quantize import tree_sq_norm
 from repro.core.strategy import (CommState, StrategyConfig, SvrgState,
                                  worker_update)
-from repro.core.wire import pack_codes_along_axis, unpack_codes_along_axis
+from repro.core.wire import (get_backend, pack_codes_along_axis,
+                             unpack_codes_along_axis)
 from repro.core.criterion import push_history
 from repro.models import lm_loss, param_pspecs
 from repro.models.config import ModelConfig
@@ -157,6 +156,56 @@ def _axis_size_static(worker_axes) -> int:
     for a in axes:
         n *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
     return n
+
+
+def resolve_wire_backend(strategy: StrategyConfig) -> StrategyConfig:
+    """The sharded step's wire-backend policy (the jax >= 0.5 migration).
+
+    On jax >= 0.5 the partial-auto partitioner lowers Pallas calls and the
+    flat per-leaf reshapes the fused pipeline needs
+    (compat.SUPPORTS_PALLAS_PARTIAL_AUTO), so the requested backend is
+    honored as-is.  On 0.4.x those lowerings hard-abort inside the
+    partially-manual region, so a non-reference request downgrades to the
+    bit-identical ``reference`` pipeline — with a one-time log warning, not
+    silently (the historical silent ``_replace`` hid the downgrade from
+    users benchmarking the fused wire).  The resolved name is exposed on
+    the returned step fn as ``step.wire_backend``.
+    """
+    if get_backend(strategy.wire_backend).name == "reference":
+        return strategy
+    if compat.SUPPORTS_PALLAS_PARTIAL_AUTO:
+        return strategy
+    compat.warn_once(
+        "sharded-wire-backend-downgrade",
+        f"jax {jax.__version__} < 0.5: the partial-auto partitioner cannot "
+        "lower the fused wire backend's Pallas kernels (nor the flat "
+        "per-leaf reshapes) under shard_map; the sharded step downgrades "
+        f"wire_backend={get_backend(strategy.wire_backend).name!r} to "
+        "'reference'. Wire content is bit-identical across backends "
+        "(core/wire.py contract); upgrade jax >= 0.5 to run the fused "
+        "pipeline here.")
+    return strategy._replace(wire_backend="reference")
+
+
+def exchange_mode(n_workers: int) -> str:
+    """Which collective carries the packed payload across workers — a pure
+    function of worker count and jax capability, factored out so the
+    version-gated selection is testable without building a mesh
+    (tests/test_compat.py pins the flip):
+
+    * ``"gather"`` — all_gather payload + sidecars; every device decodes
+      and masked-sums all W payloads (the SPMD server replica).
+    * ``"permute"`` — W == 2 (pod pairs): one collective-permute payload
+      swap instead of a gather.
+    * ``"local_decode_psum"`` — deprecated 0.4.x degradation (the
+      partitioner lowers only psum in partial-auto regions): each worker
+      decodes its OWN payload and the transport is a float psum.
+      Bit-identical, analytically accounted, but no physical byte saving;
+      dead on jax >= 0.5, scheduled for deletion with the 0.4.37 CI pin.
+    """
+    if not compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES:
+        return "local_decode_psum"
+    return "permute" if n_workers == 2 else "gather"
 
 
 def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
@@ -197,9 +246,11 @@ def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
         bits = strategy.effective_bits
         provision = bits
     keep = jnp.logical_not(skip_mask).astype(jnp.float32)
+    backend = get_backend(strategy.wire_backend)
     n_workers = _axis_size_static(worker_axes)
-    use_gather = (compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES and n_workers != 2)
-    use_permute = (compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES and n_workers == 2)
+    mode = exchange_mode(n_workers)
+    use_gather = mode == "gather"
+    use_permute = mode == "permute"
     # per-round sidecars exchanged ONCE, outside the per-leaf loop (XLA does
     # not CSE collectives; a per-leaf exchange would issue one tiny
     # collective per parameter tensor)
@@ -247,12 +298,13 @@ def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
         return jnp.sum(delta, axis=0)
 
     def local_decode_psum(q, R, orig, spec):
-        # 0.4.x jax: the partial-auto partitioner only lowers psum (see
-        # compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES), so every worker decodes
-        # its OWN payload through the full pack->unpack->dequant wire math
-        # and the transport is a float psum.  unpack(pack(codes)) == codes,
-        # so this is bit-identical to the real payload exchange — only the
-        # bytes on the link differ (accounting stays analytic either way).
+        # DEPRECATED 0.4.x degradation (dead on jax >= 0.5 — see
+        # exchange_mode; delete with the 0.4.37 CI pin): the partial-auto
+        # partitioner only lowers psum, so every worker decodes its OWN
+        # payload through the full pack->unpack->dequant wire math and the
+        # transport is a float psum.  unpack(pack(codes)) == codes, so this
+        # is bit-identical to the real payload exchange — only the bytes on
+        # the link differ (accounting stays analytic either way).
         codes = leaf_unpack(leaf_payload(q), orig).astype(jnp.float32)
         t = t_self if adaptive else 1.0 / (2.0 ** provision - 1.0)
         d = 2.0 * t * R * codes - R
@@ -284,21 +336,16 @@ def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
     qh_leaves = jax.tree_util.tree_leaves(qhat)
     s_leaves = (jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, tuple))
                 if pspecs is not None else [None] * len(g_leaves))
-    if use_gather:
-        leaf_fn = gather_dequant_sum
-    elif compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES:
-        leaf_fn = permute_dequant_sum          # two-worker (pod) wire
-    else:
-        leaf_fn = local_decode_psum            # 0.4.x psum-only degradation
-
-    def leaf_diff(g, qh):
-        return g.astype(jnp.float32) - qh.astype(jnp.float32)
+    leaf_fn = {"gather": gather_dequant_sum,
+               "permute": permute_dequant_sum,       # two-worker (pod) wire
+               "local_decode_psum": local_decode_psum}[mode]
 
     # radius pre-pass: one scalar per leaf — the only whole-tree quantity.
-    # Mirrors innovation()/tree_inf_norm exactly: per-leaf max|diff|, and
-    # for the global radius a max over the stacked leaf scalars.
-    absmax = [jnp.max(jnp.abs(leaf_diff(g, qh))).astype(jnp.float32)
-              if g.size else jnp.zeros((), jnp.float32)
+    # The backend's pass-1 absmax primitive mirrors innovation() /
+    # tree_inf_norm exactly (reference expressions on CPU; the fused
+    # backend's blockwise Pallas reduction off-CPU), and for the global
+    # radius a max over the stacked leaf scalars.
+    absmax = [backend.leaf_absmax(g, qh)
               for g, qh in zip(g_leaves, qh_leaves)]
     if per_leaf:
         r_leaves = absmax
@@ -309,15 +356,16 @@ def _packed_aggregate(grads, qhat, skip_mask, strategy: StrategyConfig,
     t_sel = tau_of_selection(grid, onehot) if adaptive else None
 
     def stream_leaf(g, qh, R, spec):
-        # the streamed hot path: this leaf's diff, codes, payload and
-        # dequantized delta are dead before the next leaf starts
-        d = leaf_diff(g, qh)
+        # the streamed hot path: this leaf's codes, payload and dequantized
+        # delta are dead before the next leaf starts.  The send-side sweep
+        # is the backend's pass-2 leaf primitive: reference expressions on
+        # the reference backend (and the fused backend's CPU lowering), the
+        # fused codes+delta Pallas kernel off-CPU.
         if adaptive:
-            q = quantize_dynamic(d, R, grid, onehot)
-            delta_local = dequantize_dynamic(q, R, t_sel)
+            q, delta_local = backend.leaf_quantize_adaptive(
+                g, qh, R, grid, onehot, t_sel)
         else:
-            q = quantize_codes(d, R, bits)
-            delta_local = dequantize_innovation(q, R, provision)
+            q, delta_local = backend.leaf_quantize(g, qh, R, bits)
         agg = leaf_fn(q, R, g, spec)
         q_new = qh.astype(jnp.float32) + delta_local
         return agg, q_new
@@ -387,16 +435,10 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             "norm-clipping on the packed wire would need a per-worker f32 "
             "scale sidecar (codes are integers); clip rides the float wire, "
             "validate/gate work on both (a reject is one mask bit)")
-    if strategy.wire_backend != "reference":
-        # Inside partial-auto shard_map the gradient leaves keep their
-        # global shapes with the model axis auto-sharded: the fused
-        # backend's flat per-leaf kernels would force GSPMD to regather
-        # them, and Pallas does not lower under the 0.4.x partial-auto
-        # partitioner.  Wire content is bit-identical across backends by
-        # the core/wire.py contract, so the sharded step pins the
-        # reference pipeline; the fused kernels cover the flat local hot
-        # path (simulated runner, TPU wire microbench).
-        strategy = strategy._replace(wire_backend="reference")
+    # jax >= 0.5: the requested wire backend runs as-is under the
+    # partial-auto shard_map (Pallas lowers there now); 0.4.x downgrades to
+    # the bit-identical reference pipeline with a one-time warning
+    strategy = resolve_wire_backend(strategy)
     grad_pspecs = None
     if wire == "packed":
         assert strategy.quantized, "packed wire requires a quantized strategy"
@@ -565,6 +607,9 @@ def make_train_step(cfg: ModelConfig, mesh, strategy: StrategyConfig,
             jnp.arange(W, dtype=jnp.int32))
         return TrainState(new_params, new_opt, new_comm, state.step + 1), metrics
 
+    # introspection: the backend the sharded step actually runs after the
+    # version-gated resolve (tests pin the honor-vs-downgrade behavior)
+    step.wire_backend = get_backend(strategy.wire_backend).name
     return step
 
 

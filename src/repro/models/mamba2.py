@@ -17,6 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from .config import ModelConfig
 from .layers import normal_init, rms_norm
 
@@ -103,12 +105,22 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
         return R_new, R                                         # emit state ENTERING chunk
 
     R0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
-    Rfinal, R_in = jax.lax.scan(
-        scan_fn,
-        R0,
-        (states.transpose(1, 0, 2, 3, 4), seg_decay.transpose(1, 0, 2)),
-    )
-    R_in = R_in.transpose(1, 0, 2, 3, 4)                        # [B,nc,H,N,P]
+    if compat.needs_loop_unrolling():
+        # 0.4.x legacy shim (see compat.SUPPORTS_LOOPS_OVER_AUTO_AXES): the
+        # chunk count is static and small (S / ssm_chunk), so the
+        # recurrence unrolls without blowup
+        R, emitted = R0, []
+        for c in range(states.shape[1]):
+            emitted.append(R)
+            R = R * seg_decay[:, c][..., None, None] + states[:, c].astype(jnp.float32)
+        Rfinal, R_in = R, jnp.stack(emitted, axis=1)            # [B,nc,H,N,P]
+    else:
+        Rfinal, R_in = jax.lax.scan(
+            scan_fn,
+            R0,
+            (states.transpose(1, 0, 2, 3, 4), seg_decay.transpose(1, 0, 2)),
+        )
+        R_in = R_in.transpose(1, 0, 2, 3, 4)                    # [B,nc,H,N,P]
 
     # ---- inter-chunk contribution ----
     y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",

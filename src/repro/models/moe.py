@@ -41,6 +41,12 @@ def _shard_experts(x, spec):
     EXPERIMENTS.md §Perf). Constraints on the forward values propagate to the
     cotangents.
     """
+    if compat.in_legacy_partial_auto_region():
+        # 0.4.x legacy shim: the partial-auto partitioner aborts on
+        # non-manual constraints inside the region; the constraint is a
+        # collective-payload perf optimization, so the correct degradation
+        # is a no-op (delete with the 0.4.37 CI pin)
+        return x
     try:
         mesh = compat.get_abstract_mesh()
         if mesh is None or "model" not in mesh.axis_names:
@@ -111,7 +117,25 @@ def _router(p, x, cfg: ModelConfig):
     """x:[..., D] -> (probs, topk weights, topk ids, aux_loss)."""
     logits = (x.astype(jnp.float32) @ p["router"])
     probs = jax.nn.softmax(logits, axis=-1)
-    top_w, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    if compat.in_legacy_partial_auto_region():
+        # 0.4.x legacy shim (delete with the 0.4.37 CI pin): top_k lowers
+        # to a sort the legacy partial-auto partitioner aborts on.  K
+        # static argmax+mask rounds select the same experts in the same
+        # order (argmax and top_k both break ties toward the lower index).
+        work = probs
+        ws, ids = [], []
+        for _ in range(cfg.top_k):
+            idx = jnp.argmax(work, axis=-1)
+            ids.append(idx.astype(jnp.int32))
+            ws.append(jnp.take_along_axis(
+                probs, idx[..., None], axis=-1)[..., 0])
+            work = jnp.where(jax.nn.one_hot(idx, probs.shape[-1],
+                                            dtype=jnp.bool_),
+                             -jnp.inf, work)
+        top_w = jnp.stack(ws, axis=-1)
+        top_ids = jnp.stack(ids, axis=-1)
+    else:
+        top_w, top_ids = jax.lax.top_k(probs, cfg.top_k)
     top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
     # Switch-style load-balance aux loss: E * sum_e f_e * P_e
     E = cfg.n_experts

@@ -1,0 +1,116 @@
+"""compat.py version-gate coverage: the capability flags, the degradation
+selectors that consult them (``needs_loop_unrolling``, ``exchange_mode``,
+``resolve_wire_backend``), and ``warn_once`` semantics.
+
+These tests run on BOTH CI jax pins (0.4.37 and latest): assertions are
+written against ``compat.ON_LEGACY_JAX`` rather than a hardcoded side, and
+the policy helpers are additionally exercised on the *other* side via
+monkeypatched capability flags — so each pin also covers the branch it
+doesn't take natively.
+"""
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core.strategy import StrategyConfig
+from repro.launch.train import exchange_mode, resolve_wire_backend
+
+
+def test_version_gate_coherence():
+    """Every capability flag is the same migration gate: all True on
+    >= 0.5 (the primary path), all False on the legacy partitioner."""
+    assert compat.ON_LEGACY_JAX == (compat.JAX_VERSION < (0, 5))
+    for flag in (compat.SUPPORTS_LOOPS_OVER_AUTO_AXES,
+                 compat.SUPPORTS_PARTIAL_AUTO_COLLECTIVES,
+                 compat.SUPPORTS_PALLAS_PARTIAL_AUTO):
+        assert flag == (not compat.ON_LEGACY_JAX)
+
+
+@pytest.mark.parametrize("raw, parsed", [
+    ("0.4.37", (0, 4, 37)),
+    ("0.5.0", (0, 5, 0)),
+    ("0.5.0rc1", (0, 5, 0)),
+    ("0.7", (0, 7)),
+    ("1.0.dev123", (1, 0, 0)),
+])
+def test_parse_version(raw, parsed):
+    assert compat._parse_version(raw) == parsed
+
+
+def test_needs_loop_unrolling_flips_with_ambient_mesh():
+    """False outside any shard_map region on every jax; inside a compat
+    region it is True exactly on the legacy partitioner (>= 0.5 never
+    unrolls)."""
+    assert not compat.needs_loop_unrolling()
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    with compat._ambient(mesh):
+        assert compat.needs_loop_unrolling() == compat.ON_LEGACY_JAX
+    assert not compat.needs_loop_unrolling()
+
+
+def test_warn_once_emits_once(caplog):
+    key = "test-compat-warn-once-key"
+    compat._warned.discard(key)
+    with caplog.at_level(logging.WARNING, logger="repro.compat"):
+        assert compat.warn_once(key, "first notice") is True
+        assert compat.warn_once(key, "second notice") is False
+    assert [r.message for r in caplog.records] == ["first notice"]
+
+
+def test_exchange_mode_native(monkeypatch):
+    """>= 0.5 side: gather for W > 2, one permute swap for pod pairs."""
+    monkeypatch.setattr(compat, "SUPPORTS_PARTIAL_AUTO_COLLECTIVES", True)
+    assert exchange_mode(2) == "permute"
+    assert exchange_mode(4) == "gather"
+    assert exchange_mode(8) == "gather"
+
+
+def test_exchange_mode_legacy_degrades_to_psum(monkeypatch):
+    """0.4.x side: the partitioner lowers only psum in partial-auto regions,
+    so every worker count takes the local-decode+psum transport."""
+    monkeypatch.setattr(compat, "SUPPORTS_PARTIAL_AUTO_COLLECTIVES", False)
+    for w in (2, 4, 8):
+        assert exchange_mode(w) == "local_decode_psum"
+
+
+def test_exchange_mode_matches_this_pin():
+    """Un-patched: the selection this jax actually runs."""
+    expect = "local_decode_psum" if compat.ON_LEGACY_JAX else "gather"
+    assert exchange_mode(4) == expect
+
+
+def test_resolve_wire_backend_reference_untouched(monkeypatch):
+    """A reference request never warns and never changes, on either side."""
+    for flag in (True, False):
+        monkeypatch.setattr(compat, "SUPPORTS_PALLAS_PARTIAL_AUTO", flag)
+        s = StrategyConfig(wire_backend="reference")
+        assert resolve_wire_backend(s) is s
+
+
+def test_resolve_wire_backend_honored_on_native(monkeypatch, caplog):
+    """>= 0.5 side: the fused request is honored as-is (the historical
+    silent ``_replace(wire_backend="reference")`` pin is gone)."""
+    monkeypatch.setattr(compat, "SUPPORTS_PALLAS_PARTIAL_AUTO", True)
+    s = StrategyConfig(wire_backend="fused")
+    with caplog.at_level(logging.WARNING, logger="repro.compat"):
+        assert resolve_wire_backend(s) is s
+    assert not caplog.records
+
+
+def test_resolve_wire_backend_legacy_downgrade_warns_once(monkeypatch,
+                                                         caplog):
+    """0.4.x side: fused downgrades to the bit-identical reference pipeline
+    with a log notice — once per process, not per step."""
+    monkeypatch.setattr(compat, "SUPPORTS_PALLAS_PARTIAL_AUTO", False)
+    compat._warned.discard("sharded-wire-backend-downgrade")
+    s = StrategyConfig(wire_backend="fused")
+    with caplog.at_level(logging.WARNING, logger="repro.compat"):
+        resolved = resolve_wire_backend(s)
+        again = resolve_wire_backend(s)
+    assert resolved.wire_backend == "reference"
+    assert again.wire_backend == "reference"
+    assert len(caplog.records) == 1
+    assert "downgrades" in caplog.records[0].message

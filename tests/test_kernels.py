@@ -9,15 +9,35 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (absmax, dequant_acc, quantize_pack,
-                           quantize_pack_fused)
+from repro.core.quantize import quantize_codes, tau
+from repro.kernels import (absmax, dequant_acc, quantize_codes_adaptive,
+                           quantize_codes_fused, quantize_pack,
+                           quantize_pack_adaptive, quantize_pack_fused)
 from repro.kernels.quant_pack import BLOCK
 from repro.kernels.ref import (absmax_ref, dequant_acc_ref,
+                               quantize_pack_adaptive_ref,
                                quantize_pack_fused_ref, quantize_pack_ref)
 
 # non-BLOCK-multiple lengths exercise the ops.py pad + in-kernel moment
 # masking; 1 and 3 exercise a single nearly-empty block
 EDGE_SHAPES = [1, 3, 128, 5000, BLOCK, BLOCK + 1, 3 * BLOCK + 17]
+
+GRID = (2, 4, 8)       # the bit_schedule width grid the adaptive kernel unrolls
+
+
+def _onehot(sel):
+    return jnp.eye(len(GRID), dtype=jnp.float32)[sel]
+
+
+def _unpack(packed, bits, n):
+    """First n codes from a packed byte vector (little-end-first lanes)."""
+    p = np.asarray(packed)
+    if bits == 8:
+        return p[:n]
+    cpb = 8 // bits
+    codes = np.stack([(p >> (bits * j)) & ((1 << bits) - 1)
+                      for j in range(cpb)], axis=-1).reshape(-1)
+    return codes[:n]
 
 
 @pytest.mark.parametrize("bits", [2, 4, 8])
@@ -131,6 +151,98 @@ def test_quantize_pack_fused_zero_radius_block(bits):
     mid = (2 ** bits) // 2
     expect = sum(mid << (bits * j) for j in range(8 // bits))
     assert (codes == expect).all()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive (width-grid-unrolled) pass-2 kernel: one lax.switch arm per grid
+# width, payload provisioned at max(grid).  Same edge cases as fixed-width.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sel", range(len(GRID)))
+@pytest.mark.parametrize("n", EDGE_SHAPES)
+def test_quantize_pack_adaptive_matches_ref(sel, n):
+    """Every grid width, incl. non-BLOCK-multiple lengths through the
+    ops.py pad + in-kernel moment masking."""
+    key = jax.random.PRNGKey(n * (sel + 1) + 2)
+    g = jax.random.normal(key, (n,)) * 4
+    qh = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    R = absmax(g, qh)
+    out = quantize_pack_adaptive(g, qh, R, _onehot(sel), GRID)
+    ref = quantize_pack_adaptive_ref(g, qh, R, GRID, sel)
+    packed, delta, q_new, err_sq, inn_sq = out
+    packed_r, delta_r, qn_r, err_r, inn_r = ref
+    cpb = 8 // max(GRID)
+    np.testing.assert_array_equal(np.asarray(packed[:n // cpb]),
+                                  np.asarray(packed_r[:n // cpb]))
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(delta_r),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(q_new), np.asarray(qn_r), atol=1e-5)
+    np.testing.assert_allclose(float(err_sq), float(err_r), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(inn_sq), float(inn_r), rtol=1e-4,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("sel", range(len(GRID)))
+@pytest.mark.parametrize("n", [128, 5000, BLOCK + 1])
+def test_quantize_pack_adaptive_matches_fixed_kernel(sel, n):
+    """BITWISE anchor: the switch arm at a pinned width IS the fixed-width
+    kernel pipeline — delta/q_new/moments exactly equal, codes equal after
+    unpacking each payload at its own lane width."""
+    bits = GRID[sel]
+    key = jax.random.PRNGKey(n + sel)
+    g = jax.random.normal(key, (n,)) * 4
+    qh = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    R = absmax(g, qh)
+    packed_a, delta_a, qn_a, err_a, inn_a = quantize_pack_adaptive(
+        g, qh, R, _onehot(sel), GRID)
+    packed_f, delta_f, qn_f, err_f, inn_f = quantize_pack_fused(g, qh, R, bits)
+    np.testing.assert_array_equal(_unpack(packed_a, max(GRID), n),
+                                  _unpack(packed_f, bits, n))
+    np.testing.assert_array_equal(np.asarray(delta_a), np.asarray(delta_f))
+    np.testing.assert_array_equal(np.asarray(qn_a), np.asarray(qn_f))
+    assert float(err_a) == float(err_f)
+    assert float(inn_a) == float(inn_f)
+
+
+@pytest.mark.parametrize("sel", range(len(GRID)))
+def test_quantize_pack_adaptive_zero_radius_block(sel):
+    """R == 0: midpoint codes at the SELECTED width, exactly zero delta and
+    moments — the q_new recursion must be a no-op."""
+    n = BLOCK + 9
+    g = jnp.linspace(-1.0, 1.0, n)
+    packed, delta, q_new, err_sq, inn_sq = quantize_pack_adaptive(
+        g, g, jnp.zeros(()), _onehot(sel), GRID)
+    assert int(jnp.max(jnp.abs(delta) > 0)) == 0
+    np.testing.assert_array_equal(np.asarray(q_new), np.asarray(g))
+    assert float(err_sq) == 0.0 and float(inn_sq) == 0.0
+    mid = (2 ** GRID[sel]) // 2
+    assert (_unpack(packed, max(GRID), n) == mid).all()
+
+
+@pytest.mark.parametrize("sel", range(len(GRID)))
+@pytest.mark.parametrize("n", [3, 5000, BLOCK + 1])
+def test_quantize_codes_adaptive_matches_fixed(sel, n):
+    """The unpacked codes sweep (streamed sharded wire): adaptive == the
+    fixed-width sweep at the pinned width, codes exactly."""
+    bits = GRID[sel]
+    key = jax.random.PRNGKey(n + 11 * sel)
+    g = jax.random.normal(key, (n,)) * 3
+    qh = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    R = absmax(g, qh)
+    codes_a, delta_a = quantize_codes_adaptive(g, qh, R, _onehot(sel), GRID)
+    codes_f, delta_f = quantize_codes_fused(g, qh, R, bits)
+    np.testing.assert_array_equal(np.asarray(codes_a), np.asarray(codes_f))
+    np.testing.assert_array_equal(np.asarray(delta_a), np.asarray(delta_f))
+    # and both against the reference expressions
+    d = g.astype(jnp.float32) - qh.astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(codes_f),
+                                  np.asarray(quantize_codes(d, R, bits)))
+    t = tau(bits)
+    delta_ref = jnp.where(R > 0, 2.0 * t * R * codes_f.astype(jnp.float32) - R,
+                          0.0)
+    np.testing.assert_allclose(np.asarray(delta_f), np.asarray(delta_ref),
+                               atol=1e-5)
 
 
 @pytest.mark.parametrize("bits", [2, 4, 8])

@@ -297,6 +297,31 @@ def test_laq_step_arch_smokes_subprocess():
         assert o["total_bits"] == float(expected), (arch, o, expected)
 
 
+def test_moe_router_legacy_fallback_matches_top_k(monkeypatch):
+    """The 0.4.x in-region router fallback (K argmax+mask rounds, since
+    top_k's sort aborts the legacy partial-auto partitioner) selects the
+    SAME experts with the SAME weights as jax.lax.top_k — bitwise,
+    including the uniform-probs tie case (both break ties toward the lower
+    index)."""
+    from repro import compat
+    from repro.models.moe import _router
+    cfg = smoke_config(get_config("qwen3-moe-30b-a3b"))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (2, 16, cfg.d_model), jnp.float32)
+    x = x.at[0, 0].set(0.0)   # uniform-probs row: exercises tie-breaking
+    p = {"router": jax.random.normal(k2, (cfg.d_model, cfg.n_experts),
+                                     jnp.float32)}
+    native = _router(p, x, cfg)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    monkeypatch.setattr(compat, "ON_LEGACY_JAX", True)
+    with compat._ambient(mesh):
+        assert compat.in_legacy_partial_auto_region()
+        legacy = _router(p, x, cfg)
+    assert not compat.in_legacy_partial_auto_region()
+    for a, b in zip(native, legacy):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_long_context_configs():
     """for_shape applies the sliding window to attention archs at long_500k."""
     from repro.configs import for_shape

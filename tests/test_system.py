@@ -6,8 +6,11 @@
    and equal final accuracy.
 2. Sharded integration (subprocess with 8 forced host devices): LAQ train
    step on a (4 data x 2 model) mesh — loss decreases, packed wire is
-   bit-identical to float wire, decode/prefill lower and compile, and the
-   multi-pod (2,2,2) hierarchical mode runs.
+   bit-identical to float wire on both wire backends (the fused request
+   resolves per the jax version: honored on >= 0.5, warn-once reference
+   downgrade on 0.4.x — pinned via ``step.wire_backend``), the adaptive
+   fused pass-2 matches the reference adaptive trajectory, decode/prefill
+   lower and compile, and the multi-pod (2,2,2) hierarchical mode runs.
 """
 import json
 import os
@@ -123,6 +126,28 @@ for _ in range(3):
     s2, m2 = jp(s2, batch)
 out["packed_max_diff"] = max_param_diff(s1, s2)
 
+# fused wire backend through the sharded step: jax >= 0.5 honors the
+# request (compat.SUPPORTS_PALLAS_PARTIAL_AUTO), 0.4.x downgrades to the
+# bit-identical reference pipeline with a warn-once log — either way the
+# resolved name is exposed on the step fn, and on CPU hosts the fused
+# backend runs the shared reference expressions, so parity is bitwise
+from repro import compat
+fu = strategy._replace(wire_backend="fused")
+step_fu = make_train_step(cfg, mesh, fu, opt, lr=1e-2, worker_axes=wa,
+                          wire="packed")
+out["fused_resolved_backend"] = step_fu.wire_backend
+out["fused_expected_backend"] = (
+    "fused" if compat.SUPPORTS_PALLAS_PARTIAL_AUTO else "reference")
+jff = jax.jit(make_train_step(cfg, mesh, fu, opt, lr=1e-2,
+                              worker_axes=wa, wire="float"))
+jfp = jax.jit(step_fu)
+f1, f2 = fresh(fu), fresh(fu)
+for _ in range(3):
+    f1, _ = jff(f1, batch)
+    f2, _ = jfp(f2, batch)
+out["fused_float_max_diff"] = max_param_diff(f1, s1)
+out["fused_packed_max_diff"] = max_param_diff(f2, s2)
+
 # adaptive bit-width (A-LAQ): packed wire must stay bit-identical to float
 ad = strategy._replace(bit_schedule=BitSchedule(kind="radius", grid=(2, 4, 8),
                                                 thresholds=(1e-3, 1e-2)))
@@ -135,6 +160,16 @@ for _ in range(3):
     a1, _ = jaf(a1, batch)
     a2, _ = jap(a2, batch)
 out["adaptive_packed_max_diff"] = max_param_diff(a1, a2)
+
+# adaptive + fused: the width-grid-unrolled pass-2 pipeline through the
+# sharded packed wire matches the reference adaptive run bitwise
+adf = ad._replace(wire_backend="fused")
+af = fresh(adf)
+jadf = jax.jit(make_train_step(cfg, mesh, adf, opt, lr=1e-2,
+                               worker_axes=wa, wire="packed"))
+for _ in range(3):
+    af, _ = jadf(af, batch)
+out["adaptive_fused_packed_max_diff"] = max_param_diff(af, a2)
 
 # constant schedule routes to the fixed-bit path: exact match with bits=4
 cs = strategy._replace(bits=7, bit_schedule=BitSchedule(kind="constant", bits=4))
@@ -267,6 +302,14 @@ def test_sharded_integration_subprocess():
     assert out["packed_max_diff"] == 0.0, out
     assert out["adaptive_packed_max_diff"] == 0.0, out
     assert out["const_packed_max_diff"] == 0.0, out
+    # fused wire backend on the mesh: the resolved backend matches this
+    # jax's capability (honored on >= 0.5, warn-once reference downgrade on
+    # 0.4.x), and fused runs are bitwise-identical to the reference wire —
+    # fixed-width float and packed, and the adaptive packed trajectory
+    assert out["fused_resolved_backend"] == out["fused_expected_backend"], out
+    assert out["fused_float_max_diff"] == 0.0, out
+    assert out["fused_packed_max_diff"] == 0.0, out
+    assert out["adaptive_fused_packed_max_diff"] == 0.0, out
     # LASG rules on the mesh: runs stay finite and learn; the WK variance
     # estimate was frozen at an upload; the PS stale-iterate snapshot and
     # the rel-mode anchor were populated by the bootstrap round

@@ -14,12 +14,14 @@ import pytest
 
 from repro.core import (BitSchedule, CriterionConfig, StrategyConfig,
                         run_gradient_based, run_stochastic, worker_update)
+from repro.core.quantize import innovation
 from repro.core.strategy import aggregate, init_comm_state
 from repro.core.wire import (FusedWire, axis_packable, get_backend,
                              pack_codes_along_axis, unpack_codes_along_axis)
 
 BITS = (2, 4, 8)
 RADII = (False, True)
+GRID = (2, 4, 8)       # adaptive bit_schedule grid under test
 
 
 def _tree(seed=0):
@@ -198,6 +200,101 @@ def test_adaptive_bits_accounting_matches_across_backends(per_leaf, sched_kind):
         np.testing.assert_array_equal(np.asarray(tr), np.asarray(tf))
     assert _trees_equal(agg_r, agg_f)
     assert _trees_equal(st_r.qhat, st_f.qhat)
+
+
+@pytest.mark.parametrize("sel", range(len(GRID)))
+@pytest.mark.parametrize("per_leaf", RADII)
+def test_adaptive_roundtrip_bit_identical(sel, per_leaf):
+    """Adaptive pass 2 through the backends at every pinned grid width:
+    the staged reference sweep (quantize_dynamic/dequantize_dynamic) vs the
+    fused one-sweep pipeline — q_new/delta bitwise, scalar moments to f32
+    reduction accuracy (same contract as the fixed-width roundtrip)."""
+    g, qh = _tree(), _qhat()
+    onehot = jnp.eye(len(GRID), dtype=jnp.float32)[sel]
+
+    def rt(backend):
+        def f(g, qh):
+            diff, R_tree, _ = innovation(g, qh, per_leaf)
+            return get_backend(backend).adaptive_roundtrip(
+                g, qh, diff, R_tree, GRID, onehot)
+        return jax.jit(f)(g, qh)
+
+    r, f = rt("reference"), rt("fused")
+    assert _trees_equal(r[0], f[0]), "q_new differs across wire backends"
+    assert _trees_equal(r[1], f[1]), "delta differs across wire backends"
+    np.testing.assert_allclose(float(f[2]), float(r[2]), rtol=1e-6)
+    np.testing.assert_allclose(float(f[3]), float(r[3]), rtol=1e-6)
+
+
+# abs-mode threshold pairs that pin the radius schedule to each grid width
+# for a whole run (R > both / between / below both), plus the natural
+# schedule that walks down the grid as the innovation radius decays
+_PIN_2 = (1e30, 2e30)
+_PIN_4 = (1e-30, 1e30)
+_PIN_8 = (1e-30, 2e-30)
+
+
+@pytest.mark.parametrize("thresholds",
+                         [_PIN_2, _PIN_4, _PIN_8, (0.05, 0.5)])
+def test_adaptive_trajectory_bit_identical(thresholds):
+    """A whole simulated adaptive run (bit_schedule selection + dynamic
+    quantizer in the scan loop) reproduces identically whether pass 2 is
+    the staged reference sweep or the fused kernel — at every pinned grid
+    width and across the mixed-width natural schedule."""
+    key = jax.random.PRNGKey(0)
+    kc, ka = jax.random.split(key)
+    M, p = 10, 20
+    centers = jax.random.normal(kc, (M, p))
+    scales = 0.5 + jax.random.uniform(ka, (M, p))
+
+    def loss_fn(params, data):
+        c, a = data
+        return 0.5 * jnp.sum(a * jnp.square(params["x"] - c)) / M
+
+    p0 = {"x": jnp.zeros((p,))}
+    sched = BitSchedule(kind="radius", grid=GRID, thresholds=thresholds)
+
+    def run(backend):
+        cfg = StrategyConfig(kind="laq", bits=4,
+                             criterion=CriterionConfig(D=10, xi=0.08,
+                                                       t_bar=100),
+                             bit_schedule=sched, wire_backend=backend)
+        return run_gradient_based(loss_fn, p0, (centers, scales), cfg,
+                                  steps=120, alpha=0.3)
+
+    rr, rf = run("reference"), run("fused")
+    np.testing.assert_array_equal(np.asarray(rr.loss), np.asarray(rf.loss))
+    np.testing.assert_array_equal(np.asarray(rr.cum_bits),
+                                  np.asarray(rf.cum_bits))
+    np.testing.assert_array_equal(np.asarray(rr.cum_uploads),
+                                  np.asarray(rf.cum_uploads))
+    np.testing.assert_array_equal(np.asarray(rr.params["x"]),
+                                  np.asarray(rf.params["x"]))
+
+
+@pytest.mark.parametrize("sel", range(len(GRID)))
+def test_fused_adaptive_pallas_lowering_matches_jnp(sel):
+    """The two lowerings of the adaptive fused pass 2 implement one
+    algorithm: the interpret-mode width-grid-unrolled Pallas kernel vs the
+    dense flat jnp sweep.  Same tolerance contract as the fixed-width
+    lowering test."""
+    g, qh = _tree(), _qhat()
+    onehot = jnp.eye(len(GRID), dtype=jnp.float32)[sel]
+
+    def rt(lowering):
+        diff, R_tree, _ = innovation(g, qh, False)
+        return FusedWire(lowering=lowering).adaptive_roundtrip(
+            g, qh, diff, R_tree, GRID, onehot)
+
+    j, p = rt("jnp"), rt("pallas")
+    for a, b in zip(jax.tree.leaves(j[0]), jax.tree.leaves(p[0])):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(j[1]), jax.tree.leaves(p[1])):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=1e-5)
+    np.testing.assert_allclose(float(p[2]), float(j[2]), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(p[3]), float(j[3]), rtol=1e-4,
+                               atol=1e-6)
 
 
 @pytest.mark.parametrize("bits", BITS)
